@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: the three Pallas kernels (interpret mode on this
+CPU container; on TPU the same call sites compile natively) against their
+pure-jnp references."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_filter
+from repro.data import rmat_graph
+from repro.kernels import embedding_bag, spmv_vertex
+from repro.kernels.edge_block_spmv.ref import spmv_vertex_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _timeit(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    rows = []
+    g = rmat_graph(1024, 8192, weighted=True, seed=1, block_size=64)
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
+    rows.append(
+        dict(name="spmv_pallas_interp", us_per_call=_timeit(lambda: spmv_vertex(g, x, f)),
+             derived=f"NB={g.num_blocks} FB={g.block_size}")
+    )
+    ref = jax.jit(
+        lambda xx: spmv_vertex_ref(xx, g.block_dst, g.block_w, f.bits, g.block_src, n=g.n)
+    )
+    rows.append(dict(name="spmv_jnp_ref", us_per_call=_timeit(ref, x), derived="oracle"))
+
+    table = jax.random.normal(jax.random.PRNGKey(1), (4096, 64), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(2), (512, 16), -1, 4096)
+    w = jnp.ones((512, 16), jnp.float32)
+    rows.append(
+        dict(name="embedding_bag_pallas_interp",
+             us_per_call=_timeit(lambda: embedding_bag(table, idx, w)),
+             derived="V=4096 D=64 B=512 L=16")
+    )
+    refb = jax.jit(lambda t, i, ww: embedding_bag_ref(t, i, ww))
+    rows.append(
+        dict(name="embedding_bag_jnp_ref", us_per_call=_timeit(refb, table, idx, w),
+             derived="oracle")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

@@ -1,0 +1,281 @@
+"""Generate EXPERIMENTS.md from the dry-run / perf-variant records.
+
+    PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASE_DIR = os.path.join(ROOT, "results", "dryrun")
+PERF_DIR = os.path.join(ROOT, "results", "perf_variants")
+
+
+def _load(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _fmt_row(r):
+    t = roofline_terms(r)
+    return (
+        f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+        f"{t['collective_s']:.3e} | {t['dominant']} | {t['useful_flops_ratio']:.2f} | "
+        f"{t['roofline_fraction']:.2f} | {t['peak_gb']:.2f} |"
+    )
+
+
+def _find(recs, arch, shape, mesh="single_pod_16x16"):
+    for r in recs:
+        if r["arch"] == arch and r["shape"] == shape and r["mesh"] == mesh:
+            return r
+    return None
+
+
+def _terms_str(r):
+    if r is None or not r.get("ok"):
+        return "FAILED"
+    t = roofline_terms(r)
+
+    def f(x):
+        return f"{x:.2f}" if x >= 0.01 else f"{x:.2e}"
+
+    return (
+        f"compute {f(t['compute_s'])}s / memory {f(t['memory_s'])}s / "
+        f"collective {f(t['collective_s'])}s / peak {t['peak_gb']:.2f} GB"
+    )
+
+
+def main():
+    base = _load(BASE_DIR)
+    perf = _load(PERF_DIR) + [r for r in base if "+" in r["shape"]]
+    ok = [r for r in base if r.get("ok") and "+" not in r["shape"]
+          and r["arch"] != "sage-graph"]
+    fail = [r for r in base if not r.get("ok")]
+    per_mesh = {}
+    for r in ok:
+        per_mesh.setdefault(r["mesh"], []).append(r)
+
+    out = []
+    w = out.append
+    w("# EXPERIMENTS — Sage (PSAM) on TPU: dry-run, roofline, perf\n")
+    w("Companion to DESIGN.md.  All numbers regenerate with:\n")
+    w("```\nPYTHONPATH=src python -m repro.launch.dryrun --mesh both")
+    w("PYTHONPATH=src python -m repro.launch.dryrun --graph-engine --mesh both")
+    w("PYTHONPATH=src python -m repro.launch.perf --variant all")
+    w("PYTHONPATH=src python -m benchmarks.report > EXPERIMENTS.md\n```\n")
+
+    # ------------------------------------------------------------------
+    w("## §Dry-run\n")
+    w("Every (architecture × input-shape) cell lowers **and compiles** with")
+    w("`jax.jit(step).lower(specs).compile()` on both production meshes —")
+    w("`(data=16, model=16)` = 256 chips and `(pod=2, data=16, model=16)` =")
+    w("512 chips.  Train cells compile the full step (loss → grad → clip →")
+    w("AdamW); serve cells compile prefill / KV-cache decode / catalog")
+    w("scoring exactly as served.  `memory_analysis()` is per-device and")
+    w("sharding-aware (calibrated against known shardings).\n")
+    for mesh in sorted(per_mesh):
+        rs = per_mesh[mesh]
+        worst = max(rs, key=lambda r: r["memory"]["peak_bytes"] or 0)
+        over = [r for r in rs if (r["memory"]["peak_bytes"] or 0) > 16e9]
+        w(f"* **{mesh}**: {len(rs)}/40 cells compile OK; worst per-device peak "
+          f"{(worst['memory']['peak_bytes'] or 0)/1e9:.2f} GB "
+          f"({worst['arch']} × {worst['shape']}).")
+        if over:
+            w(f"  - {len(over)} cell(s) exceed the 16 GB HBM budget under the "
+              f"paper-faithful baseline sharding: "
+              f"{sorted(set((r['arch'], r['shape'])) for r in over) and [(r['arch'], r['shape']) for r in over]} "
+              f"— fixed by the 2-axis cache sharding adopted in §Perf D2 "
+              f"(peaks 1.8–5.8 GB with LM_DECODE_LONG_RULES_V2).")
+    if fail:
+        w(f"* FAILURES: {[(r['arch'], r['shape'], r['mesh']) for r in fail]}")
+    w("")
+    w("The Sage graph engine itself (edge-partitioned PageRank round and")
+    w("frontier-min round over n=2²⁰ vertices / 2¹⁸ blocks of 128 slots)")
+    w("also compiles on both meshes (`--graph-engine`): blocks shard over")
+    w("every axis, the O(n) vertex vector is replicated and psum-combined —")
+    w("cross-pod traffic is O(n) words per round, never O(m) (the paper's")
+    w("§5.2 NUMA rule at pod scale).\n")
+    w("FLOP accounting note: XLA `cost_analysis` counts while-loop bodies")
+    w("once, so LM cells re-measure exact per-layer cost from UNROLLED 1-")
+    w("vs 2-layer variants of the same cell and extrapolate")
+    w("(F(Lmin) + (L−Lmin)·ΔF); collective bytes parsed from compiled HLO")
+    w("are multiplied by the known scan trip count.\n")
+
+    # ------------------------------------------------------------------
+    w("## §Roofline (single-pod 16×16 baseline, all 40 cells)\n")
+    w(f"Hardware model per chip: {PEAK_FLOPS/1e12:.0f} TFLOP/s bf16, "
+      f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI link.")
+    w("Terms are seconds per step per device; *dominant* = the bottleneck;")
+    w("*useful* = MODEL_FLOPS (6·N·D / 6·N_active·D + attention) ÷ compiled")
+    w("HLO FLOPs — <1 captures remat recompute and redundancy; *roofline")
+    w("frac* = compute-term ÷ dominant-term (upper bound on achievable MFU")
+    w("against the measured bottleneck).\n")
+    w("| arch | shape | compute s | memory s | collective s | dominant | useful | frac | peak GB/dev |")
+    w("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] == "single_pod_16x16":
+            w(_fmt_row(r))
+    w("")
+    ge = [r for r in base if r["arch"] == "sage-graph" and r.get("ok")
+          and "baseline" in r["shape"]]
+    if ge:
+        w("Graph engine (per round, n=2²⁰):\n")
+        w("| round | mesh | compute s | memory s | collective s | dominant |")
+        w("|---|---|---|---|---|---|")
+        for r in sorted(ge, key=lambda r: (r["shape"], r["mesh"])):
+            t = roofline_terms(r)
+            w(f"| {r['shape']} | {r['mesh']} | {t['compute_s']:.2e} | "
+              f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | {t['dominant']} |")
+        w("")
+    w("Reading the table: LM train/prefill cells are **memory-term-bound**")
+    w("under XLA's per-op byte accounting (score tensors + remat recompute")
+    w("traffic); on a real TPU much of that fuses, so the compute term is")
+    w("the achievable bound — which is why §Perf attacks bytes first.  GNN")
+    w("full-graph cells and bulk recsys scoring are **collective-bound**")
+    w("(node-feature gathers across edge shards / score resharding).  Decode")
+    w("cells are cache-bandwidth-bound, as expected at batch≤128.\n")
+
+    # ------------------------------------------------------------------
+    w("## §Perf — hillclimb log (hypothesis → change → before → after)\n")
+    w("Three pairs: **mistral-large-123b × train_4k** (largest dominant term")
+    w("among trains, flagship), **equiformer-v2 × ogb_products** (most")
+    w("collective-bound), **sage-graph engine** (the paper's own technique).")
+    w("Plus one runnability fix (long_500k exceeded HBM).  The paper-faithful")
+    w("BASELINE rows above are never edited; variants are separate records.\n")
+
+    def pair(title, rows):
+        w(f"### {title}\n")
+        for hypo, rec_before, rec_after, verdict in rows:
+            w(f"* **{hypo}**")
+            w(f"  - before: {_terms_str(rec_before)}")
+            w(f"  - after:  {_terms_str(rec_after)}")
+            w(f"  - **{verdict}**")
+        w("")
+
+    allrecs = base + perf
+    mt = _find(allrecs, "mistral-large-123b", "train_4k")
+    pair("A. mistral-large-123b × train_4k (memory-dominated)", [
+        ("A1 sequence-parallel residual (res_seq→model): hypothesis — saved "
+         "per-layer activations shard 16×, memory term ↓",
+         mt, _find(allrecs, "mistral-large-123b", "train_4k+sp"),
+         "REFUTED: memory 89.7→176.0 s — the per-block all-gather/reduce-"
+         "scatter pairs around attention/FFN cost more bytes than the "
+         "sharded saves recover at this batch; collective ×3.4. Lesson: SP "
+         "pays off only when activation memory, not byte traffic, binds."),
+        ("A2 remat policy 'dots' (save matmul outputs): hypothesis — "
+         "backward recompute flops ↓ at small memory cost",
+         mt, _find(allrecs, "mistral-large-123b", "train_4k+dots"),
+         "NO CHANGE on measured terms (XLA DCEs the difference in the "
+         "costing graphs); kept as a runtime knob."),
+        ("A3 flash-style causal block skipping (+cbs): hypothesis — visiting "
+         "only visible kv blocks cuts attention einsum flops and score "
+         "traffic ~½ (at 4k/1024 blocks: 10/16 visible)",
+         mt, _find(allrecs, "mistral-large-123b", "train_4k+cbs"),
+         "CONFIRMED: memory 89.7→81.7 s (−9.0%), compute 20.68→20.12 s, "
+         "useful-flops 0.75→0.78. Attention is ~5% of flops at 4k; gain "
+         "scales with context (see prefill below)."),
+        ("A4 MXU-native attention einsums (+mp): bf16 operands with fp32 "
+         "accumulation instead of f32×f32 dots",
+         mt, _find(allrecs, "mistral-large-123b", "train_4k+mp"),
+         "Logical terms unchanged (expected — same flops); the win is "
+         "machine peak: f32 dots run at ~¼ bf16 MXU rate on TPU, so the "
+         "attention share of step time drops ~4× on hardware. Adopted "
+         "together with +cbs as the optimized configuration."),
+        ("A-extra prefill_32k with +cbs_mp: same levers where attention is "
+         "a large flops fraction (~36% at 32k); napkin: visiting 51.5% of "
+         "kv blocks saves ~17% of total compute",
+         _find(allrecs, "mistral-large-123b", "prefill_32k"),
+         _find(allrecs, "mistral-large-123b", "prefill_32k+cbs_mp"),
+         "CONFIRMED, napkin-exact: compute 8.06→6.67 s (−17.2%), memory "
+         "68.2→61.3 s (−10%). (Also fixed en route: the skip guard "
+         "wrongly disabled itself on the cached prefill path.)"),
+    ])
+
+    eq = _find(allrecs, "equiformer-v2", "ogb_products")
+    pair("B. equiformer-v2 × ogb_products (collective-dominated)", [
+        ("B1 channel-TP (+tp): hypothesis — shard hidden dim over 'model' "
+         "instead of 512-way edge sharding; node-aggregation all-reduce ÷16",
+         eq, _find(allrecs, "equiformer-v2", "ogb_products+tp"),
+         "REFUTED: collective 59.6→80.7 s. The (N,49,d) spherical stacks "
+         "now reshard between node- and edge-layout every layer; the edge "
+         "tensors got 16× bigger per device. Lesson: the gather of node "
+         "features TO edge shards, not the scatter back, dominates."),
+        ("B2 eSCN-compact messages (+compact): hypothesis — only the "
+         "|m|≤m_max coefficients (29/49) participate in messages (the eSCN "
+         "truncation applied to communication); predicted collective ×0.59",
+         eq, _find(allrecs, "equiformer-v2", "ogb_products+compact"),
+         "CONFIRMED, napkin math exact: collective 59.6→35.6 s (×0.60 "
+         "predicted 0.59), memory 21.4→14.2 s (−33%). Also a fidelity "
+         "improvement — high-m coefficients evolve node-locally as in "
+         "eSCN proper."),
+    ])
+
+    pair("C. sage-graph engine (the paper's technique, collective-bound)", [
+        ("C1 hierarchical reduction (+hier): hypothesis — reduce-scatter on "
+         "'model', psum the 1/16 shard across 'data'/'pod', all-gather back; "
+         "slow-axis bytes ÷16",
+         _find(allrecs, "sage-graph", "pagerank_round_baseline"),
+         _find(allrecs, "sage-graph", "pagerank_round_hier"),
+         "CONFIRMED: collective bytes 8.39→4.72 MB/round single-pod (−44%) "
+         "and 12.6→4.98 MB multi-pod (−60%); the all-reduce component "
+         "(the latency-critical slow-axis part) drops 32×."),
+        ("C2 bf16 vertex state on the wire (+bf16): hypothesis — halve "
+         "collective bytes like gradient compression",
+         _find(allrecs, "sage-graph", "pagerank_round_flat_bf16"),
+         _find(allrecs, "sage-graph", "pagerank_round_hier_bf16"),
+         "REFUTED on this backend: XLA:CPU upcasts to f32 before the "
+         "collective, wire bytes unchanged. On TPU bf16 all-reduce is "
+         "native; the int8 path in optim/compression.py (tested on 4 fake "
+         "devices) is the production fallback."),
+    ])
+
+    pair("D. runnability fix — long_500k exceeded HBM", [
+        ("D1 pin out_shardings everywhere: hypothesis — XLA propagation "
+         "replicates large outputs when unspecified (before/after: n/a — "
+         "peak unchanged at 26.87 GB)",
+         _find(allrecs, "qwen1.5-4b", "long_500k"),
+         _find(allrecs, "qwen1.5-4b", "long_500k"),
+         "PARTIAL: pinning is now standard in launch/steps.py (defense in "
+         "depth) but was not the root cause — the cache itself is 215 GB "
+         "global and was only 16-way sharded."),
+        ("D2 2-axis cache sharding: the qwen1.5-4b 500k MHA cache is 215 GB "
+         "global; 16-way seq sharding leaves 13.4 GB/device. Shard "
+         "cache_seq→data AND head_dim→model (256-way)",
+         _find(allrecs, "qwen1.5-4b", "long_500k"),
+         _find(allrecs, "qwen1.5-4b", "long_500k+v2"),
+         "CONFIRMED: peak 26.9→1.8 GB/device (qwen1.5-4b), 24.6→5.8 GB "
+         "(mistral-large). Every long_500k cell now fits the 16 GB budget."),
+    ])
+
+    w("### Stopping note\n")
+    w("Pair A: A1/A2 gave <5% (one refuted), A3+A4 adopted; further context-")
+    w("length-independent levers (fused flash kernel in Pallas, fp8) are")
+    w("listed in DESIGN.md as future work.  Pair B: B1 refuted, B2 adopted;")
+    w("a third idea (bf16 message aggregation) mirrors C2's backend caveat.")
+    w("Pair C: C1 adopted, C2 refuted-on-backend.  Baseline (paper-faithful)")
+    w("and optimized configurations are both recorded above, separately.\n")
+
+    # variant table
+    w("### All variant records\n")
+    w("| arch | variant | mesh | compute s | memory s | collective s | peak GB |")
+    w("|---|---|---|---|---|---|---|")
+    for r in sorted(perf, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            continue
+        t = roofline_terms(r)
+        w(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {t['compute_s']:.3e} | "
+          f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['peak_gb']:.2f} |")
+    w("")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

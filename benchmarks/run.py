@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig1_suite    — Fig. 1 / Fig. 6: the 18-algorithm suite + PSAM work model
+  table4_filter — Table 4: filter block size F_B ↔ triangle-count work
+  table5_edgemap— Table 5: edgeMap variant ↔ peak intermediate memory
+  fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
+  kernels_micro — Pallas kernels vs jnp oracles
+  roofline      — §Roofline terms from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of benches")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args()
+
+    from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
+                   table4_filter, table5_edgemap)
+
+    benches = {
+        "fig1_suite": lambda: fig1_suite.run(
+            n=4096 if args.full else 1024, m=32768 if args.full else 8192
+        ),
+        "table4_filter": lambda: table4_filter.run(
+            n=2048 if args.full else 512, m=16384 if args.full else 4096
+        ),
+        "table5_edgemap": lambda: table5_edgemap.run(
+            n=4096 if args.full else 1024, m=65536 if args.full else 8192
+        ),
+        "kernels_micro": kernels_micro.run,
+        "fig_layout": fig_layout.run,
+        "fig7_dram_nvram": fig7_dram_nvram.run,
+    }
+    try:
+        from . import roofline
+
+        if roofline.load_records():
+            benches["roofline"] = roofline.run
+    except Exception:
+        pass
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,ERROR: {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

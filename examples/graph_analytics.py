@@ -1,0 +1,52 @@
+"""Sage graph-analytics pipeline: the paper's workflow end to end.
+
+1. build the immutable CSR (large memory)
+2. maximal matching via graphFilter rounds (edge deletions = bit clears)
+3. orient the remaining graph low→high degree through a second filter
+4. triangle counting over the filtered view
+5. PSAM cost report: Sage (0 large-memory writes) vs modeled GBBS (ω=4)
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms import maximal_matching, triangle_count
+from repro.algorithms.substructure import orientation_filter
+from repro.core import PSAMCost, make_filter
+from repro.data import rmat_graph
+
+
+def main():
+    key = jax.random.PRNGKey(7)
+    g = rmat_graph(n=1024, m=8192, seed=7, block_size=64)
+    print(f"graph: n={g.n} m={g.m}")
+
+    partner = maximal_matching(g, key)
+    matched = int(jnp.sum(partner >= 0))
+    print(f"maximal matching: {matched // 2} pairs ({matched}/{g.n} vertices)")
+
+    f, keep = orientation_filter(g)
+    print(
+        f"orientation filter: {int(f.num_active_edges)} directed edges kept "
+        f"(bits = {f.bits.size * 4} bytes, CSR untouched)"
+    )
+
+    tri = triangle_count(g)
+    print(f"triangles: {tri}")
+
+    cost = PSAMCost(omega=4.0)
+    # matching: ~8 filter rounds; triangles: one orientation + intersections
+    for _ in range(8):
+        cost.charge_edgemap_dense(g)
+        cost.charge_filter_pack(g, g.num_blocks)
+    print(
+        f"PSAM work (Sage, zero NVRAM writes): {cost.work:.0f}\n"
+        f"GBBS-equivalent (in-place edge packing, omega=4): "
+        f"{cost.gbbs_equivalent_work(8 * g.m):.0f}  "
+        f"→ {cost.gbbs_equivalent_work(8 * g.m) / cost.work:.2f}x more work"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""LM serving driver: batched prefill + decode loop with a KV cache —
+the serve-side counterpart of examples/train_lm.py.
+
+    PYTHONPATH=src python examples/serve_lm.py --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer_lm as lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = lm.LMConfig(
+        name="serve-tiny", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_head=32, d_ff=512, vocab=1024, dtype="float32", kv_block=64,
+    )
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key, cfg)
+    max_seq = args.prompt_len + args.new_tokens
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+
+    prefill = jax.jit(
+        lambda p, t: lm.prefill(p, t, cfg, max_seq=max_seq)
+    )
+    decode = jax.jit(
+        lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
+    )
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: batch={args.batch} len={args.prompt_len}  {t_prefill:.3f}s")
+
+    tokens = jnp.argmax(logits, axis=-1)[:, None]
+    generated = [tokens]
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens - 1):
+        pos = args.prompt_len + i
+        logits, cache = decode(params, cache, tokens, pos)
+        tokens = jnp.argmax(logits, axis=-1)[:, None]
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.perf_counter() - t0
+    out = jnp.concatenate(generated, axis=1)
+    tps = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
+    print(f"decode: {args.new_tokens - 1} steps  {t_decode:.3f}s  ({tps:.1f} tok/s)")
+    print("sample continuation (request 0):", out[0].tolist())
+
+    # greedy decode is deterministic: teacher-forcing the generated tokens
+    # reproduces the same argmax choices
+    full = jnp.concatenate([prompts, out], axis=1)
+    h, _ = lm.forward(params, full[:, :-1], cfg)
+    logits_tf = lm.logits_from_hidden(params, h, cfg)
+    redo = jnp.argmax(logits_tf[:, args.prompt_len - 1 :], axis=-1)
+    assert bool(jnp.all(redo == out)), "KV-cache decode diverged from teacher-forced"
+    print("KV-cache decode verified against teacher-forced forward ✓")
+
+
+if __name__ == "__main__":
+    main()

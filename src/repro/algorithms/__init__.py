@@ -1,0 +1,43 @@
+"""The 18 Sage algorithms (Table 1), grouped as in §4.3."""
+from .covering import coloring, maximal_matching, mis, set_cover
+from .decomposition import (
+    biconnectivity,
+    connectivity,
+    ldd,
+    multi_source_bfs,
+    spanner,
+    spanning_forest,
+)
+from .eigen import pagerank, pagerank_iteration
+from .local import personalized_pagerank
+from .substructure import densest_subgraph, kcore, orientation_filter, triangle_count
+from .traversal import bellman_ford, betweenness, bfs, wbfs, widest_path
+
+ALL_PROBLEMS = [
+    "bfs",
+    "wbfs",
+    "bellman_ford",
+    "widest_path",
+    "betweenness",
+    "spanner",
+    "ldd",
+    "connectivity",
+    "spanning_forest",
+    "biconnectivity",
+    "coloring",
+    "mis",
+    "maximal_matching",
+    "set_cover",
+    "triangle_count",
+    "kcore",
+    "densest_subgraph",
+    "pagerank",
+]
+
+__all__ = ALL_PROBLEMS + [
+    "personalized_pagerank",
+    "pagerank_iteration",
+    "multi_source_bfs",
+    "orientation_filter",
+    "ALL_PROBLEMS",
+]

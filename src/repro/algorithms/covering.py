@@ -1,0 +1,242 @@
+"""Covering problems (§4.3.3) — MIS, maximal matching, graph coloring,
+approximate set cover.
+
+Maximal matching and set cover exercise the graphFilter (§4.2): logically
+deleted edges are bit-cleared, never rewritten in the read-only CSR.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.csr import CSRGraph
+from ..core.edgemap import edgemap_reduce
+from ..core.graph_filter import GraphFilter, make_filter, pack_vertices, unpack_bits
+from ..core.primitives import popcount32
+
+INF_I32 = jnp.int32(2**31 - 1)
+INF_F32 = jnp.float32(jnp.inf)
+
+
+# ----------------------------------------------------------------------
+def mis(g: CSRGraph, key: jax.Array):
+    """Maximal independent set (random-priority rounds, [17]).
+    Returns in_set bool[n]."""
+    n = g.n
+    pri = jax.random.permutation(key, jnp.arange(n, dtype=jnp.int32))
+
+    def body(state):
+        undecided, in_set = state
+        x = jnp.where(undecided, pri, INF_I32)
+        nbr_min, _ = edgemap_reduce(g, undecided, x, monoid="min", mode="auto")
+        winners = undecided & (pri < nbr_min)
+        # remove winners' neighbors
+        hit, _ = edgemap_reduce(
+            g, winners, jnp.ones(n, jnp.int32), monoid="max", mode="auto"
+        )
+        losers = undecided & (hit > 0) & ~winners
+        return undecided & ~winners & ~losers, in_set | winners
+
+    def cond(state):
+        undecided, _ = state
+        return jnp.any(undecided)
+
+    _, in_set = lax.while_loop(
+        cond, body, (jnp.ones(n, dtype=bool), jnp.zeros(n, dtype=bool))
+    )
+    return in_set
+
+
+# ----------------------------------------------------------------------
+def maximal_matching(g: CSRGraph, key: jax.Array):
+    """Maximal matching via handshake rounds over the graphFilter.
+
+    Returns partner int32[n] (-1 if unmatched).  Each round: every vertex
+    proposes to its min-priority live incident edge's other endpoint; mutual
+    proposals match; edges touching matched vertices are *filtered* (bits
+    cleared) — the CSR is never written (§4.2, Table 1 'Filter' rows).
+    """
+    n = g.n
+    f0 = make_filter(g)
+    src, dst = g.edge_src, g.edge_dst
+
+    def body(state):
+        rnd, f, partner = state
+        active = unpack_bits(f).reshape(-1)
+        umin = jnp.minimum(src, dst)
+        umax = jnp.maximum(src, dst)
+        h = (
+            umin.astype(jnp.uint32) * jnp.uint32(2654435761)
+            + umax.astype(jnp.uint32) * jnp.uint32(40503)
+            + jnp.uint32(rnd) * jnp.uint32(97)
+        )
+        h = (h ^ (h >> 15)) * jnp.uint32(2246822519)
+        pri = (h >> 1).astype(jnp.int32)  # same for both directions
+
+        big = 2**31 - 1
+        pv = jnp.where(active, pri, big)
+        ids_d = jnp.where(active, dst, n)
+        minpri = jax.ops.segment_min(pv, ids_d, num_segments=n + 1)[:n]
+        # candidate partner: min other-endpoint among min-priority edges
+        at_min = active & (pri == jnp.take(minpri, dst, mode="fill", fill_value=big))
+        cand = jax.ops.segment_min(
+            jnp.where(at_min, src, n), ids_d, num_segments=n + 1
+        )[:n]
+        prop = jnp.where(minpri < big, cand, -1)
+        mutual = (prop >= 0) & (jnp.take(prop, jnp.maximum(prop, 0)) == jnp.arange(n))
+        partner = jnp.where(mutual & (partner < 0), prop, partner)
+        matched = partner >= 0
+        keep = ~jnp.take(matched, src, mode="fill", fill_value=True) & ~jnp.take(
+            matched, dst, mode="fill", fill_value=True
+        )
+        f = pack_vertices(g, f, jnp.ones(n, dtype=bool), keep)
+        return rnd + 1, f, partner
+
+    def cond(state):
+        rnd, f, _ = state
+        return (f.num_active_edges > 0) & (rnd < n)
+
+    _, _, partner = lax.while_loop(
+        cond, body, (jnp.int32(0), f0, jnp.full(n, -1, jnp.int32))
+    )
+    return partner
+
+
+# ----------------------------------------------------------------------
+def coloring(g: CSRGraph, *, num_colors: int = 256):
+    """Greedy (Δ+1)-coloring, Jones–Plassmann with largest-degree-first
+    priorities.  Returns color int32[n].
+
+    The smallest-available-color (MEX) search uses the §4.2.3 word-at-a-time
+    discipline: forbidden colors are scatter-added into an O(n·C/32)-word
+    one-hot table and the MEX is an argmax over free slots.
+    """
+    n, C = g.n, num_colors
+    deg = g.degrees
+    ids = jnp.arange(n, dtype=jnp.int32)
+    src, dst, valid = g.edge_src, g.edge_dst, g.edge_valid
+    deg_s = jnp.take(deg, src, mode="fill", fill_value=0)
+    deg_d = jnp.take(deg, dst, mode="fill", fill_value=0)
+    src_higher = (deg_s > deg_d) | ((deg_s == deg_d) & (src < dst))
+
+    def body(state):
+        color, _ = state
+        uncolored = color < 0
+        unc_s = jnp.take(uncolored, src, mode="fill", fill_value=False)
+        blocked_e = valid & unc_s & src_higher
+        has_higher = (
+            jax.ops.segment_max(
+                blocked_e.astype(jnp.int32),
+                jnp.where(valid, dst, n),
+                num_segments=n + 1,
+            )[:n]
+            > 0
+        )
+        ready = uncolored & ~has_higher
+        # forbidden one-hot from colored neighbors
+        col_s = jnp.take(color, src, mode="fill", fill_value=-1)
+        contrib = valid & (col_s >= 0)
+        forb = (
+            jnp.zeros((n + 1, C), jnp.int32)
+            .at[jnp.where(contrib, dst, n), jnp.clip(col_s, 0, C - 1)]
+            .add(contrib.astype(jnp.int32))[:n]
+        )
+        mex = jnp.argmax(forb == 0, axis=-1).astype(jnp.int32)
+        color = jnp.where(ready, mex, color)
+        return color, jnp.any(color < 0)
+
+    color, _ = lax.while_loop(
+        lambda s: s[1], body, (jnp.full(n, -1, jnp.int32), jnp.bool_(True))
+    )
+    return color
+
+
+# ----------------------------------------------------------------------
+def set_cover(g: CSRGraph, sets_mask: jnp.ndarray, key: jax.Array, *, eps: float = 0.5):
+    """(1+ε)-style parallel greedy set cover over a bipartite graph.
+
+    ``sets_mask[v]`` marks set-vertices; their neighbors are elements.
+    Returns in_cover bool[n].  Bucketing by ⌈log_{1+ε} coverage⌉ (App. B);
+    winners are resolved MaNIS-style with random priorities; covered
+    elements are packed out of the graphFilter.
+    """
+    n = g.n
+    elems = ~sets_mask
+    src, dst = g.edge_src, g.edge_dst
+    f0 = make_filter(g)
+    # only set↔element edges participate: pack the rest out up front
+    bip = jnp.take(sets_mask, src, mode="fill", fill_value=False) ^ jnp.take(
+        sets_mask, dst, mode="fill", fill_value=True
+    )
+    f0 = pack_vertices(g, f0, jnp.ones(n, dtype=bool), bip & g.edge_valid)
+    pri = jax.random.permutation(key, jnp.arange(n, dtype=jnp.int32))
+    log1e = float(jnp.log(1.0 + eps))
+
+    def bucket_of(d):
+        return jnp.where(
+            d > 0, jnp.ceil(jnp.log(jnp.maximum(d, 1).astype(jnp.float32)) / log1e), -1
+        ).astype(jnp.int32)
+
+    def body(state):
+        rnd, f, in_cover, covered = state
+        cov_deg = jnp.where(sets_mask, f.active_deg, 0)
+        b = bucket_of(cov_deg)
+        top = jnp.max(b)
+        cand = sets_mask & (b == top) & (cov_deg > 0) & ~in_cover
+        # elements award themselves to their min-priority candidate neighbor
+        active = unpack_bits(f).reshape(-1)
+        cand_s = jnp.take(cand, src, mode="fill", fill_value=False)
+        award_e = active & cand_s & jnp.take(
+            ~covered, dst, mode="fill", fill_value=False
+        )
+        pri_s = jnp.take(pri, src, mode="fill", fill_value=2**31 - 1)
+        win_pri = jax.ops.segment_min(
+            jnp.where(award_e, pri_s, INF_I32), jnp.where(award_e, dst, n), num_segments=n + 1
+        )[:n]
+        # edge is a win for the set if it holds the element's min priority
+        won_e = award_e & (pri_s == jnp.take(win_pri, dst, mode="fill", fill_value=-1))
+        wins = jax.ops.segment_sum(
+            won_e.astype(jnp.int32), jnp.where(won_e, src, n), num_segments=n + 1
+        )[:n]
+        thresh = jnp.maximum(
+            jnp.floor(jnp.exp((top - 1).astype(jnp.float32) * log1e)), 1.0
+        ).astype(jnp.int32)
+        chosen = cand & (wins >= jnp.minimum(thresh, cov_deg))
+        in_cover = in_cover | chosen
+        # chosen sets cover all their currently-active elements
+        chosen_s = jnp.take(chosen, src, mode="fill", fill_value=False)
+        newly_cov_e = active & chosen_s
+        cov_hit = (
+            jax.ops.segment_max(
+                newly_cov_e.astype(jnp.int32),
+                jnp.where(newly_cov_e, dst, n),
+                num_segments=n + 1,
+            )[:n]
+            > 0
+        )
+        covered = covered | (elems & cov_hit)
+        keep = ~jnp.take(covered, src, mode="fill", fill_value=False) & ~jnp.take(
+            covered, dst, mode="fill", fill_value=False
+        )
+        f = pack_vertices(g, f, jnp.ones(n, dtype=bool), keep)
+        return rnd + 1, f, in_cover, covered
+
+    def cond(state):
+        rnd, f, in_cover, covered = state
+        coverable = jnp.any(
+            elems & ~covered & (jnp.where(elems, f.active_deg, 0) > 0)
+        )
+        return coverable & (rnd < 4 * n)
+
+    _, _, in_cover, _ = lax.while_loop(
+        cond,
+        body,
+        (
+            jnp.int32(0),
+            f0,
+            jnp.zeros(n, dtype=bool),
+            jnp.zeros(n, dtype=bool),
+        ),
+    )
+    return in_cover

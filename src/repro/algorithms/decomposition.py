@@ -1,0 +1,395 @@
+"""Connectivity problems (§4.3.2) — LDD, connectivity, spanning forest,
+O(k)-spanner, biconnectivity.
+
+Biconnectivity follows Tarjan–Vishkin over an arbitrary (BFS) spanning tree:
+Euler tour + list ranking by pointer jumping gives preorder/subtree sizes,
+low/high are propagated up BFS levels, and the auxiliary-graph connectivity
+is evaluated *implicitly* through edge-slot masks on the original graph —
+no O(m)-word auxiliary structure is materialized (the relaxed-PSAM variant
+the paper uses in practice, Table 1 ¶).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.csr import CSRGraph
+from ..core.edgemap import edgemap_reduce
+from ..core.primitives import compact_mask
+
+INF_I32 = jnp.int32(2**31 - 1)
+UNVISITED = jnp.int32(-1)
+
+
+# ----------------------------------------------------------------------
+# Low-diameter decomposition (Miller–Peng–Xu with quantized shifts)
+# ----------------------------------------------------------------------
+def ldd(g: CSRGraph, beta: float, key: jax.Array, *, mode: str = "auto"):
+    """(O(β), O(log n / β)) decomposition.  Returns cluster int32[n]
+    (cluster id == center vertex id).
+
+    Shifts δ_v ~ Exp(β); vertex v self-starts a cluster at round ⌊δ_max−δ_v⌋
+    if still unclustered; expansion is a BFS with min-cluster-id tie-breaks
+    (integer-quantized variant of the fractional-priority rule — same
+    O(β·m) expected inter-cluster edge bound up to constants).
+    """
+    n = g.n
+    shift = jax.random.exponential(key, (n,), dtype=jnp.float32) / beta
+    shift = jnp.minimum(shift, jnp.float32(2.0 * jnp.log(n + 1) / beta))
+    start_round = jnp.floor(jnp.max(shift) - shift).astype(jnp.int32)
+    max_round = jnp.max(start_round)
+
+    cluster0 = jnp.full(n, UNVISITED)
+    frontier0 = jnp.zeros(n, dtype=bool)
+
+    def body(state):
+        r, cluster, frontier = state
+        # expansion of last round's frontier
+        cand, touched = edgemap_reduce(g, frontier, cluster, monoid="min", mode=mode)
+        newly = touched & (cluster == UNVISITED)
+        cluster = jnp.where(newly, cand, cluster)
+        # new centers wake up this round
+        wake = (cluster == UNVISITED) & (start_round <= r)
+        cluster = jnp.where(wake, jnp.arange(n, dtype=jnp.int32), cluster)
+        return r + 1, cluster, newly | wake
+
+    def cond(state):
+        r, cluster, frontier = state
+        # every vertex self-starts by max_round; + n rounds of expansion
+        return (jnp.any(frontier) | jnp.any(cluster == UNVISITED)) & (
+            r < max_round + n + 2
+        )
+
+    _, cluster, _ = lax.while_loop(cond, body, (jnp.int32(0), cluster0, frontier0))
+    return cluster
+
+
+# ----------------------------------------------------------------------
+# Connectivity — LDD seed + min-label propagation with pointer jumping
+# ----------------------------------------------------------------------
+def _min_label_prop(
+    g: CSRGraph,
+    labels0: jnp.ndarray,
+    *,
+    edge_active: jnp.ndarray | None = None,
+    vertex_mask: jnp.ndarray | None = None,
+):
+    """Hook-and-compress min-label fixpoint; labels must be vertex ids."""
+    n = g.n
+    full_mask = jnp.ones(n, dtype=bool) if vertex_mask is None else vertex_mask
+
+    def body(state):
+        labels, _ = state
+        nbr, _ = edgemap_reduce(
+            g, full_mask, labels, monoid="min", edge_active=edge_active, mode="dense"
+        )
+        new = jnp.minimum(labels, nbr)
+        if vertex_mask is not None:
+            new = jnp.where(full_mask, new, labels)
+        new = new[new]  # compress (pointer jump)
+        new = new[new]
+        return new, jnp.any(new != labels)
+
+    labels, _ = lax.while_loop(
+        lambda s: s[1], body, (labels0, jnp.bool_(True))
+    )
+    return labels
+
+
+def connectivity(g: CSRGraph, key: jax.Array | None = None, *, use_ldd: bool = True):
+    """Connected components; label = min vertex id of the component.
+
+    Paper recipe (§C.2): one LDD round with β=O(1) drops inter-cluster edges
+    to O(n) in expectation; the contracted instance is then solved entirely
+    in small memory.  Here the contraction is implicit: LDD clusters seed the
+    label array and the min-label fixpoint runs on cluster ids.
+    """
+    n = g.n
+    if use_ldd and key is not None:
+        clusters = ldd(g, 0.2, key)
+        # cluster ids are center ids; prop below converges to the min center
+        # id per component, canonicalized to min vertex id afterwards.
+        labels0 = clusters
+    else:
+        labels0 = jnp.arange(n, dtype=jnp.int32)
+    labels = _min_label_prop(g, labels0)
+    # canonicalize: component representative = min vertex id
+    rep = jax.ops.segment_min(
+        jnp.arange(n, dtype=jnp.int32), labels, num_segments=n
+    )
+    return jnp.take(rep, labels)
+
+
+def multi_source_bfs(g: CSRGraph, roots_mask: jnp.ndarray, *, mode: str = "auto"):
+    """BFS forest from all roots at once.  Returns (parents, levels);
+    parents[root]=root."""
+    n = g.n
+    ids = jnp.arange(n, dtype=jnp.int32)
+    parents0 = jnp.where(roots_mask, ids, UNVISITED)
+    levels0 = jnp.where(roots_mask, 0, UNVISITED)
+    frontier0 = roots_mask
+
+    def body(state):
+        rnd, parents, levels, frontier = state
+        cand, touched = edgemap_reduce(g, frontier, ids, monoid="min", mode=mode)
+        newly = touched & (parents == UNVISITED)
+        parents = jnp.where(newly, cand, parents)
+        levels = jnp.where(newly, rnd + 1, levels)
+        return rnd + 1, parents, levels, newly
+
+    def cond(state):
+        rnd, _, _, frontier = state
+        return jnp.any(frontier) & (rnd < n)
+
+    _, parents, levels, _ = lax.while_loop(
+        cond, body, (jnp.int32(0), parents0, levels0, frontier0)
+    )
+    return parents, levels
+
+
+def spanning_forest(g: CSRGraph, key: jax.Array | None = None):
+    """Spanning forest.  Returns (parents int32[n], labels int32[n]);
+    forest edges are {(v, parents[v]) : parents[v] != v}."""
+    labels = connectivity(g, key, use_ldd=key is not None)
+    roots = labels == jnp.arange(g.n, dtype=jnp.int32)
+    parents, _ = multi_source_bfs(g, roots)
+    return parents, labels
+
+
+# ----------------------------------------------------------------------
+# O(k)-spanner (Miller et al. [69] construction, §C.1)
+# ----------------------------------------------------------------------
+def spanner(g: CSRGraph, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
+    """Returns (edge_mask bool[slots], ok bool).
+
+    Spanner = intra-cluster BFS-tree edges of an LDD with β = log n / (2k)
+    ∪ one representative edge per adjacent cluster pair.  The inter-cluster
+    pair selection materializes only the compacted inter-cluster edge list
+    (expected O(n); capped at ``inter_cap_factor·n`` — ``ok=False`` signals
+    the §C.2 restart path when the cap overflows).
+    """
+    n = g.n
+    beta = float(jnp.log(n + 1)) / (2.0 * k)
+    cluster = ldd(g, beta, key)
+
+    # intra-cluster BFS tree
+    same = (
+        jnp.take(cluster, g.edge_src, mode="fill", fill_value=-1)
+        == jnp.take(cluster, g.edge_dst, mode="fill", fill_value=-2)
+    ) & g.edge_valid
+    centers = cluster == jnp.arange(n, dtype=jnp.int32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    parents0 = jnp.where(centers, ids, UNVISITED)
+    frontier0 = centers
+
+    def body(state):
+        parents, frontier, r = state
+        cand, touched = edgemap_reduce(
+            g, frontier, ids, monoid="min", edge_active=same, mode="auto"
+        )
+        newly = touched & (parents == UNVISITED)
+        parents = jnp.where(newly, cand, parents)
+        return parents, newly, r + 1
+
+    parents, _, _ = lax.while_loop(
+        lambda s: jnp.any(s[1]) & (s[2] < n),
+        body,
+        (parents0, frontier0, jnp.int32(0)),
+    )
+    tree_slot = (
+        jnp.take(parents, g.edge_dst, mode="fill", fill_value=-1) == g.edge_src
+    ) | (jnp.take(parents, g.edge_src, mode="fill", fill_value=-1) == g.edge_dst)
+    tree_slot = tree_slot & g.edge_valid
+
+    # one edge per adjacent cluster pair (compact → sort → first-of-run)
+    cu = jnp.take(cluster, g.edge_src, mode="fill", fill_value=0)
+    cv = jnp.take(cluster, g.edge_dst, mode="fill", fill_value=0)
+    inter = g.edge_valid & (cu != cv)
+    cap = inter_cap_factor * n
+    idx = jnp.nonzero(inter, size=cap, fill_value=g.edge_src.shape[0])[0]
+    count = jnp.sum(inter)
+    ok = count <= cap
+    a = jnp.take(cu, idx, mode="fill", fill_value=n)
+    b = jnp.take(cv, idx, mode="fill", fill_value=n)
+    lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+    order = jnp.lexsort((hi, lo))
+    lo_s, hi_s, idx_s = lo[order], hi[order], idx[order]
+    first = jnp.concatenate(
+        [jnp.array([True]), (lo_s[1:] != lo_s[:-1]) | (hi_s[1:] != hi_s[:-1])]
+    ) & (lo_s < n)
+    slots = g.edge_src.shape[0]
+    pick = jnp.zeros(slots + 1, dtype=bool).at[jnp.where(first, idx_s, slots)].set(
+        True
+    )[:slots]
+    # symmetrize the picked representatives
+    mask = tree_slot | pick
+    return _symmetrize_slot_mask(g, mask), ok
+
+
+def _symmetrize_slot_mask(g: CSRGraph, mask: jnp.ndarray) -> jnp.ndarray:
+    """Ensure (u,v) selected ⟺ (v,u) selected, via a per-target min-slot
+    match.  Works because slot lists are sorted by (src, dst)."""
+    # mark selected undirected pairs with a segment trick: a slot (u,v) is
+    # selected if mask on it OR its reverse.  Reverse lookup: for each slot,
+    # find whether (dst, src) is masked — do it with a sorted join.
+    slots = g.edge_src.shape[0]
+    key_fwd_lo = jnp.minimum(g.edge_src, g.edge_dst)
+    key_fwd_hi = jnp.maximum(g.edge_src, g.edge_dst)
+    # bucket undirected pairs: use lexsort, then propagate OR within runs
+    order = jnp.lexsort((key_fwd_hi, key_fwd_lo))
+    lo_s, hi_s, m_s = key_fwd_lo[order], key_fwd_hi[order], mask[order]
+    same_prev = jnp.concatenate(
+        [jnp.array([False]), (lo_s[1:] == lo_s[:-1]) & (hi_s[1:] == hi_s[:-1])]
+    )
+    # runs have length ≤ 2 (simple graph, two directions): OR with neighbor
+    m_prev = jnp.concatenate([jnp.array([False]), m_s[:-1]])
+    m_next = jnp.concatenate([m_s[1:], jnp.array([False])])
+    same_next = jnp.concatenate([same_prev[1:], jnp.array([False])])
+    m_sym = m_s | (same_prev & m_prev) | (same_next & m_next)
+    out = jnp.zeros(slots, dtype=bool).at[order].set(m_sym)
+    return out & g.edge_valid
+
+
+# ----------------------------------------------------------------------
+# Biconnectivity (Tarjan–Vishkin)
+# ----------------------------------------------------------------------
+def _euler_tour_preorder(g: CSRGraph, parents: jnp.ndarray, labels: jnp.ndarray):
+    """Preorder numbers + subtree sizes for a rooted forest, via Euler tour
+    and list ranking (pointer jumping).  All state O(n) words."""
+    n = g.n
+    ids = jnp.arange(n, dtype=jnp.int32)
+    is_root = parents == ids
+
+    # children sorted by id: first_child = min child; next_sibling via sort
+    child_parent = jnp.where(is_root, n, parents)  # roots are nobody's child
+    first_child = jax.ops.segment_min(
+        jnp.where(is_root, INF_I32, ids), child_parent, num_segments=n + 1
+    )[:n]
+    has_child = first_child < INF_I32
+
+    order = jnp.lexsort((ids, child_parent))  # non-roots grouped by parent
+    sp = child_parent[order]
+    same_next = jnp.concatenate([(sp[1:] == sp[:-1]) & (sp[1:] < n), jnp.array([False])])
+    nxt = jnp.concatenate([order[1:], jnp.array([0], dtype=order.dtype)])
+    next_sibling = jnp.full(n, -1, jnp.int32).at[order].set(
+        jnp.where(same_next, nxt, -1).astype(jnp.int32)
+    )
+
+    # tour nodes: enter(v)=v, exit(v)=n+v, sentinel=2n
+    SENT = 2 * n
+    enter_succ = jnp.where(has_child, first_child, n + ids)
+    has_sib = next_sibling >= 0
+    exit_succ = jnp.where(
+        has_sib,
+        next_sibling,
+        jnp.where(is_root, SENT, n + parents),
+    )
+    succ = jnp.concatenate(
+        [enter_succ, exit_succ, jnp.array([SENT], jnp.int32)]
+    ).astype(jnp.int32)
+    w = jnp.concatenate(
+        [jnp.ones(n, jnp.int32), jnp.zeros(n + 1, jnp.int32)]
+    )
+
+    rounds = max(1, int(jnp.ceil(jnp.log2(2 * n + 1))))
+
+    def jump(_, state):
+        s, suf = state
+        suf = suf + jnp.take(suf, s)
+        s = jnp.take(s, s)
+        return s, suf
+
+    _, suffix = lax.fori_loop(0, rounds, jump, (succ, w))
+    suffix_enter, suffix_exit = suffix[:n], suffix[n : 2 * n]
+
+    comp_root = labels  # min-id root per component
+    comp_total = jnp.take(suffix_enter, comp_root)
+    pre_in_comp = comp_total - suffix_enter
+    size = suffix_enter - suffix_exit
+
+    comp_size = jnp.zeros(n, jnp.int32).at[comp_root].max(comp_total)
+    base = jnp.cumsum(comp_size) - comp_size
+    pre = jnp.take(base, comp_root) + pre_in_comp
+    return pre.astype(jnp.int32), size.astype(jnp.int32)
+
+
+def biconnectivity(g: CSRGraph, key: jax.Array | None = None):
+    """Per-edge-slot biconnected-component labels (int32[slots], -1 on padding).
+
+    Tarjan–Vishkin over a BFS spanning forest: Euler-tour preorder + subtree
+    sizes, low/high via level-wise upward propagation, auxiliary-graph
+    connectivity evaluated through edge-slot masks on the original graph.
+    """
+    n = g.n
+    slots = g.edge_src.shape[0]
+    labels = connectivity(g, key, use_ldd=False)
+    roots = labels == jnp.arange(n, dtype=jnp.int32)
+    parents, levels = multi_source_bfs(g, roots)
+    pre, size = _euler_tour_preorder(g, parents, labels)
+
+    src, dst, valid = g.edge_src, g.edge_dst, g.edge_valid
+    p_src = jnp.take(parents, src, mode="fill", fill_value=-1)
+    p_dst = jnp.take(parents, dst, mode="fill", fill_value=-1)
+    tree_sd = valid & (p_dst == src)  # src is dst's parent
+    tree_ds = valid & (p_src == dst)
+    nontree = valid & ~tree_sd & ~tree_ds
+
+    # low/high: min/max preorder reachable via one nontree edge from subtree
+    pre_pad = pre
+    minNT, _ = edgemap_reduce(
+        g, jnp.ones(n, bool), pre_pad, monoid="min", edge_active=nontree, mode="dense"
+    )
+    maxNT, _ = edgemap_reduce(
+        g, jnp.ones(n, bool), pre_pad, monoid="max", edge_active=nontree, mode="dense"
+    )
+    low0 = jnp.minimum(pre, minNT)
+    high0 = jnp.maximum(pre, maxNT)
+    max_level = jnp.max(levels)
+
+    def up_body(state):
+        lvl, low, high = state
+        at = levels == lvl  # children level
+        pids = jnp.where(at & (parents != jnp.arange(n, dtype=jnp.int32)), parents, n)
+        cl = jax.ops.segment_min(jnp.where(at, low, INF_I32), pids, num_segments=n + 1)[:n]
+        ch = jax.ops.segment_max(jnp.where(at, high, -1), pids, num_segments=n + 1)[:n]
+        low = jnp.minimum(low, cl)
+        high = jnp.maximum(high, ch)
+        return lvl - 1, low, high
+
+    _, low, high = lax.while_loop(
+        lambda s: s[0] >= 1, up_body, (max_level, low0, high0)
+    )
+
+    # aux-edge masks over original slots
+    pre_s = jnp.take(pre, src, mode="fill", fill_value=0)
+    pre_d = jnp.take(pre, dst, mode="fill", fill_value=0)
+    size_s = jnp.take(size, src, mode="fill", fill_value=0)
+    size_d = jnp.take(size, dst, mode="fill", fill_value=0)
+    anc_sd = (pre_s <= pre_d) & (pre_d < pre_s + size_s)  # src ancestor of dst
+    anc_ds = (pre_d <= pre_s) & (pre_s < pre_d + size_d)
+    mask1 = nontree & ~anc_sd & ~anc_ds
+
+    # tree-edge condition: child c with parent u join iff subtree(c) escapes u
+    pre_p = jnp.take(pre, parents, mode="fill", fill_value=0)
+    size_p = jnp.take(size, parents, mode="fill", fill_value=0)
+    esc = (low < pre_p) | (high >= pre_p + size_p)  # per child vertex
+    esc = esc & (parents != jnp.arange(n, dtype=jnp.int32))
+    parent_is_root = jnp.take(
+        parents, parents, mode="fill", fill_value=-1
+    ) == parents  # parent is its own parent
+    join_up = esc & ~parent_is_root  # aux edge (v, parents[v]) both non-root
+    esc_d = jnp.take(join_up, dst, mode="fill", fill_value=False)
+    esc_s = jnp.take(join_up, src, mode="fill", fill_value=False)
+    mask2 = (tree_sd & esc_d) | (tree_ds & esc_s)
+
+    aux_active = mask1 | mask2
+    aux_labels = _min_label_prop(
+        g, jnp.arange(n, dtype=jnp.int32), edge_active=aux_active
+    )
+
+    # per-slot bicomp labels
+    deeper = jnp.where(pre_s > pre_d, src, dst)
+    child = jnp.where(tree_sd, dst, jnp.where(tree_ds, src, deeper))
+    out = jnp.take(aux_labels, child, mode="fill", fill_value=-1)
+    return jnp.where(valid, out, -1)

@@ -1,0 +1,163 @@
+"""Substructure problems (§4.3.4) — k-core, approximate densest subgraph,
+triangle counting.
+
+k-core / densest subgraph use the dense-histogram peeling discipline
+(segment-sum of removed-neighbor counts).  Triangle counting orients edges
+low→high degree *through a graphFilter* (the CSR itself is never
+re-ordered) and intersects adjacency lists in fixed-size chunks, so the
+peak intermediate is O(chunk·Δ⁺) words — the §4.2.3 blocked-decode scheme.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.csr import CSRGraph
+from ..core.edgemap import edgemap_reduce
+from ..core.graph_filter import GraphFilter, make_filter, pack_bits
+
+INF_I32 = jnp.int32(2**31 - 1)
+
+
+# ----------------------------------------------------------------------
+def kcore(g: CSRGraph):
+    """Coreness of every vertex (peeling with dense histograms).
+    Returns core int32[n]."""
+    n = g.n
+
+    def body(state):
+        deg, alive, core, k = state
+        mn = jnp.min(jnp.where(alive, deg, INF_I32))
+        k = jnp.maximum(k, mn)
+        peel = alive & (deg <= k)
+        core = jnp.where(peel, k, core)
+        cnt, _ = edgemap_reduce(
+            g, peel, jnp.ones(n, jnp.int32), monoid="sum", mode="auto"
+        )
+        deg = jnp.maximum(deg - cnt, 0)
+        return deg, alive & ~peel, core, k
+
+    def cond(state):
+        _, alive, _, _ = state
+        return jnp.any(alive)
+
+    _, _, core, _ = lax.while_loop(
+        cond,
+        body,
+        (g.degrees, jnp.ones(n, dtype=bool), jnp.zeros(n, jnp.int32), jnp.int32(0)),
+    )
+    return core
+
+
+# ----------------------------------------------------------------------
+def densest_subgraph(g: CSRGraph, *, eps: float = 0.001):
+    """(2+ε)-approximate densest subgraph (Charikar peeling, parallel).
+    Returns (best_mask bool[n], best_density float32)."""
+    n = g.n
+    thresh = 2.0 * (1.0 + eps)
+
+    def body(state):
+        alive, deg, best_mask, best_rho, _ = state
+        n_act = jnp.sum(alive).astype(jnp.float32)
+        m_act = jnp.sum(jnp.where(alive, deg, 0)).astype(jnp.float32)  # 2|E(S)|
+        rho = jnp.where(n_act > 0, m_act / 2.0 / jnp.maximum(n_act, 1.0), 0.0)
+        better = rho > best_rho
+        best_mask = jnp.where(better, alive, best_mask)
+        best_rho = jnp.maximum(best_rho, rho)
+        remove = alive & (deg.astype(jnp.float32) <= thresh * rho)
+        # guard: always remove at least the min-degree vertices
+        remove = jnp.where(
+            jnp.any(remove),
+            remove,
+            alive & (deg == jnp.min(jnp.where(alive, deg, INF_I32))),
+        )
+        cnt, _ = edgemap_reduce(
+            g, remove, jnp.ones(n, jnp.int32), monoid="sum", mode="auto"
+        )
+        deg = jnp.maximum(deg - cnt, 0)
+        return alive & ~remove, deg, best_mask, best_rho, jnp.any(alive & ~remove)
+
+    def cond(state):
+        return state[4]
+
+    alive0 = jnp.ones(n, dtype=bool)
+    _, _, best_mask, best_rho, _ = lax.while_loop(
+        cond,
+        body,
+        (alive0, g.degrees, alive0, jnp.float32(0.0), jnp.bool_(True)),
+    )
+    return best_mask, best_rho
+
+
+# ----------------------------------------------------------------------
+def orientation_filter(g: CSRGraph) -> tuple[GraphFilter, np.ndarray]:
+    """Low→high degree orientation expressed as a graphFilter (§4.3.4):
+    the 'directed' graph is the immutable CSR viewed through bits that keep
+    only slots with rank(src) < rank(dst)."""
+    n = g.n
+    deg = np.asarray(g.degrees).astype(np.int64)
+    src = np.asarray(g.edge_src).astype(np.int64)
+    dst = np.asarray(g.edge_dst).astype(np.int64)
+    valid = dst < n
+    key = deg * (n + 1)
+    key = np.concatenate([key + np.arange(n), [np.iinfo(np.int64).max]])
+    keep = valid & (key[np.minimum(src, n)] < key[np.minimum(dst, n)])
+    f = make_filter(g)
+    bits = pack_bits(jnp.asarray(keep.reshape(g.num_blocks, g.block_size)))
+    deg_or = np.bincount(src[keep], minlength=n)
+    f = GraphFilter(
+        bits=bits,
+        active_deg=jnp.asarray(deg_or, jnp.int32),
+        dirty=f.dirty,
+        n=n,
+        num_blocks=f.num_blocks,
+        block_size=f.block_size,
+    )
+    return f, keep
+
+
+def triangle_count(g: CSRGraph, *, chunk: int = 16384) -> int:
+    """Exact global triangle count.  Orients via ``orientation_filter`` and
+    intersects N⁺(u)/N⁺(v) per directed edge in chunks (blocked decode)."""
+    n = g.n
+    _, keep = orientation_filter(g)
+    src = np.asarray(g.edge_src).astype(np.int64)
+    dst = np.asarray(g.edge_dst).astype(np.int64)
+    us, vs = src[keep], dst[keep]
+    e = us.shape[0]
+    if e == 0:
+        return 0
+    # oriented padded adjacency, rows sorted ascending
+    deg_or = np.bincount(us, minlength=n)
+    dmax = max(1, int(deg_or.max()))
+    SEN = np.int64(2**31 - 2)
+    adj = np.full((n + 1, dmax), SEN, dtype=np.int64)
+    order = np.lexsort((vs, us))
+    uo, vo = us[order], vs[order]
+    starts = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg_or, out=starts[1:])
+    within = np.arange(e) - starts[uo]
+    adj[uo, within] = vo
+    adj_j = jnp.asarray(adj, jnp.int32)
+    us_j = jnp.asarray(us, jnp.int32)
+    vs_j = jnp.asarray(vs, jnp.int32)
+
+    @jax.jit
+    def count_chunk(u_idx, v_idx):
+        au = jnp.take(adj_j, u_idx, axis=0)  # (C, D)
+        av = jnp.take(adj_j, v_idx, axis=0)
+        pos = jax.vmap(jnp.searchsorted)(av, au)
+        pos = jnp.clip(pos, 0, dmax - 1)
+        hit = (jnp.take_along_axis(av, pos, axis=1) == au) & (au < jnp.int32(SEN))
+        return jnp.sum(hit, dtype=jnp.int32)
+
+    total = 0
+    for s in range(0, e, chunk):
+        c = min(chunk, e - s)
+        pad = chunk - c
+        ui = jnp.pad(us_j[s : s + c], (0, pad), constant_values=n)
+        vi = jnp.pad(vs_j[s : s + c], (0, pad), constant_values=n)
+        total += int(count_chunk(ui, vi))
+    return total

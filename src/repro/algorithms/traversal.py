@@ -1,0 +1,217 @@
+"""Shortest-path problems (§4.3.1) — BFS, wBFS (integral Dijkstra),
+Bellman-Ford, single-source widest path, single-source betweenness.
+
+All are frontier loops over EDGEMAPCHUNKED (direction-optimized).  Mutable
+state is strictly O(n) words.  CAS-based ``updateAtomic`` from the paper's
+BFS (Fig. 4) becomes an idempotent min-reduction over candidate parents —
+any in-frontier parent is a valid BFS-tree parent, so priority-min is a
+legal determinization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.csr import CSRGraph
+from ..core.edgemap import edgemap_reduce
+
+INF_I32 = jnp.int32(2**31 - 1)
+UNVISITED = jnp.int32(-1)
+
+
+def bfs(g: CSRGraph, src: int, *, mode: str = "auto"):
+    """Breadth-first search.  Returns (parents int32[n], levels int32[n]).
+
+    parents[v] = -1 if unreachable, src for the source itself.
+    PSAM: O(m) work, O(d_G log n) depth, O(n) words small memory (Thm 4.2).
+    """
+    n = g.n
+    src = jnp.asarray(src, jnp.int32)
+    parents0 = jnp.full(n, UNVISITED).at[src].set(src)
+    levels0 = jnp.full(n, UNVISITED).at[src].set(0)
+    frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def body(state):
+        rnd, parents, levels, frontier = state
+        cand, touched = edgemap_reduce(g, frontier, ids, monoid="min", mode=mode)
+        newly = touched & (parents == UNVISITED)
+        parents = jnp.where(newly, cand, parents)
+        levels = jnp.where(newly, rnd + 1, levels)
+        return rnd + 1, parents, levels, newly
+
+    def cond(state):
+        rnd, _, _, frontier = state
+        return jnp.any(frontier) & (rnd < n)
+
+    _, parents, levels, _ = lax.while_loop(
+        cond, body, (jnp.int32(0), parents0, levels0, frontier0)
+    )
+    return parents, levels
+
+
+def wbfs(g: CSRGraph, src: int, *, mode: str = "auto"):
+    """Integral-weight SSSP via bucketed Dijkstra (Julienne-style, App. B).
+
+    Weights are read from ``g.edge_w`` and truncated to int32.  Returns
+    dist int32[n] (INF for unreachable).  The bucket structure is the dense
+    O(n) semi-eager variant: extracting the next bucket is a min-reduce.
+    """
+    n = g.n
+    src = jnp.asarray(src, jnp.int32)
+    dist0 = jnp.full(n, INF_I32).at[src].set(0)
+    settled0 = jnp.zeros(n, dtype=bool)
+
+    def relax(xs, w):
+        wi = w.astype(jnp.int32)
+        return jnp.where(xs >= INF_I32 - jnp.int32(1 << 24), INF_I32, xs + wi)
+
+    def body(state):
+        dist, settled = state
+        d = jnp.min(jnp.where(settled, INF_I32, dist))
+        frontier = ~settled & (dist == d)
+        settled = settled | frontier
+        cand, touched = edgemap_reduce(
+            g, frontier, dist, monoid="min", map_fn=relax, mode=mode
+        )
+        improve = touched & ~settled & (cand < dist)
+        dist = jnp.where(improve, cand, dist)
+        return dist, settled
+
+    def cond(state):
+        dist, settled = state
+        return jnp.any(~settled & (dist < INF_I32))
+
+    dist, _ = lax.while_loop(cond, body, (dist0, settled0))
+    return dist
+
+
+def bellman_ford(g: CSRGraph, src: int, *, mode: str = "auto"):
+    """General-weight SSSP.  Returns (dist float32[n], has_neg_cycle bool).
+
+    Vertices reachable from a negative cycle get -inf (App. C.1 spec).
+    """
+    n = g.n
+    src = jnp.asarray(src, jnp.int32)
+    dist0 = jnp.full(n, jnp.inf, jnp.float32).at[src].set(0.0)
+    frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
+
+    def relax(xs, w):
+        return xs + w
+
+    def body(state):
+        rnd, dist, frontier = state
+        cand, touched = edgemap_reduce(
+            g, frontier, dist, monoid="min", map_fn=relax, mode=mode
+        )
+        improve = touched & (cand < dist)
+        dist = jnp.where(improve, cand, dist)
+        return rnd + 1, dist, improve
+
+    def cond(state):
+        rnd, _, frontier = state
+        return jnp.any(frontier) & (rnd <= n)
+
+    rnd, dist, frontier = lax.while_loop(
+        cond, body, (jnp.int32(0), dist0, frontier0)
+    )
+    has_neg_cycle = jnp.any(frontier)
+
+    # propagate -inf from the still-improving set (bounded BFS)
+    def prop_body(state):
+        i, dist, fr = state
+        _, touched = edgemap_reduce(g, fr, dist, monoid="min", mode=mode)
+        newly = touched & (dist > -jnp.inf)
+        dist = jnp.where(fr | newly, -jnp.inf, dist)
+        return i + 1, dist, newly
+
+    def prop_cond(state):
+        i, _, fr = state
+        return jnp.any(fr) & (i < n)
+
+    _, dist, _ = lax.while_loop(
+        prop_cond,
+        prop_body,
+        (jnp.int32(0), jnp.where(frontier, -jnp.inf, dist), frontier),
+    )
+    return dist, has_neg_cycle
+
+
+def widest_path(g: CSRGraph, src: int, *, mode: str = "auto"):
+    """Single-source widest path (max-min path semiring), Bellman-Ford style.
+
+    Returns width float32[n]; -inf for unreachable, +inf for the source.
+    """
+    n = g.n
+    src = jnp.asarray(src, jnp.int32)
+    width0 = jnp.full(n, -jnp.inf, jnp.float32).at[src].set(jnp.inf)
+    frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
+
+    def bottleneck(xs, w):
+        return jnp.minimum(xs, w)
+
+    def body(state):
+        rnd, width, frontier = state
+        cand, touched = edgemap_reduce(
+            g, frontier, width, monoid="max", map_fn=bottleneck, mode=mode
+        )
+        improve = touched & (cand > width)
+        width = jnp.where(improve, cand, width)
+        return rnd + 1, width, improve
+
+    def cond(state):
+        rnd, _, frontier = state
+        return jnp.any(frontier) & (rnd <= n)
+
+    _, width, _ = lax.while_loop(cond, body, (jnp.int32(0), width0, frontier0))
+    return width
+
+
+def betweenness(g: CSRGraph, src: int, *, mode: str = "auto"):
+    """Single-source betweenness centrality (Brandes forward/backward).
+
+    Returns delta float32[n] — the dependency scores from src.
+    Forward: level-synchronous sigma accumulation (edgeMapChunked, sum
+    monoid).  Backward: levels replayed in reverse.  O(n) words of state:
+    levels, sigma, delta.
+    """
+    n = g.n
+    src = jnp.asarray(src, jnp.int32)
+    level0 = jnp.full(n, UNVISITED).at[src].set(0)
+    sigma0 = jnp.zeros(n, jnp.float32).at[src].set(1.0)
+    frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
+
+    def fwd_body(state):
+        lvl, level, sigma, frontier = state
+        cand, touched = edgemap_reduce(g, frontier, sigma, monoid="sum", mode=mode)
+        newly = touched & (level == UNVISITED)
+        sigma = jnp.where(newly, cand, sigma)
+        level = jnp.where(newly, lvl + 1, level)
+        return lvl + 1, level, sigma, newly
+
+    def fwd_cond(state):
+        lvl, _, _, frontier = state
+        return jnp.any(frontier) & (lvl < n)
+
+    max_lvl, level, sigma, _ = lax.while_loop(
+        fwd_cond, fwd_body, (jnp.int32(0), level0, sigma0, frontier0)
+    )
+
+    delta0 = jnp.zeros(n, jnp.float32)
+
+    def bwd_body(state):
+        lvl, delta = state
+        upper = level == lvl  # vertices one level deeper
+        y = jnp.where(sigma > 0, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
+        y = jnp.where(upper, y, 0.0)
+        s, _ = edgemap_reduce(g, upper, y, monoid="sum", mode=mode)
+        delta = jnp.where(level == lvl - 1, sigma * s, delta)
+        return lvl - 1, delta
+
+    def bwd_cond(state):
+        lvl, _ = state
+        return lvl >= 1
+
+    _, delta = lax.while_loop(bwd_cond, bwd_body, (max_lvl, delta0))
+    return delta.at[src].set(0.0)

@@ -1,0 +1,3 @@
+from .ckpt import latest_step, restore, restore_latest, save
+
+__all__ = ["save", "restore", "restore_latest", "latest_step"]

@@ -1,0 +1,50 @@
+"""Registry of the 10 assigned architectures (+ the paper's own graph
+workload).  ``get_arch(name)`` → config module; ``all_cells()`` → the full
+40-cell (arch × shape) grid."""
+from __future__ import annotations
+
+from . import (
+    dbrx_132b,
+    deepseek_v2_lite_16b,
+    dimenet,
+    equiformer_v2,
+    gin_tu,
+    mistral_large_123b,
+    pna,
+    qwen1_5_4b,
+    qwen2_1_5b,
+    sage_graph,
+    sasrec,
+)
+
+ARCHS = {
+    m.ARCH_ID: m
+    for m in [
+        mistral_large_123b,
+        qwen2_1_5b,
+        qwen1_5_4b,
+        dbrx_132b,
+        deepseek_v2_lite_16b,
+        pna,
+        dimenet,
+        equiformer_v2,
+        gin_tu,
+        sasrec,
+    ]
+}
+
+
+def get_arch(name: str):
+    return ARCHS[name]
+
+
+def all_cells():
+    """The 40 (architecture × shape) cells."""
+    out = {}
+    for name, m in ARCHS.items():
+        for shape, cell in m.cells().items():
+            out[(name, shape)] = cell
+    return out
+
+
+__all__ = ["ARCHS", "get_arch", "all_cells", "sage_graph"]

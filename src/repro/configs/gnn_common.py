@@ -1,0 +1,129 @@
+"""Shared GNN cell factory: every GNN arch × the 4 assigned graph shapes.
+
+Shapes are padded so sharded dims divide both production meshes (nodes →
+×32, edges → ×512); sentinel indices point at the padded tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..distributed.shardings import GNN_RULES
+from .common import Cell, GNN_SHAPES, TRIPLET_CAP, f32, i32
+
+
+def _pad(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# per-shape task info: (task, n_classes, n_graphs)
+SHAPE_TASK = {
+    "full_graph_sm": ("node", 7, None),        # cora
+    "minibatch_lg": ("node", 41, None),        # reddit
+    "ogb_products": ("node", 47, None),
+    "molecule": ("graph", 1, 128),
+}
+
+
+def gnn_shape_dims(shape: str) -> tuple[int, int, int]:
+    """(padded nodes, padded edges, d_feat)."""
+    info = GNN_SHAPES[shape]
+    if shape == "minibatch_lg":
+        from ..data.neighbor_sampler import padded_sizes
+
+        n, e = padded_sizes(info["batch_nodes"], info["fanout"])
+    elif shape == "molecule":
+        n = info["n_nodes"] * info["batch"]
+        e = info["n_edges"] * info["batch"] * 2
+    else:
+        n, e = info["n_nodes"], info["n_edges"]
+    return _pad(n, 32), _pad(e, 512), info["d_feat"]
+
+
+def gnn_cells(
+    arch: str,
+    module,
+    base_cfg,
+    *,
+    with_pos: bool,
+    with_triplets: bool,
+    flops_fn=None,
+) -> dict[str, Cell]:
+    cells = {}
+    for shape in GNN_SHAPES:
+        n, e, d_feat = gnn_shape_dims(shape)
+        task, n_classes, n_graphs = SHAPE_TASK[shape]
+        kwargs = dict(d_in=d_feat, task=task)
+        if hasattr(base_cfg, "n_classes"):
+            kwargs["n_classes"] = n_classes if task == "node" else 1
+        if n_graphs is not None:
+            kwargs["n_graphs"] = n_graphs
+        cfg = dataclasses.replace(base_cfg, **kwargs)
+
+        specs = {
+            "node_feat": f32(n, d_feat),
+            "edge_src": i32(e),
+            "edge_dst": i32(e),
+        }
+        logical = {
+            "node_feat": ("nodes", None),
+            "edge_src": ("edges",),
+            "edge_dst": ("edges",),
+        }
+        if with_pos:
+            specs["pos"] = f32(n, 3)
+            logical["pos"] = ("nodes", None)
+        if with_triplets:
+            t = e * TRIPLET_CAP[shape]
+            specs["t_kj"] = i32(t)
+            specs["t_ji"] = i32(t)
+            logical["t_kj"] = ("edges",)
+            logical["t_ji"] = ("edges",)
+        if task == "graph":
+            specs["node_graph"] = i32(n)
+            specs["graph_labels"] = f32(n_graphs)
+            logical["node_graph"] = ("nodes",)
+            logical["graph_labels"] = (None,)
+        else:
+            specs["labels"] = i32(n)
+            logical["labels"] = ("nodes",)
+
+        cells[shape] = Cell(
+            arch=arch,
+            shape=shape,
+            kind="train",
+            family="gnn",
+            model_cfg=cfg,
+            batch_specs=specs,
+            batch_logical=logical,
+            rules=GNN_RULES,
+            model_flops=flops_fn(cfg, n, e) if flops_fn else 0.0,
+        )
+    return cells
+
+
+def gnn_smoke_batch(key_seed: int, *, d_in=16, with_pos=False, with_triplets=False,
+                    task="node", n_classes=8, n_graphs=4):
+    """Tiny real-array batch for CPU smoke tests."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(key_seed)
+    N, E = 24, 64
+    batch = {
+        "node_feat": jnp.asarray(rng.normal(size=(N, d_in)), jnp.float32),
+        "edge_src": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+    }
+    if with_pos:
+        batch["pos"] = jnp.asarray(rng.normal(size=(N, 3)), jnp.float32)
+    if with_triplets:
+        T = 96
+        batch["t_kj"] = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+        batch["t_ji"] = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+    if task == "graph":
+        batch["node_graph"] = jnp.asarray(rng.integers(0, n_graphs, N), jnp.int32)
+        batch["graph_labels"] = jnp.asarray(rng.normal(size=(n_graphs,)), jnp.float32)
+    else:
+        batch["labels"] = jnp.asarray(rng.integers(0, n_classes, N), jnp.int32)
+    return batch

@@ -1,0 +1,61 @@
+"""repro.core — the Parallel Semi-Asymmetric Model (PSAM) graph engine.
+
+Public surface:
+  CSRGraph / build_csr / graph_spec       — immutable blocked CSR (large memory)
+  VertexSubset / from_indices / from_mask — frontiers (O(n) small memory)
+  edgemap_reduce / edge_map               — direction-optimized edgeMapChunked
+  GraphFilter / make_filter / pack_vertices / filter_edges — §4.2 bitset filter
+  Buckets / make_buckets                  — semi-eager bucketing (App. B)
+  PSAMCost                                — §3 cost accounting
+"""
+from .bucketing import NULL_BUCKET, Buckets, make_buckets
+from .compressed import CompressedCSR, compress, decode_block, decode_blocks, edgemap_sum_compressed
+from .csr import DEFAULT_BLOCK_SIZE, CSRGraph, build_csr, graph_spec
+from .edgemap import edge_map, edgemap_chunked, edgemap_dense, edgemap_reduce
+from .graph_filter import (
+    GraphFilter,
+    edge_active_flat,
+    filter_edges,
+    filter_edges_pred,
+    live_block_indices,
+    make_filter,
+    pack_bits,
+    pack_vertices,
+    unpack_bits,
+)
+from .psam import PSAMCost
+from .vertex_subset import VertexSubset, empty, from_indices, from_mask, full
+
+__all__ = [
+    "CompressedCSR",
+    "compress",
+    "decode_blocks",
+    "decode_block",
+    "edgemap_sum_compressed",
+    "CSRGraph",
+    "build_csr",
+    "graph_spec",
+    "DEFAULT_BLOCK_SIZE",
+    "VertexSubset",
+    "from_indices",
+    "from_mask",
+    "full",
+    "empty",
+    "edge_map",
+    "edgemap_reduce",
+    "edgemap_dense",
+    "edgemap_chunked",
+    "GraphFilter",
+    "make_filter",
+    "pack_vertices",
+    "filter_edges",
+    "filter_edges_pred",
+    "unpack_bits",
+    "pack_bits",
+    "edge_active_flat",
+    "live_block_indices",
+    "Buckets",
+    "make_buckets",
+    "NULL_BUCKET",
+    "PSAMCost",
+]

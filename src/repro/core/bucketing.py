@@ -1,0 +1,49 @@
+"""Semi-eager bucketing (Appendix B) — Julienne's bucket structure in O(n).
+
+Each vertex sits in at most one bucket; ``bucket_of[v]`` is its current
+bucket id (NULL_BUCKET when retired).  ``next_bucket`` extracts the minimum
+non-empty bucket.  Because the map is a dense int32[n] vector, the
+live/dead-counter machinery of the paper's semi-eager variant is subsumed:
+moving a vertex is a single O(1) small-memory write and extraction is one
+O(n)-work / O(log n)-depth min-reduce — within the PSAM budget by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NULL_BUCKET = jnp.int32(2**30)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["bucket_of"],
+    meta_fields=["n"],
+)
+@dataclasses.dataclass(frozen=True)
+class Buckets:
+    bucket_of: jnp.ndarray  # int32[n]
+    n: int
+
+    def next_bucket(self):
+        """Returns (bucket_id, member_mask, any_left)."""
+        bid = jnp.min(self.bucket_of)
+        mask = self.bucket_of == bid
+        return bid, mask, bid < NULL_BUCKET
+
+    def update(self, ids_mask: jnp.ndarray, new_buckets: jnp.ndarray) -> "Buckets":
+        """updateBuckets: vertices in ``ids_mask`` move to ``new_buckets[v]``."""
+        nb = jnp.where(ids_mask, new_buckets.astype(jnp.int32), self.bucket_of)
+        return Buckets(bucket_of=nb, n=self.n)
+
+    def retire(self, ids_mask: jnp.ndarray) -> "Buckets":
+        return self.update(ids_mask, jnp.full(self.n, NULL_BUCKET))
+
+
+def make_buckets(initial: jnp.ndarray) -> Buckets:
+    """initial: int32[n] bucket ids (NULL_BUCKET to start retired)."""
+    return Buckets(bucket_of=initial.astype(jnp.int32), n=initial.shape[0])

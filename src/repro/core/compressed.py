@@ -1,0 +1,147 @@
+"""Compressed blocked CSR — the Ligra+ byte-code format (§5.1.3) adapted to
+TPU fixed-width decoding.
+
+The paper's web-graph inputs are stored with per-block difference encoding
+and decoded block-at-a-time; the graphFilter block size is tied to the
+compression block size (§4.2.1).  Byte-aligned varints are a sequential
+CPU format, so the TPU-idiomatic equivalent is **fixed-width delta
+packing**: per block we store the first target (int32) and uint16 deltas
+between consecutive sorted targets; the rare deltas ≥ 2¹⁶ go to a COO
+exception list.  Decoding a block is a vectorized cumsum over the lane
+dimension — exactly the "decode the whole block to fetch one edge"
+discipline the paper's filter iterator uses (App. D.1) — and the
+graphFilter bits apply unchanged on top of the decoded block.
+
+Compression ratio: 32-bit targets → ~16.25 bits/edge + exceptions, i.e.
+~2× on locality-friendly orderings (the paper reports 2.7–2.9× with
+byte codes on web graphs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRGraph
+
+ESCAPE = np.uint16(0xFFFF)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "block_first",
+        "deltas",
+        "exc_block",
+        "exc_slot",
+        "exc_value",
+        "block_src",
+        "degrees",
+    ],
+    meta_fields=["n", "m", "num_blocks", "block_size", "n_exceptions"],
+)
+@dataclasses.dataclass(frozen=True)
+class CompressedCSR:
+    """Read-only difference-encoded blocked CSR (PSAM large memory)."""
+
+    block_first: jnp.ndarray  # int32[NB]       — first target per block
+    deltas: jnp.ndarray       # uint16[NB, FB]  — deltas[:, 0] unused (=0)
+    exc_block: jnp.ndarray    # int32[NE]       — exception coordinates
+    exc_slot: jnp.ndarray     # int32[NE]
+    exc_value: jnp.ndarray    # int32[NE]       — true delta value
+    block_src: jnp.ndarray    # int32[NB]
+    degrees: jnp.ndarray      # int32[n]
+    n: int
+    m: int
+    num_blocks: int
+    block_size: int
+    n_exceptions: int
+
+    @property
+    def compressed_bytes(self) -> int:
+        return int(
+            self.block_first.size * 4
+            + self.deltas.size * 2
+            + self.n_exceptions * 12
+        )
+
+    @property
+    def uncompressed_bytes(self) -> int:
+        return int(self.deltas.size * 4)
+
+
+def compress(g: CSRGraph) -> CompressedCSR:
+    """Host-side encoder (runs once at load, like the paper's preprocessing)."""
+    NB, FB = g.num_blocks, g.block_size
+    dst = np.asarray(g.edge_dst).reshape(NB, FB).astype(np.int64)
+    # padding slots carry the sentinel n; treat them as repeats of the last
+    # real target so deltas stay small, and rely on the CSR valid mask later
+    first = dst[:, 0].astype(np.int32)
+    prev = dst[:, :-1]
+    cur = dst[:, 1:]
+    raw = cur - prev
+    raw = np.concatenate([np.zeros((NB, 1), np.int64), raw], axis=1)
+    over = (raw >= int(ESCAPE)) | (raw < 0)
+    deltas = np.where(over, int(ESCAPE), raw).astype(np.uint16)
+    eb, es = np.nonzero(over)
+    return CompressedCSR(
+        block_first=jnp.asarray(first),
+        deltas=jnp.asarray(deltas),
+        exc_block=jnp.asarray(eb.astype(np.int32)),
+        exc_slot=jnp.asarray(es.astype(np.int32)),
+        exc_value=jnp.asarray(raw[eb, es].astype(np.int32)),
+        block_src=g.block_src,
+        degrees=g.degrees,
+        n=g.n,
+        m=g.m,
+        num_blocks=NB,
+        block_size=FB,
+        n_exceptions=int(eb.shape[0]),
+    )
+
+
+def decode_blocks(c: CompressedCSR) -> jnp.ndarray:
+    """Decode ALL blocks → int32[NB, FB] targets (vectorized cumsum).
+
+    O(m) work / O(log F_B) depth per block, matching the paper's block
+    decode cost; used by edgeMap over compressed graphs.
+    """
+    d = c.deltas.astype(jnp.int32)
+    # patch exceptions (escaped wide deltas)
+    if c.n_exceptions:
+        d = d.at[c.exc_block, c.exc_slot].set(c.exc_value, mode="drop")
+    d = d.at[:, 0].set(0)
+    return c.block_first[:, None] + jnp.cumsum(d, axis=1, dtype=jnp.int32)
+
+
+def decode_block(c: CompressedCSR, bid) -> jnp.ndarray:
+    """Decode a single block (the filter-iterator path, App. D.1)."""
+    d = jnp.take(c.deltas, bid, axis=0).astype(jnp.int32)
+    if c.n_exceptions:
+        hit = c.exc_block == bid
+        d = d.at[jnp.where(hit, c.exc_slot, c.block_size)].set(
+            jnp.where(hit, c.exc_value, 0), mode="drop"
+        )
+    d = d.at[0].set(0)
+    return jnp.take(c.block_first, bid) + jnp.cumsum(d, dtype=jnp.int32)
+
+
+def edgemap_sum_compressed(
+    c: CompressedCSR, x: jnp.ndarray, *, edge_active: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """out[v] = Σ over decoded active edges (v,u) of x[u] — PageRank-style
+    aggregation straight off the compressed representation (with optional
+    graphFilter bits), proving filter ∘ compression composes as in §4.2.1."""
+    n = c.n
+    dst = decode_blocks(c)
+    valid = dst < n
+    if edge_active is not None:
+        valid = valid & edge_active.reshape(dst.shape)
+    safe = jnp.where(valid, dst, 0)
+    xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
+    contrib = jnp.where(valid, xv, 0.0)
+    per_block = jnp.sum(contrib, axis=1)
+    return jax.ops.segment_sum(per_block, c.block_src, num_segments=n + 1)[:n]

@@ -1,0 +1,151 @@
+"""graphFilter (§4.2) — a bit-packed, mutable *view* over the immutable CSR.
+
+The CSR edge arrays (large memory) are never written.  All mutation happens
+in this structure, which costs ``m`` bits + O(n) words — the relaxed PSAM
+small-memory budget of O(n + m/log n) words:
+
+* ``bits``        uint32[NB, F_B/32] — one bit per edge slot (1 = active)
+* ``active_deg``  int32[n]           — live degree per vertex
+* ``block_live``  derived             — block has ≥1 active edge (the paper's
+  empty-block compaction: dead blocks are skipped by chunked traversal, which
+  is the static-shape analogue of physically packing them out)
+* ``dirty``       bool[n]            — vertices whose edges changed this round
+
+The paper's per-block ``offset``/``block-id`` metadata exists to support CPU
+pointer compaction; under XLA static shapes the same role is played by the
+compacted live-block index list produced on demand (O(n) words).
+
+TPU adaptation of §4.2.3: the TZCNT/BLSR word loop becomes vectorized
+popcount/mask arithmetic over whole VMEM tiles (see kernels/filter_pack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRGraph
+from .primitives import popcount32
+
+WORD = 32
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["bits", "active_deg", "dirty"],
+    meta_fields=["n", "num_blocks", "block_size"],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphFilter:
+    bits: jnp.ndarray        # uint32[NB, F_B//32]
+    active_deg: jnp.ndarray  # int32[n]
+    dirty: jnp.ndarray       # bool[n]
+    n: int
+    num_blocks: int
+    block_size: int
+
+    @property
+    def num_active_edges(self) -> jnp.ndarray:
+        return jnp.sum(self.active_deg)
+
+    @property
+    def block_live(self) -> jnp.ndarray:
+        return jnp.any(self.bits != 0, axis=-1)
+
+
+def make_filter(g: CSRGraph) -> GraphFilter:
+    """makeFilter (§4.2.2): all real edges start active."""
+    words = g.block_size // WORD
+    mask = g.edge_valid.reshape(g.num_blocks, words, WORD)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    bits = jnp.sum(jnp.where(mask, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+    return GraphFilter(
+        bits=bits,
+        active_deg=g.degrees,
+        dirty=jnp.zeros(g.n, dtype=bool),
+        n=g.n,
+        num_blocks=g.num_blocks,
+        block_size=g.block_size,
+    )
+
+
+def unpack_bits(f: GraphFilter) -> jnp.ndarray:
+    """bool[NB, F_B] active-edge mask (the dense working view)."""
+    words = f.bits[..., :, None]  # (NB, W, 1)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    opened = ((words >> shifts) & jnp.uint32(1)).astype(bool)
+    return opened.reshape(f.num_blocks, f.block_size)
+
+
+def pack_bits(mask: jnp.ndarray) -> jnp.ndarray:
+    """bool[NB, F_B] → uint32[NB, F_B//32]."""
+    nb, fb = mask.shape
+    m3 = mask.reshape(nb, fb // WORD, WORD)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return jnp.sum(jnp.where(m3, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32)
+
+
+def edge_active_flat(f: GraphFilter) -> jnp.ndarray:
+    """bool[NB*F_B] — flat edge-slot activity mask."""
+    return unpack_bits(f).reshape(-1)
+
+
+def _recount(g: CSRGraph, bits: jnp.ndarray) -> jnp.ndarray:
+    """active_deg from bits via per-block popcount + segment-sum (PackVertex)."""
+    per_block = jnp.sum(popcount32(bits), axis=-1)  # int32[NB]
+    return jax.ops.segment_sum(per_block, g.block_src, num_segments=g.n + 1)[: g.n]
+
+
+def pack_vertices(
+    g: CSRGraph,
+    f: GraphFilter,
+    subset_mask: jnp.ndarray,
+    keep_pred: jnp.ndarray,
+) -> GraphFilter:
+    """edgeMapPack (§4.2.2): for vertices in ``subset_mask``, clear bits of
+    edges failing ``keep_pred`` (bool[NB*F_B] or bool[NB, F_B]).
+
+    Marks destination vertices of deleted edges dirty.
+    """
+    keep = keep_pred.reshape(g.num_blocks, g.block_size)
+    active = unpack_bits(f)
+    in_subset = jnp.take(subset_mask, g.block_src, mode="fill", fill_value=False)[:, None]
+    new_active = jnp.where(in_subset, active & keep, active)
+    deleted = active & ~new_active
+    # dirty: destinations of deleted edges
+    ddst = jnp.where(deleted, g.block_dst, jnp.int32(g.n)).reshape(-1)
+    dirty_hits = jax.ops.segment_max(
+        deleted.astype(jnp.int32).reshape(-1), ddst, num_segments=g.n + 1
+    )[: g.n]
+    bits = pack_bits(new_active)
+    return GraphFilter(
+        bits=bits,
+        active_deg=_recount(g, bits),
+        dirty=f.dirty | (dirty_hits > 0),
+        n=f.n,
+        num_blocks=f.num_blocks,
+        block_size=f.block_size,
+    )
+
+
+def filter_edges(g: CSRGraph, f: GraphFilter, keep_pred: jnp.ndarray):
+    """filterEdges (§4.2): pack every vertex; returns (filter', remaining)."""
+    all_v = jnp.ones(g.n, dtype=bool)
+    f2 = pack_vertices(g, f, all_v, keep_pred)
+    return f2, f2.num_active_edges
+
+
+def filter_edges_pred(g: CSRGraph, f: GraphFilter, pred_fn):
+    """Convenience: ``pred_fn(src, dst, w) -> keep?`` evaluated on all slots."""
+    keep = pred_fn(g.edge_src, g.edge_dst, g.edge_w)
+    return filter_edges(g, f, keep)
+
+
+def live_block_indices(f: GraphFilter):
+    """Compacted indices of non-empty blocks (the paper's block compaction,
+    expressed as an O(n)-word index list instead of a physical move)."""
+    from .primitives import compact_mask
+
+    return compact_mask(f.block_live, fill=f.num_blocks)

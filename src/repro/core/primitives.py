@@ -1,0 +1,114 @@
+"""Parallel primitives (§2 of the paper): scan, reduce, filter/compact,
+histogram — all O(len) work, O(log) depth equivalents in JAX.
+
+These operate on the PSAM *small memory*: every output here is O(n) words.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF_I32 = jnp.int32(2**31 - 1)
+INF_F32 = jnp.float32(jnp.inf)
+
+
+def exclusive_scan(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefix sum: returns (exclusive prefix sums, total)."""
+    inc = jnp.cumsum(x)
+    total = inc[-1] if x.shape[0] else jnp.zeros((), x.dtype)
+    return inc - x, total
+
+
+def compact_mask(mask: jnp.ndarray, *, fill: int | None = None):
+    """Filter primitive: indices where ``mask`` is True, front-packed.
+
+    Returns (idx int32[len(mask)] padded with ``fill`` (default len(mask)),
+    count int32).  O(n) small-memory words — never proportional to edges.
+    """
+    size = mask.shape[0]
+    if fill is None:
+        fill = size
+    idx = jnp.nonzero(mask, size=size, fill_value=fill)[0].astype(jnp.int32)
+    return idx, jnp.sum(mask).astype(jnp.int32)
+
+
+def histogram(ids: jnp.ndarray, num_bins: int, weights=None) -> jnp.ndarray:
+    """Dense histogram (the paper's §4.3.4 dense-histogram routine)."""
+    if weights is None:
+        weights = jnp.ones_like(ids, dtype=jnp.int32)
+    return jax.ops.segment_sum(weights, ids, num_segments=num_bins)
+
+
+def segment_reduce(vals, ids, num_segments, monoid: str):
+    """Reduce-by-key with a named monoid; ids == num_segments-1 may be a
+    sentinel row (caller drops it)."""
+    if monoid == "sum":
+        return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+    if monoid == "min":
+        return jax.ops.segment_min(vals, ids, num_segments=num_segments)
+    if monoid == "max":
+        return jax.ops.segment_max(vals, ids, num_segments=num_segments)
+    if monoid == "or":
+        return (
+            jax.ops.segment_max(vals.astype(jnp.int32), ids, num_segments=num_segments)
+            > 0
+        )
+    raise ValueError(f"unknown monoid {monoid}")
+
+
+def monoid_identity(monoid: str, dtype):
+    """Identity element as a *hashable host scalar* (usable as take fill_value)."""
+    import numpy as np
+
+    np_dtype = np.dtype(dtype)
+    if monoid == "sum":
+        return np_dtype.type(0)
+    if monoid == "min":
+        if np.issubdtype(np_dtype, np.integer):
+            return np_dtype.type(np.iinfo(np_dtype).max)
+        return np_dtype.type(np.inf)
+    if monoid == "max":
+        if np.issubdtype(np_dtype, np.integer):
+            return np_dtype.type(np.iinfo(np_dtype).min)
+        return np_dtype.type(-np.inf)
+    if monoid == "or":
+        return np.bool_(False)
+    raise ValueError(monoid)
+
+
+# ----------------------------------------------------------------------
+# Bit tricks — the TPU-idiomatic stand-in for the paper's TZCNT/BLSR loops
+# (§4.2.3): we operate on whole words of forbidden/active bits at once.
+# ----------------------------------------------------------------------
+def mex_from_forbidden(words: jnp.ndarray) -> jnp.ndarray:
+    """Minimum excludant: smallest bit index not set, over uint32 words.
+
+    ``words``: uint32[..., W] little-endian bit blocks; returns int32[...].
+    Used by graph coloring (smallest available color ≤ 32*W-1).
+    """
+    W = words.shape[-1]
+    free = ~words  # a set bit in `free` is an available color
+    has_free = free != 0
+    # index of lowest set bit per word
+    low = lowest_set_bit(free)
+    first_word = jnp.argmax(has_free, axis=-1)
+    any_free = jnp.any(has_free, axis=-1)
+    picked = jnp.take_along_axis(low, first_word[..., None], axis=-1)[..., 0]
+    mex = first_word.astype(jnp.int32) * 32 + picked
+    return jnp.where(any_free, mex, jnp.int32(32 * W))
+
+
+def lowest_set_bit(x: jnp.ndarray) -> jnp.ndarray:
+    """Index of the lowest set bit of each uint32 (undefined→0 when x==0)."""
+    x = x.astype(jnp.uint32)
+    iso = x & (~x + jnp.uint32(1))  # isolate lowest bit (two's complement)
+    # log2 of a power of two via popcount(iso - 1)
+    return popcount32(iso - jnp.uint32(iso != 0)).astype(jnp.int32)
+
+
+def popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)

@@ -1,0 +1,56 @@
+"""vertexSubset (Ligra §2) — a frontier over the vertices.
+
+The canonical representation is a dense bool[n] mask: exactly the paper's
+"dense" frontier, O(n) *bits* of small memory.  A sparse (index) view is
+derived on demand with ``compact_mask`` and is still O(n) words — the PSAM
+budget — never O(m).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .primitives import compact_mask
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["mask"],
+    meta_fields=["n"],
+)
+@dataclasses.dataclass(frozen=True)
+class VertexSubset:
+    mask: jnp.ndarray  # bool[n]
+    n: int
+
+    @property
+    def size(self) -> jnp.ndarray:
+        return jnp.sum(self.mask).astype(jnp.int32)
+
+    def is_empty(self) -> jnp.ndarray:
+        return ~jnp.any(self.mask)
+
+    def to_indices(self):
+        return compact_mask(self.mask)
+
+
+def from_indices(n: int, idx) -> VertexSubset:
+    idx = jnp.asarray(idx, dtype=jnp.int32).reshape(-1)
+    mask = jnp.zeros(n, dtype=bool).at[idx].set(True, mode="drop")
+    return VertexSubset(mask=mask, n=n)
+
+
+def from_mask(mask) -> VertexSubset:
+    mask = jnp.asarray(mask, dtype=bool)
+    return VertexSubset(mask=mask, n=mask.shape[0])
+
+
+def full(n: int) -> VertexSubset:
+    return VertexSubset(mask=jnp.ones(n, dtype=bool), n=n)
+
+
+def empty(n: int) -> VertexSubset:
+    return VertexSubset(mask=jnp.zeros(n, dtype=bool), n=n)

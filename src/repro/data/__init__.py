@@ -1,0 +1,10 @@
+from .neighbor_sampler import padded_sizes, sample_fanout
+from .recsys import make_candidates, make_sasrec_batch_fn
+from .rmat import rmat_edges, rmat_graph, structured_graph
+from .tokens import make_lm_batch_fn
+
+__all__ = [
+    "rmat_edges", "rmat_graph", "structured_graph",
+    "sample_fanout", "padded_sizes",
+    "make_lm_batch_fn", "make_sasrec_batch_fn", "make_candidates",
+]

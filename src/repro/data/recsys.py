@@ -1,0 +1,34 @@
+"""Synthetic SASRec data: user interaction sequences with next-item
+positives and sampled negatives (the paper's training regime), plus
+candidate-list generation for retrieval scoring."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sasrec_batch_fn(vocab: int, batch: int, seq_len: int):
+    """Returns make_batch(step) → {seq, pos, neg} (0 = padding item)."""
+
+    def make_batch(step: int):
+        k = jax.random.PRNGKey(step)
+        k1, k2, k3 = jax.random.split(k, 3)
+        seq = jax.random.randint(k1, (batch, seq_len), 1, vocab)
+        # next-item target: a deterministic drift in item space (learnable)
+        pos = (seq * 31 + 7) % (vocab - 1) + 1
+        neg = jax.random.randint(k3, (batch, seq_len), 1, vocab)
+        # zero-pad a random prefix per row (variable-length histories)
+        cut = jax.random.randint(k2, (batch, 1), 0, seq_len // 2)
+        idx = jnp.arange(seq_len)[None, :]
+        mask = idx >= cut
+        return {
+            "seq": jnp.where(mask, seq, 0),
+            "pos": jnp.where(mask, pos, 0),
+            "neg": jnp.where(mask, neg, 0),
+        }
+
+    return make_batch
+
+
+def make_candidates(key, batch: int, n_candidates: int, vocab: int):
+    return jax.random.randint(key, (batch, n_candidates), 0, vocab)

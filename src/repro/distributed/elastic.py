@@ -1,0 +1,43 @@
+"""Elastic scaling: re-carve the mesh from the live device set and restore
+state onto it.
+
+Because every sharding in the system is a PartitionSpec over *named* axes
+(never device ids), shrinking 512 → 448 chips is: carve a new mesh, rebuild
+NamedShardings from the same logical rules, restore the latest checkpoint
+with device_put.  The checkpoint format is host-count independent
+(see checkpoint/ckpt.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..checkpoint.ckpt import restore_latest
+from .shardings import axis_rules, spec_tree
+
+
+def carve_mesh(n_devices: int | None = None, *, max_model: int = 16, devices=None):
+    """Pick a (data, model) factorization for the live device count: model =
+    largest power-of-two divisor ≤ max_model (TP wants the fast axis),
+    data = rest."""
+    devices = devices if devices is not None else jax.devices()
+    n = n_devices or len(devices)
+    model = 1
+    while model * 2 <= max_model and n % (model * 2) == 0:
+        model *= 2
+    data = n // model
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def elastic_restore(ckpt_dir: str, example_tree, logical_tree, rules, mesh):
+    """Restore the latest checkpoint onto a (possibly different) mesh."""
+    from jax.sharding import NamedSharding
+
+    with axis_rules(rules, mesh):
+        specs = spec_tree(logical_tree)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    return restore_latest(ckpt_dir, example_tree, shardings=shardings)

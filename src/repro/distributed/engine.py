@@ -1,0 +1,128 @@
+"""Edge-partitioned distributed graph engine (shard_map).
+
+The Sage NUMA insight at pod scale, inverted for HBM capacity: the immutable
+edge blocks are *sharded* as contiguous ranges across every chip; the O(n)
+vertex state is *replicated* and combined with one psum/pmax/pmin per
+edgeMap round.  Cross-chip traffic per round is O(n) words — never O(m) —
+which is the PSAM small-memory bound expressed as a communication bound.
+
+The pod axis adds a second tier: each pod holds a full copy of its edge
+shard range assignment, so cross-pod traffic is also only the O(n) vertex
+reduction (the paper's "no cross-socket edge reads" rule, §5.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def distributed_vertex_reduce(
+    mesh, *, n: int, monoid: str = "sum", mode: str = "flat", state_dtype=None
+):
+    """Build a shard_map'd function: (block_dst (NB,FB), block_w, block_src,
+    x (n,)) → out (n,) — out[v] = monoid over active slots with src-owner v.
+
+    Blocks are sharded over every mesh axis; x and the output are replicated.
+
+    ``mode``:
+      flat         — psum the full O(n) vector over every axis (baseline)
+      hierarchical — reduce-scatter along the fast axis first, psum the 1/k
+                     shard across the remaining axes, then all-gather: wire
+                     bytes on the slow (data/pod) axes drop by the fast-axis
+                     width (§Perf hillclimb C)
+    ``state_dtype``: reduce in a narrower dtype (e.g. bf16) — the graph-engine
+    analogue of gradient compression.
+    """
+    axes = _all_axes(mesh)
+    spec_blocks = P(axes)
+    spec_rep = P()
+    fast = axes[-1]
+    slow = axes[:-1]
+
+    def local(block_dst, block_w, block_src, x):
+        mask = block_dst < n
+        safe = jnp.where(mask, block_dst, 0)
+        xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(block_dst.shape)
+        contrib = jnp.where(mask, xv * block_w, 0.0)
+        per_block = jnp.sum(contrib, axis=1)
+        out = jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]
+        if state_dtype is not None:
+            out = out.astype(state_dtype)
+        if mode == "hierarchical" and len(axes) > 1:
+            k = mesh.shape[fast]
+            pad = (-n) % k
+            shard = jax.lax.psum_scatter(
+                jnp.pad(out, (0, pad)), fast, scatter_dimension=0, tiled=True
+            )
+            for ax in slow:
+                shard = jax.lax.psum(shard, ax)
+            out = jax.lax.all_gather(shard, fast, axis=0, tiled=True)[:n]
+        else:
+            for ax in axes:
+                out = jax.lax.psum(out, ax)
+        return out.astype(x.dtype)
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec_blocks, spec_blocks, spec_blocks, spec_rep),
+        out_specs=spec_rep,
+        # the hierarchical path's all_gather(psum_scatter(...)) is replicated
+        # over the fast axis but the static replication check can't prove it
+        check_rep=False,
+    )
+
+
+def distributed_pagerank_step(
+    mesh, *, n: int, damping: float = 0.85, mode: str = "flat", state_dtype=None
+):
+    """One PageRank iteration over pod-scale sharded edges."""
+    reduce_fn = distributed_vertex_reduce(mesh, n=n, mode=mode, state_dtype=state_dtype)
+
+    def step(block_dst, block_w, block_src, pr, inv_deg):
+        contrib = pr * inv_deg
+        s = reduce_fn(block_dst, block_w, block_src, contrib)
+        return (1.0 - damping) / n + damping * s
+
+    return step
+
+
+def distributed_frontier_min(mesh, *, n: int):
+    """BFS/label-prop round: out[v] = min over incoming active edges of
+    x[src]; frontier-masked.  Blocks sharded, state replicated, pmin."""
+    axes = _all_axes(mesh)
+
+    def local(block_dst, block_src, x, frontier):
+        big = jnp.int32(2**31 - 1)
+        in_f = jnp.take(frontier, jnp.minimum(block_src, n - 1)) & (block_src < n)
+        xv = jnp.take(x, jnp.minimum(block_src, n - 1))
+        vals = jnp.where(in_f, xv, big)[:, None]
+        vals = jnp.broadcast_to(vals, block_dst.shape)
+        ids = jnp.where(block_dst < n, block_dst, n).reshape(-1)
+        out = jax.ops.segment_min(
+            jnp.where(block_dst < n, vals, big).reshape(-1), ids, num_segments=n + 1
+        )[:n]
+        for ax in axes:
+            out = jax.lax.pmin(out, ax)
+        return out
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(_all_axes(mesh)), P(_all_axes(mesh)), P(), P()),
+        out_specs=P(),
+    )
+
+
+def shard_blocks_for_mesh(mesh, num_blocks: int) -> int:
+    """Blocks must divide the total mesh size; returns padded block count."""
+    total = mesh.devices.size
+    return -(-num_blocks // total) * total

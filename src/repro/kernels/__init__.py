@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the PSAM engine's compute hot-spots.
+
+Each kernel directory contains:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper
+  ref.py    — pure-jnp oracle (tests assert allclose against it)
+"""
+from .decode_attention import decode_attention
+from .edge_block_spmv import edge_block_spmv, spmv_vertex
+from .embedding_bag import embedding_bag
+from .filter_pack import filter_pack
+
+__all__ = ["edge_block_spmv", "spmv_vertex", "embedding_bag", "filter_pack", "decode_attention"]

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the decode-attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+
+
+def decode_attention(
+    q: jnp.ndarray,    # (B, Hq, D)
+    k: jnp.ndarray,    # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    pos: jnp.ndarray,  # (B,) valid cache lengths
+    *,
+    interpret: bool = True,
+    tile_batch: int = 4,
+    seq_tile: int = 128,
+) -> jnp.ndarray:
+    """GQA: q heads grouped onto kv heads by repetition before the kernel."""
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hq != Hkv:
+        assert Hq % Hkv == 0
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return decode_attention_pallas(
+        q, k, v, pos, tile_batch=tile_batch, seq_tile=seq_tile, interpret=interpret
+    )

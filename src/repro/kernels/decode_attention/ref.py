@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos):
+    B, H, D = q.shape
+    S = k.shape[1]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    mask = jnp.arange(S)[None, None, :] < pos[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

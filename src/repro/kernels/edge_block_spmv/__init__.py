@@ -1,0 +1,4 @@
+from .ops import edge_block_spmv, spmv_vertex
+from .ref import edge_block_spmv_ref, spmv_vertex_ref
+
+__all__ = ["edge_block_spmv", "spmv_vertex", "edge_block_spmv_ref", "spmv_vertex_ref"]

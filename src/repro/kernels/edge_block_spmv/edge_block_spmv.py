@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: blocked-CSR masked SpMV — the dense edgeMap hot loop.
+
+PSAM → TPU mapping: the vertex state ``x`` (small memory) is VMEM-resident
+across the whole grid; the edge blocks (large memory) are streamed
+HBM→VMEM tile by tile and *never written*.  The graphFilter bits ride along
+as one uint32 word per 32 edges and are unpacked with vector shifts —
+the TPU-idiomatic equivalent of the paper's TZCNT/BLSR word loop (§4.2.3).
+
+Grid: one program per tile of TB edge-blocks.  Each program produces the
+per-block partial sums; the (cheap, O(#blocks)) reduction onto vertices by
+``block_src`` happens outside the kernel (see ops.py) — scatter-free kernel
+bodies keep the MXU/VPU pipeline free of serializing accumulations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
+
+
+def _kernel(x_ref, dst_ref, w_ref, bits_ref, out_ref, *, n: int):
+    dst = dst_ref[...]            # (TB, FB) int32 — streamed edge block tile
+    w = w_ref[...]                # (TB, FB)
+    x = x_ref[...]                # (n_pad,)  — PSAM small memory, VMEM-resident
+    bits = bits_ref[...]          # (TB, FB//32) uint32 — graphFilter view
+
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    act = ((bits[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
+    act = act.reshape(dst.shape)  # (TB, FB) bool
+
+    mask = (dst < jnp.int32(n)) & act
+    safe = jnp.where(mask, dst, 0)
+    xv = x[safe]                  # gather from VMEM-resident vertex state
+    contrib = jnp.where(mask, xv * w, jnp.zeros((), x.dtype))
+    out_ref[...] = jnp.sum(contrib, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "tile_blocks", "interpret")
+)
+def edge_block_spmv_pallas(
+    x: jnp.ndarray,        # (n_pad,) vertex values (padded to n+1 at least)
+    block_dst: jnp.ndarray,  # (NB, FB) int32
+    block_w: jnp.ndarray,    # (NB, FB)
+    bits: jnp.ndarray,       # (NB, FB//32) uint32
+    *,
+    n: int,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-block partial sums: out[b] = Σ_slot active(b,slot)·w·x[dst]."""
+    NB, FB = block_dst.shape
+    TB = min(tile_blocks, NB)
+    pad = (-NB) % TB
+    if pad:
+        block_dst = jnp.pad(block_dst, ((0, pad), (0, 0)), constant_values=n)
+        block_w = jnp.pad(block_w, ((0, pad), (0, 0)))
+        bits = jnp.pad(bits, ((0, pad), (0, 0)))
+    nb_pad = NB + pad
+    grid = (nb_pad // TB,)
+    W = FB // 32
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),       # x stays resident
+            pl.BlockSpec((TB, FB), lambda i: (i, 0)),           # edge tile stream
+            pl.BlockSpec((TB, FB), lambda i: (i, 0)),
+            pl.BlockSpec((TB, W), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad,), x.dtype),
+        interpret=interpret,
+    )(x, block_dst, block_w, bits)
+    return out[:NB]

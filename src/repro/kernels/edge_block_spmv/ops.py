@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the edge_block_spmv Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.csr import CSRGraph
+from ...core.graph_filter import GraphFilter
+from .edge_block_spmv import edge_block_spmv_pallas
+
+
+def edge_block_spmv(
+    x, block_dst, block_w, bits, *, n: int, interpret: bool = True, tile_blocks: int = 8
+):
+    return edge_block_spmv_pallas(
+        x, block_dst, block_w, bits, n=n, interpret=interpret, tile_blocks=tile_blocks
+    )
+
+
+def spmv_vertex(
+    g: CSRGraph,
+    x: jnp.ndarray,
+    f: GraphFilter | None = None,
+    *,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+) -> jnp.ndarray:
+    """out[v] = Σ_{(v,u) active} w_vu · x[u] — PageRank/GNN aggregation step.
+
+    Uses the Pallas kernel for the gather-heavy per-block sums, then a cheap
+    O(#blocks) segment reduction by block owner.
+    """
+    if f is not None:
+        bits = f.bits
+    else:
+        # all valid edges active
+        from ...core.graph_filter import make_filter
+
+        bits = make_filter(g).bits
+    per_block = edge_block_spmv_pallas(
+        x,
+        g.block_dst,
+        g.block_w,
+        bits,
+        n=g.n,
+        interpret=interpret,
+        tile_blocks=tile_blocks,
+    )
+    return jax.ops.segment_sum(per_block, g.block_src, num_segments=g.n + 1)[: g.n]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the edge_block_spmv kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_block_spmv_ref(x, block_dst, block_w, bits, *, n: int):
+    """Per-block partial sums, computed with plain jnp ops."""
+    NB, FB = block_dst.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    act = ((bits[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
+    act = act.reshape(NB, FB)
+    mask = (block_dst < jnp.int32(n)) & act
+    safe = jnp.where(mask, block_dst, 0)
+    xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(NB, FB)
+    contrib = jnp.where(mask, xv * block_w, jnp.zeros((), x.dtype))
+    return jnp.sum(contrib, axis=1)
+
+
+def spmv_vertex_ref(x, block_dst, block_w, bits, block_src, *, n: int):
+    per_block = edge_block_spmv_ref(x, block_dst, block_w, bits, n=n)
+    return jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]

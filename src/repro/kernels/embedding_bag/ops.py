@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the EmbeddingBag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .embedding_bag import embedding_bag_pallas
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    weights: jnp.ndarray | None = None,
+    *,
+    mode: str = "sum",
+    interpret: bool = True,
+    tile_batch: int = 64,
+) -> jnp.ndarray:
+    """EmbeddingBag with sum/mean modes over fixed-width (-1 padded) bags."""
+    if weights is None:
+        weights = jnp.ones(indices.shape, table.dtype)
+    out = embedding_bag_pallas(
+        table, indices, weights, interpret=interpret, tile_batch=tile_batch
+    )
+    if mode == "mean":
+        cnt = jnp.sum((indices >= 0).astype(table.dtype), axis=1, keepdims=True)
+        out = out / jnp.maximum(cnt, 1)
+    elif mode != "sum":
+        raise ValueError(mode)
+    return out

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for embedding_bag: take + masked weighted sum."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights):
+    V, D = table.shape
+    valid = (indices >= 0) & (indices < V)
+    safe = jnp.where(valid, indices, 0)
+    vecs = jnp.take(table, safe.reshape(-1), axis=0).reshape(*indices.shape, D)
+    w = jnp.where(valid, weights, jnp.zeros((), weights.dtype))
+    return jnp.sum(vecs * w[..., None].astype(vecs.dtype), axis=1)

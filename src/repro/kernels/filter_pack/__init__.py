@@ -1,0 +1,4 @@
+from .ops import filter_pack
+from .ref import filter_pack_ref
+
+__all__ = ["filter_pack", "filter_pack_ref"]

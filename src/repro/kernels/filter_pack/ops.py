@@ -1,0 +1,37 @@
+"""jit'd public wrapper: graphFilter pack through the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.csr import CSRGraph
+from ...core.graph_filter import GraphFilter
+from .filter_pack import filter_pack_pallas
+
+
+def filter_pack(
+    g: CSRGraph,
+    f: GraphFilter,
+    subset_mask: jnp.ndarray,
+    keep_pred: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+) -> GraphFilter:
+    """Kernel-backed equivalent of ``core.graph_filter.pack_vertices``
+    (without dirty-bit tracking, which callers that use this path manage
+    themselves)."""
+    keep = keep_pred.reshape(g.num_blocks, g.block_size)
+    subset_blk = jnp.take(subset_mask, g.block_src, mode="fill", fill_value=False)
+    new_bits, cnt = filter_pack_pallas(
+        f.bits, keep, subset_blk, interpret=interpret, tile_blocks=tile_blocks
+    )
+    active_deg = jax.ops.segment_sum(cnt, g.block_src, num_segments=g.n + 1)[: g.n]
+    return GraphFilter(
+        bits=new_bits,
+        active_deg=active_deg,
+        dirty=f.dirty,
+        n=f.n,
+        num_blocks=f.num_blocks,
+        block_size=f.block_size,
+    )

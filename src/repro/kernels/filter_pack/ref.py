@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the filter_pack kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.primitives import popcount32
+
+
+def filter_pack_ref(bits, keep, subset):
+    NB, W = bits.shape
+    FB = keep.shape[1]
+    k3 = keep.reshape(NB, W, FB // W)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    keep_words = jnp.sum(
+        jnp.where(k3, weights[None, None, :], jnp.uint32(0)), axis=-1, dtype=jnp.uint32
+    )
+    new_bits = jnp.where(subset[:, None], bits & keep_words, bits)
+    cnt = jnp.sum(popcount32(new_bits), axis=1)
+    return new_bits, cnt

@@ -1,0 +1,183 @@
+from . import dryrun  # noqa: F401  — sets XLA_FLAGS=512 devices FIRST
+
+"""§Perf hillclimb driver: compile named optimization variants of the three
+chosen (arch × shape) pairs and record their roofline terms next to the
+baselines.
+
+    PYTHONPATH=src python -m repro.launch.perf --variant all
+
+Variants (hypothesis → change; before/after lands in EXPERIMENTS.md §Perf):
+
+A. mistral-large-123b × train_4k  (memory-dominated, peak 9.55 GB/dev)
+   a_sp       — sequence-parallel residual (LM_RULES_SP): per-layer saved
+                activations shard 16× over 'model'
+   a_sp_dots  — + remat policy 'dots': save matmul outputs, recompute only
+                cheap elementwise ops (trades HBM bytes for fewer flops)
+   a_dots     — remat policy alone (ablation)
+
+B. equiformer-v2 × ogb_products  (collective-dominated, 59.6 s)
+   b_tp       — GNN_RULES_TP: edges shard (pod,data) only, hidden dim shards
+                'model' → node-aggregation all-reduce bytes ÷16, message
+                tensors never cross the model axis
+
+C. sage-graph engine  (the paper's own workload; collective-bound rounds)
+   c_hier     — hierarchical reduction: reduce-scatter on 'model', psum the
+                1/16 shard on 'data'/'pod', all-gather back
+   c_hier_bf16— + bf16 vertex state on the wire (graph-engine analogue of
+                gradient compression)
+
+D. runnability fix (long_500k peak 24–27 GB > 16 GB HBM)
+   d_long_v2  — LM_DECODE_LONG_RULES_V2: cache sharded on head_dim/kv_lora
+                instead of cache_seq, so dynamic_update_slice stays local
+"""
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from ..configs import all_cells
+from ..distributed.shardings import (
+    GNN_RULES_TP,
+    LM_DECODE_LONG_RULES_V2,
+    LM_RULES_SP,
+)
+from .dryrun import RESULTS_DIR, run_cell, run_graph_engine
+from .mesh import make_production_mesh
+
+MESHES = {
+    "single_pod_16x16": lambda: make_production_mesh(multi_pod=False),
+    "multi_pod_2x16x16": lambda: make_production_mesh(multi_pod=True),
+}
+
+
+def _variant_cell(cell, *, rules=None, shape_suffix="", **cfg_updates):
+    cfg = (
+        dataclasses.replace(cell.model_cfg, **cfg_updates)
+        if cfg_updates
+        else cell.model_cfg
+    )
+    return dataclasses.replace(
+        cell,
+        model_cfg=cfg,
+        rules=rules or cell.rules,
+        shape=cell.shape + shape_suffix,
+    )
+
+
+def variants():
+    cells = all_cells()
+    out = {}
+    mt = cells[("mistral-large-123b", "train_4k")]
+    out["a_sp"] = _variant_cell(mt, rules=LM_RULES_SP, shape_suffix="+sp")
+    out["a_dots"] = _variant_cell(mt, shape_suffix="+dots", remat_policy="dots")
+    out["a_sp_dots"] = _variant_cell(
+        mt, rules=LM_RULES_SP, shape_suffix="+sp_dots", remat_policy="dots"
+    )
+    out["a_mp"] = _variant_cell(mt, shape_suffix="+mp", attn_mixed_precision=True)
+    out["a_mp_sp"] = _variant_cell(
+        mt, rules=LM_RULES_SP, shape_suffix="+mp_sp", attn_mixed_precision=True
+    )
+    out["a_cbs"] = _variant_cell(mt, shape_suffix="+cbs", attn_causal_skip=True)
+    out["a_cbs_mp"] = _variant_cell(
+        mt, shape_suffix="+cbs_mp", attn_causal_skip=True,
+        attn_mixed_precision=True,
+    )
+    mp32 = cells[("mistral-large-123b", "prefill_32k")]
+    out["a_prefill_cbs_mp"] = _variant_cell(
+        mp32, shape_suffix="+cbs_mp", attn_causal_skip=True,
+        attn_mixed_precision=True,
+    )
+    eq = cells[("equiformer-v2", "ogb_products")]
+    out["b_tp"] = _variant_cell(eq, rules=GNN_RULES_TP, shape_suffix="+tp")
+    out["b_compact"] = _variant_cell(
+        eq, shape_suffix="+compact", compact_messages=True
+    )
+    for arch in ["qwen1.5-4b", "mistral-large-123b"]:
+        lc = cells[(arch, "long_500k")]
+        out[f"d_long_v2_{arch}"] = _variant_cell(
+            lc, rules=LM_DECODE_LONG_RULES_V2, shape_suffix="+v2"
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--mesh", default="single_pod_16x16", choices=list(MESHES) + ["both"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    mesh_names = list(MESHES) if args.mesh == "both" else [args.mesh]
+    want = None if args.variant == "all" else set(args.variant.split(","))
+
+    for mesh_name in mesh_names:
+        mesh = MESHES[mesh_name]()
+        for name, cell in variants().items():
+            if want and name not in want:
+                continue
+            run_cell(cell, mesh, mesh_name, args.out)
+        if want is None or "c_hier" in want or "c_hier_bf16" in want:
+            _run_engine_variants(mesh, mesh_name, args.out)
+
+
+def _run_engine_variants(mesh, mesh_name, out_dir):
+    import time
+
+    import jax.numpy as jnp
+
+    from ..distributed.engine import distributed_pagerank_step
+    from .dryrun import collective_bytes_from_hlo
+
+    n, NB, FB = 1 << 20, 1 << 18, 128
+    S = jax.ShapeDtypeStruct
+    specs = (
+        S((NB, FB), jnp.int32),
+        S((NB, FB), jnp.float32),
+        S((NB,), jnp.int32),
+        S((n,), jnp.float32),
+        S((n,), jnp.float32),
+    )
+    for vname, kwargs in [
+        ("hier", dict(mode="hierarchical")),
+        ("hier_bf16", dict(mode="hierarchical", state_dtype=jnp.bfloat16)),
+        ("flat_bf16", dict(state_dtype=jnp.bfloat16)),
+    ]:
+        key = f"sage-graph__pagerank_round_{vname}__{mesh_name}"
+        path = os.path.join(out_dir, key + ".json")
+        if os.path.exists(path):
+            continue
+        t0 = time.time()
+        rec = {"arch": "sage-graph", "shape": f"pagerank_round_{vname}",
+               "mesh": mesh_name, "kind": "graph", "family": "graph",
+               "notes": str(kwargs), "model_flops": 2.0 * NB * FB}
+        try:
+            fn = distributed_pagerank_step(mesh, n=n, **kwargs)
+            with jax.set_mesh(mesh):
+                compiled = jax.jit(fn).lower(*specs).compile()
+            cost = compiled.cost_analysis()
+            mem = compiled.memory_analysis()
+            coll = collective_bytes_from_hlo(compiled.as_text(), 1)
+            rec.update(
+                ok=True, n_devices=int(mesh.devices.size),
+                flops_per_device=float(cost.get("flops", -1)),
+                flops_raw_per_device=float(cost.get("flops", -1)),
+                bytes_per_device=float(cost.get("bytes accessed", -1)),
+                bytes_raw_per_device=float(cost.get("bytes accessed", -1)),
+                cost_debug={}, collective_bytes=coll,
+                memory={"peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                        "temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
+            )
+        except Exception as e:  # noqa: BLE001
+            rec.update(ok=False, error=f"{type(e).__name__}: {e}")
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        print(f"[{'OK ' if rec.get('ok') else 'FAIL'}] {key} ({time.time()-t0:.1f}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Per-cell step builders: turn a Cell into (step_fn, input_specs,
+input_shardings) ready for ``jax.jit(...).lower(...).compile()``.
+
+Train cells lower the FULL train step (loss → grad → clip → AdamW), not just
+the forward pass; serve cells lower prefill/decode/scoring exactly as the
+serving path runs them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.common import Cell
+from ..distributed.shardings import axis_rules, spec_tree
+from ..optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from ..optim.adamw import state_logical_specs
+
+
+def _named(mesh, spec_pytree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_pytree)
+
+
+def build_step(cell: Cell, mesh):
+    """Returns (fn, arg_specs tuple, in_shardings tuple, out_shardings).
+
+    out_shardings is pinned explicitly: without it XLA's propagation may
+    REPLICATE large outputs (observed: decode caches materializing at full
+    size per device, 27 GB > HBM on long_500k) — §Perf iteration D2."""
+    mod = _module_for(cell)
+    cfg = cell.model_cfg
+
+    with axis_rules(cell.rules, mesh):
+        p_logical = mod.param_specs(cfg)
+        p_spec = spec_tree(p_logical)
+        batch_spec = jax.tree.map(
+            lambda names: spec_tree(names) if isinstance(names, tuple) else names,
+            cell.batch_logical,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+    params_shape = jax.eval_shape(lambda: mod.init(jax.random.PRNGKey(0), cfg))
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        with axis_rules(cell.rules, mesh):
+            o_spec = spec_tree(state_logical_specs(p_logical))
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+
+        def fn(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(p, batch, cfg)
+            )(params)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+        specs = (params_shape, opt_shape, cell.batch_specs)
+        shardings = (
+            _named(mesh, p_spec),
+            _named(mesh, o_spec),
+            _named(mesh, batch_spec),
+        )
+        rep = NamedSharding(mesh, P())
+        out_sh = (
+            _named(mesh, p_spec),
+            _named(mesh, o_spec),
+            {"loss": rep, "grad_norm": rep},
+        )
+        return fn, specs, shardings, out_sh
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return mod.prefill(params, batch["tokens"], cfg)
+
+        with axis_rules(cell.rules, mesh):
+            c_spec = spec_tree(mod.cache_specs(cfg))
+            logits_spec = spec_tree({"l": ("batch", "vocab")})["l"]
+        return (
+            fn,
+            (params_shape, cell.batch_specs),
+            (_named(mesh, p_spec), _named(mesh, batch_spec)),
+            (NamedSharding(mesh, logits_spec), _named(mesh, c_spec)),
+        )
+
+    if cell.kind == "decode":
+        seq = cell.batch_specs["tokens"].shape  # (B, 1)
+        B = seq[0]
+        max_seq = cfg.kv_block  # decode cells set kv_block = cache length
+        cache_shape = jax.eval_shape(
+            lambda: mod.make_cache(cfg, B, max_seq)
+        )
+        with axis_rules(cell.rules, mesh):
+            c_spec = spec_tree(mod.cache_specs(cfg))
+
+        def fn(params, caches, batch):
+            return mod.decode_step(params, caches, batch["tokens"], batch["pos"], cfg)
+
+        with axis_rules(cell.rules, mesh):
+            logits_spec = spec_tree({"l": ("batch", "vocab")})["l"]
+        return (
+            fn,
+            (params_shape, cache_shape, cell.batch_specs),
+            (_named(mesh, p_spec), _named(mesh, c_spec), _named(mesh, batch_spec)),
+            (NamedSharding(mesh, logits_spec), _named(mesh, c_spec)),
+        )
+
+    if cell.kind == "serve":  # sasrec full-catalog top-k
+        def fn(params, batch):
+            scores = mod.serve_scores(params, batch, cfg)
+            v, i = jax.lax.top_k(scores, 100)
+            return {"values": v, "indices": i}
+
+        with axis_rules(cell.rules, mesh):
+            out_spec = spec_tree({"o": ("batch", None)})["o"]
+        osh = NamedSharding(mesh, out_spec)
+        return (
+            fn,
+            (params_shape, cell.batch_specs),
+            (_named(mesh, p_spec), _named(mesh, batch_spec)),
+            {"values": osh, "indices": osh},
+        )
+
+    if cell.kind == "retrieval":
+        def fn(params, batch):
+            return mod.retrieval_scores(params, batch, cfg)
+
+        with axis_rules(cell.rules, mesh):
+            out_spec = spec_tree({"o": ("batch", "candidates")})["o"]
+        return (
+            fn,
+            (params_shape, cell.batch_specs),
+            (_named(mesh, p_spec), _named(mesh, batch_spec)),
+            NamedSharding(mesh, out_spec),
+        )
+
+    raise ValueError(cell.kind)
+
+
+def _module_for(cell: Cell):
+    if cell.family == "lm":
+        from ..models import transformer_lm
+
+        return transformer_lm
+    if cell.family == "recsys":
+        from ..models import sasrec
+
+        return sasrec
+    # gnn
+    from ..models.gnn import dimenet, equiformer_v2, gin, pna
+
+    return {
+        "pna": pna,
+        "dimenet": dimenet,
+        "equiformer-v2": equiformer_v2,
+        "gin-tu": gin,
+    }[cell.arch]

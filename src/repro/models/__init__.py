@@ -1,0 +1,2 @@
+from . import sasrec, transformer_lm
+from .gnn import dimenet, equiformer_v2, gin, pna

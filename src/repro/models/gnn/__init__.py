@@ -1,0 +1,5 @@
+from . import dimenet, equiformer_v2, gin, pna
+from .aggregate import (
+    degrees, gather_src, scatter_max, scatter_mean, scatter_min,
+    scatter_std, scatter_sum, segment_softmax,
+)

@@ -1,0 +1,58 @@
+"""GNN message-passing primitives — the PSAM edgeMap applied to features.
+
+The edge index arrays are the immutable large-memory structure (padded with
+the sentinel node id N); per-node features are the O(n·d) small-memory
+state.  JAX has no CSR SpMM: message passing IS ``jnp.take`` +
+``jax.ops.segment_*`` over an edge list, exactly the engine's dense edgeMap
+with a feature axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_src(x: jnp.ndarray, src: jnp.ndarray, fill=0.0) -> jnp.ndarray:
+    return jnp.take(x, src, axis=0, mode="fill", fill_value=fill)
+
+
+def scatter_sum(vals: jnp.ndarray, dst: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(vals, dst, num_segments=n + 1)[:n]
+
+
+def scatter_mean(vals, dst, n, *, deg=None):
+    s = scatter_sum(vals, dst, n)
+    if deg is None:
+        deg = scatter_sum(jnp.ones(vals.shape[:1], jnp.float32), dst, n)
+    d = jnp.maximum(deg, 1.0)
+    return s / d.reshape((-1,) + (1,) * (vals.ndim - 1))
+
+
+def scatter_max(vals, dst, n, *, neutral=-1e30):
+    out = jax.ops.segment_max(vals, dst, num_segments=n + 1)[:n]
+    return jnp.maximum(out, neutral)
+
+
+def scatter_min(vals, dst, n, *, neutral=1e30):
+    out = jax.ops.segment_min(vals, dst, num_segments=n + 1)[:n]
+    return jnp.minimum(out, neutral)
+
+
+def scatter_std(vals, dst, n, *, deg=None, eps=1e-5):
+    mu = scatter_mean(vals, dst, n, deg=deg)
+    mu2 = scatter_mean(vals * vals, dst, n, deg=deg)
+    return jnp.sqrt(jnp.maximum(mu2 - mu * mu, 0.0) + eps)
+
+
+def degrees(dst: jnp.ndarray, n: int) -> jnp.ndarray:
+    return scatter_sum(jnp.ones(dst.shape, jnp.float32), dst, n)
+
+
+def segment_softmax(scores: jnp.ndarray, dst: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Edge-softmax by destination (GAT/Equiformer attention)."""
+    mx = jax.ops.segment_max(scores, dst, num_segments=n + 1)[:n]
+    mx = jnp.take(mx, jnp.minimum(dst, n - 1), axis=0)
+    ex = jnp.exp(scores - jax.lax.stop_gradient(mx))
+    den = scatter_sum(ex, dst, n)
+    den = jnp.take(den, jnp.minimum(dst, n - 1), axis=0)
+    return ex / jnp.maximum(den, 1e-30)

@@ -1,0 +1,82 @@
+"""GIN — Graph Isomorphism Network [arXiv:1810.00826], TU-benchmark config:
+5 layers, d=64, sum aggregator, learnable ε."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...nn.mlp import init_mlp2, mlp2
+from .aggregate import gather_src, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 16
+    n_classes: int = 8
+    task: str = "graph"
+    n_graphs: int = 0
+
+
+def init(key, cfg: GINConfig):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = [
+        {
+            "mlp": init_mlp2(ks[i], d, 2 * d, d),
+            "eps": jnp.zeros(()),
+        }
+        for i in range(cfg.n_layers)
+    ]
+    return {
+        "encode": init_mlp2(ks[-2], cfg.d_in, d, d),
+        "layers": layers,
+        "head": init_mlp2(ks[-1], d * (cfg.n_layers + 1), d, cfg.n_classes),
+    }
+
+
+def forward(params, batch, cfg: GINConfig):
+    x = batch["node_feat"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = x.shape[0]
+    h = mlp2(params["encode"], x)
+    reps = [h]
+    for lp in params["layers"]:
+        agg = scatter_sum(gather_src(h, src), dst, n)
+        h = mlp2(lp["mlp"], (1.0 + lp["eps"]) * h + agg)
+        h = jax.nn.relu(h)
+        reps.append(h)
+    hcat = jnp.concatenate(reps, axis=-1)
+    if cfg.task == "graph":
+        gid = batch["node_graph"]
+        n_graphs = cfg.n_graphs
+        pooled = jax.ops.segment_sum(hcat, gid, num_segments=n_graphs + 1)[:n_graphs]
+        return mlp2(params["head"], pooled)
+    return mlp2(params["head"], hcat)
+
+
+def loss_fn(params, batch, cfg: GINConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    if cfg.n_classes == 1:  # regression head (molecule cells)
+        tgt = batch["graph_labels" if cfg.task == "graph" else "labels"]
+        return jnp.mean((logits[..., 0] - tgt.astype(jnp.float32)) ** 2)
+    labels = batch["graph_labels" if cfg.task == "graph" else "labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    return jnp.sum((lse - tgt) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def param_specs(cfg: GINConfig):
+    def mlp_spec():
+        return {"w1": (None, "hidden"), "b1": ("hidden",), "w2": ("hidden", None), "b2": (None,)}
+
+    return {
+        "encode": mlp_spec(),
+        "layers": [{"mlp": mlp_spec(), "eps": ()} for _ in range(cfg.n_layers)],
+        "head": mlp_spec(),
+    }

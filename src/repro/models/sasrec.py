@@ -1,0 +1,133 @@
+"""SASRec — Self-Attentive Sequential Recommendation [arXiv:1808.09781].
+
+Config: embed_dim=50, 2 blocks, 1 head, seq_len=50.  The item-embedding
+table is the huge sparse structure (PSAM large memory for serving: scored,
+never written); per-request state is O(seq·d).
+
+Entry points: init / loss_fn (BCE with sampled negatives, as in the paper) /
+serve_scores (full-catalog or candidate-list scoring — ``retrieval_cand``
+is one query against 10⁶ candidates as a sharded batched dot).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardings import constrain
+from ..nn.attention import gqa_attention
+from ..nn.norms import layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    vocab: int = 500_000          # item catalog (row-sharded at scale)
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dropout: float = 0.0          # inference-style determinism
+    kv_block: int = 64
+
+
+def init(key, cfg: SASRecConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        blocks.append(
+            {
+                "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+                "wq": jax.random.normal(kb[0], (d, d)) / jnp.sqrt(d),
+                "wk": jax.random.normal(kb[1], (d, d)) / jnp.sqrt(d),
+                "wv": jax.random.normal(kb[2], (d, d)) / jnp.sqrt(d),
+                "wo": jax.random.normal(kb[3], (d, d)) / jnp.sqrt(d),
+                "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+                "w1": jax.random.normal(kb[4], (d, d)) / jnp.sqrt(d),
+                "b1": jnp.zeros((d,)),
+                "w2": jax.random.normal(kb[5], (d, d)) / jnp.sqrt(d),
+                "b2": jnp.zeros((d,)),
+            }
+        )
+    return {
+        # row 0 is the padding item
+        "item_emb": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02,
+        "final_ln_s": jnp.ones((d,)), "final_ln_b": jnp.zeros((d,)),
+        "blocks": blocks,
+    }
+
+
+def encode(params, seq, cfg: SASRecConfig):
+    """seq: (B, L) item ids (0 = padding) → user states (B, L, d)."""
+    B, L = seq.shape
+    d = cfg.embed_dim
+    x = jnp.take(params["item_emb"], seq, axis=0, mode="fill", fill_value=0.0)
+    x = x * jnp.sqrt(float(d)) + params["pos_emb"][None, :L]
+    x = x * (seq > 0)[..., None]
+    x = constrain(x, "batch", "seq", "act_embed")
+    H = cfg.n_heads
+    for bp in params["blocks"]:
+        h = layer_norm(x, bp["ln1_s"], bp["ln1_b"])
+        q = (h @ bp["wq"]).reshape(B, L, H, d // H)
+        k = (h @ bp["wk"]).reshape(B, L, H, d // H)
+        v = (h @ bp["wv"]).reshape(B, L, H, d // H)
+        a = gqa_attention(q, k, v, causal=True, kv_block=cfg.kv_block)
+        x = x + a.reshape(B, L, d) @ bp["wo"]
+        h = layer_norm(x, bp["ln2_s"], bp["ln2_b"])
+        ff = jax.nn.relu(h @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+        x = (x + ff) * (seq > 0)[..., None]
+    return layer_norm(x, params["final_ln_s"], params["final_ln_b"])
+
+
+def loss_fn(params, batch, cfg: SASRecConfig):
+    """batch: seq (B,L), pos (B,L) next-item targets, neg (B,L) sampled
+    negatives; 0 = padding.  Paper's binary cross-entropy."""
+    h = encode(params, batch["seq"], cfg)  # (B, L, d)
+    pe = jnp.take(params["item_emb"], batch["pos"], axis=0, mode="fill", fill_value=0.0)
+    ne = jnp.take(params["item_emb"], batch["neg"], axis=0, mode="fill", fill_value=0.0)
+    ps = jnp.sum(h * pe, axis=-1).astype(jnp.float32)
+    ns = jnp.sum(h * ne, axis=-1).astype(jnp.float32)
+    mask = (batch["pos"] > 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(ps) + jax.nn.log_sigmoid(-ns)) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def serve_scores(params, batch, cfg: SASRecConfig):
+    """Full-catalog scoring: seq (B, L) → scores (B, vocab).
+    The catalog matmul shards over 'candidates' (model axis)."""
+    h = encode(params, batch["seq"], cfg)[:, -1]  # (B, d)
+    scores = h @ params["item_emb"].T
+    return constrain(scores, "batch", "candidates")
+
+
+def retrieval_scores(params, batch, cfg: SASRecConfig):
+    """One (or few) queries × explicit candidate list: seq (B, L),
+    candidates (B, NC) → (B, NC).  Batched dot, never a loop."""
+    h = encode(params, batch["seq"], cfg)[:, -1]  # (B, d)
+    ce = jnp.take(
+        params["item_emb"], batch["candidates"], axis=0, mode="fill", fill_value=0.0
+    )  # (B, NC, d)
+    ce = constrain(ce, "batch", "candidates", "embed")
+    return jnp.einsum("bd,bcd->bc", h, ce)
+
+
+def param_specs(cfg: SASRecConfig):
+    def block_spec():
+        return {
+            "ln1_s": (None,), "ln1_b": (None,),
+            "wq": (None, None), "wk": (None, None), "wv": (None, None), "wo": (None, None),
+            "ln2_s": (None,), "ln2_b": (None,),
+            "w1": (None, None), "b1": (None,),
+            "w2": (None, None), "b2": (None,),
+        }
+
+    return {
+        "item_emb": ("vocab_rows", "embed"),
+        "pos_emb": (None, None),
+        "final_ln_s": (None,), "final_ln_b": (None,),
+        "blocks": [block_spec() for _ in range(cfg.n_blocks)],
+    }

@@ -1,0 +1,496 @@
+"""Decoder-only transformer LM covering the five assigned LM archs:
+
+* dense GQA (mistral-large-123b, qwen2-1.5b, qwen1.5-4b — optional QKV bias)
+* MoE (dbrx-132b: 16e top-4; deepseek-v2-lite: 64e top-6 + 2 shared, MLA)
+* MLA latent attention (deepseek-v2-lite)
+
+Layers are scanned (stacked params) so the 88-layer mistral HLO stays
+compact; each block is wrapped in jax.checkpoint.  Attention is blockwise
+(never materializes S×S).  Exposed entry points:
+
+  init(key, cfg)                     → params
+  loss_fn(params, batch, cfg)        → scalar loss          (train_step)
+  prefill(params, tokens, cfg)       → (logits_last, cache) (serve prefill)
+  decode_step(params, cache, tok, pos, cfg) → (logits, cache)  (serve decode)
+  param_specs(cfg)                   → logical-axis tree for sharding
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.shardings import constrain
+from ..nn.attention import gqa_attention
+from ..nn.moe import MoECfg, init_moe, moe_ffn
+from ..nn.mlp import init_swiglu, swiglu
+from ..nn.norms import rms_norm
+from ..nn.rotary import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None
+    # attention flavor
+    attn: str = "gqa"  # "gqa" | "mla"
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # MoE
+    moe: bool = False
+    num_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # numerics
+    dtype: str = "bfloat16"
+    # attention kv block for blockwise softmax
+    kv_block: int = 1024
+    # unroll layers as a Python loop instead of lax.scan — used by the
+    # dry-run's FLOP-costing variants (XLA cost_analysis counts while-loop
+    # bodies once; an unrolled 1- vs 2-layer pair isolates per-layer cost)
+    unroll: bool = False
+    # MXU-native attention einsums: bf16 operands, fp32 accumulation
+    attn_mixed_precision: bool = False
+    # flash-style causal block skipping: only visit visible kv blocks
+    attn_causal_skip: bool = False
+    # remat policy inside the layer scan: "full" recomputes everything,
+    # "dots" saves matmul outputs (checkpoint_dots) — §Perf lever trading
+    # HBM bytes for recompute FLOPs
+    remat_policy: str = "full"
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_dim(self):
+        if self.attn == "mla":
+            return self.n_heads * (self.nope_head_dim + self.rope_head_dim)
+        return self.n_heads * self.d_head
+
+    def moe_cfg(self) -> MoECfg:
+        return MoECfg(
+            num_experts=self.num_experts,
+            top_k=self.top_k,
+            d_model=self.d_model,
+            d_ff_expert=self.d_ff_expert,
+            n_shared=self.n_shared,
+            capacity_factor=self.capacity_factor,
+        )
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _init_attn(key, cfg: LMConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    s = 0.02
+    if cfg.attn == "mla":
+        dn, dr, dv, r = (
+            cfg.nope_head_dim,
+            cfg.rope_head_dim,
+            cfg.v_head_dim,
+            cfg.kv_lora_rank,
+        )
+        H = cfg.n_heads
+        return {
+            "wq": jax.random.normal(ks[0], (d, H * (dn + dr)), dtype) * s,
+            "w_dkv": jax.random.normal(ks[1], (d, r + dr), dtype) * s,
+            "kv_norm": jnp.ones((r,), dtype),
+            "w_uk": jax.random.normal(ks[2], (r, H * dn), dtype) * s,
+            "w_uv": jax.random.normal(ks[3], (r, H * dv), dtype) * s,
+            "wo": jax.random.normal(ks[4], (H * dv, d), dtype) * s,
+        }
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * Dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, Hkv * Dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, Hkv * Dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H * Dh, d), dtype) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * Dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * Dh,), dtype)
+    return p
+
+
+def _init_block(key, cfg: LMConfig, dtype, moe_block: bool):
+    ka, kf = jax.random.split(key)
+    p = {
+        "pre_attn": jnp.ones((cfg.d_model,), dtype),
+        "pre_ffn": jnp.ones((cfg.d_model,), dtype),
+        "attn": _init_attn(ka, cfg, dtype),
+    }
+    if moe_block:
+        p["moe"] = init_moe(kf, cfg.moe_cfg(), dtype)
+    else:
+        p["ffn"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init(key, cfg: LMConfig):
+    dtype = cfg.activation_dtype
+    k_emb, k_layers, k_dense = jax.random.split(key, 3)
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    layer_keys = jax.random.split(k_layers, n_moe_layers)
+    layers = jax.vmap(
+        lambda k: _init_block(k, cfg, dtype, moe_block=cfg.moe)
+    )(layer_keys)
+    params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+    if cfg.moe and cfg.first_dense_layers:
+        dk = jax.random.split(k_dense, cfg.first_dense_layers)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_block(k, cfg, dtype, moe_block=False)
+        )(dk)
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+def _attn_forward(p, x, cfg: LMConfig, positions, cache=None, pos=None):
+    """Returns (out, new_cache_entry).  cache entry:
+    GQA: {"k": (B,Smax,Hkv,Dh), "v": ...};  MLA: {"ckv": (B,Smax,r), "kr": (B,Smax,dr)}
+    """
+    B, S, d = x.shape
+    if cfg.attn == "mla":
+        H = cfg.n_heads
+        dn, dr, dv, r = (
+            cfg.nope_head_dim,
+            cfg.rope_head_dim,
+            cfg.v_head_dim,
+            cfg.kv_lora_rank,
+        )
+        q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        ckv_kr = x @ p["w_dkv"]
+        ckv, kr = ckv_kr[..., :r], ckv_kr[..., r:]
+        ckv = rms_norm(ckv, p["kv_norm"])
+        kr = apply_rope(kr, positions, cfg.rope_theta)
+        new_entry = {
+            "ckv": constrain(ckv, "batch", "cache_seq", "kv_lora"),
+            "kr": constrain(kr, "batch", "cache_seq", "head_dim"),
+        }
+        if cache is not None:
+            ckv = lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+            kr = lax.dynamic_update_slice(cache["kr"], kr, (0, pos, 0))
+            new_entry = {
+                "ckv": constrain(ckv, "batch", "cache_seq", "kv_lora"),
+                "kr": constrain(kr, "batch", "cache_seq", "head_dim"),
+            }
+        Skv = ckv.shape[1]
+        k_nope = (ckv @ p["w_uk"]).reshape(B, Skv, H, dn)
+        v = (ckv @ p["w_uv"]).reshape(B, Skv, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, Skv, H, dr))], axis=-1
+        )
+        qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qh = constrain(qh, "batch", "seq", "heads", "head_dim")
+        k = constrain(k, "batch", "seq", "heads", "head_dim")
+        v = constrain(v, "batch", "seq", "heads", "head_dim")
+        # pad v to match k head_dim for the shared block kernel, then slice
+        q_off = 0 if pos is None else pos
+        out = gqa_attention(
+            qh, k, v, causal=True, q_offset=q_off, kv_block=cfg.kv_block,
+            window=cfg.window, mixed=cfg.attn_mixed_precision,
+            causal_skip=cfg.attn_causal_skip,
+            unroll_kv=cfg.unroll,
+        )
+        out = out.reshape(B, S, H * dv)
+        return out @ p["wo"], new_entry
+
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    new_entry = {
+        "k": constrain(k, "batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": constrain(v, "batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    if cache is not None:
+        k = lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        v = lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        new_entry = {
+            "k": constrain(k, "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": constrain(v, "batch", "cache_seq", "kv_heads", "head_dim"),
+        }
+    q_off = 0 if pos is None else pos
+    out = gqa_attention(
+        q, k, v, causal=True, q_offset=q_off, kv_block=cfg.kv_block,
+        window=cfg.window, mixed=cfg.attn_mixed_precision,
+        causal_skip=cfg.attn_causal_skip,
+        unroll_kv=cfg.unroll,
+    )
+    out = out.reshape(B, S, H * Dh)
+    return out @ p["wo"], new_entry
+
+
+def _block(p, x, cfg: LMConfig, positions, moe_block: bool, cache=None, pos=None):
+    h = rms_norm(x, p["pre_attn"])
+    attn_out, new_entry = _attn_forward(p["attn"], h, cfg, positions, cache, pos)
+    x = x + attn_out
+    h = rms_norm(x, p["pre_ffn"])
+    if moe_block:
+        B, S, d = h.shape
+        ff = moe_ffn(p["moe"], h.reshape(B * S, d), cfg.moe_cfg()).reshape(B, S, d)
+    else:
+        ff = swiglu(p["ffn"], h)
+    x = x + ff
+    x = constrain(x, "batch", "res_seq", "act_embed")
+    return x, new_entry
+
+
+def _scan_blocks(layers, x, cfg: LMConfig, positions, moe_block: bool, caches=None, pos=None):
+    """Scan over stacked layer params (and optionally stacked caches)."""
+    if cfg.unroll:
+        n = jax.tree.leaves(layers)[0].shape[0]
+        entries = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], layers)
+            cache_l = (
+                None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            )
+            if caches is None:
+                # keep remat semantics identical to the scanned path so the
+                # costing variants count the same recompute flops
+                x, entry = jax.checkpoint(
+                    lambda p_, x_: _block(p_, x_, cfg, positions, moe_block)
+                )(lp, x)
+            else:
+                x, entry = _block(lp, x, cfg, positions, moe_block, cache_l, pos)
+            entries.append(entry)
+        stacked = (
+            jax.tree.map(lambda *e: jnp.stack(e), *entries) if entries else None
+        )
+        return x, stacked
+
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat_policy == "dots"
+        else None
+    )
+
+    def body(carry, xs):
+        xcur = carry
+        if caches is None:
+            lp = xs
+            out, entry = jax.checkpoint(
+                lambda p_, x_: _block(p_, x_, cfg, positions, moe_block),
+                policy=policy,
+            )(lp, xcur)
+        else:
+            lp, cache_l = xs
+            out, entry = _block(lp, xcur, cfg, positions, moe_block, cache_l, pos)
+        return out, entry
+
+    xs = layers if caches is None else (layers, caches)
+    x, entries = lax.scan(body, x, xs)
+    return x, entries
+
+
+def forward(params, tokens, cfg: LMConfig, *, caches=None, pos=None, collect_cache=False):
+    """tokens (B, S) → hidden (B, S, d); optionally threads KV caches."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "res_seq", "act_embed")
+    base = 0 if pos is None else pos
+    positions = base + jnp.arange(S)[None, :]
+
+    if cfg.moe and cfg.first_dense_layers:
+        dcaches = None if caches is None else caches["dense"]
+        x, dense_entries = _scan_blocks(
+            params["dense_layers"], x, cfg, positions, False, dcaches, pos
+        )
+    else:
+        dense_entries = None
+    mcaches = None if caches is None else caches["moe" if cfg.moe else "main"]
+    x, entries = _scan_blocks(
+        params["layers"], x, cfg, positions, cfg.moe, mcaches, pos
+    )
+    x = rms_norm(x, params["final_norm"])
+    if not collect_cache and caches is None:
+        return x, None
+    new_caches = {("moe" if cfg.moe else "main"): entries}
+    if dense_entries is not None:
+        new_caches["dense"] = dense_entries
+    return x, new_caches
+
+
+def logits_from_hidden(params, x, cfg: LMConfig):
+    logits = x @ params["embed"].T  # tied embedding
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    """Causal LM cross-entropy; batch = {tokens, targets} (B, S) int32."""
+    x, _ = forward(params, batch["tokens"], cfg)
+    logits = logits_from_hidden(params, x, cfg).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits, batch["targets"][..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    mask = (batch["targets"] >= 0).astype(jnp.float32)
+    return jnp.sum((lse - tgt) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+def make_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.activation_dtype
+    def entry():
+        if cfg.attn == "mla":
+            return {
+                "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.d_head), dtype),
+        }
+
+    def stack(n):
+        return jax.tree.map(lambda z: jnp.broadcast_to(z[None], (n,) + z.shape), entry())
+
+    caches = {}
+    n_main = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
+    caches["moe" if cfg.moe else "main"] = stack(n_main)
+    if cfg.moe and cfg.first_dense_layers:
+        caches["dense"] = stack(cfg.first_dense_layers)
+    return caches
+
+
+def prefill(params, tokens, cfg: LMConfig, *, max_seq: int | None = None):
+    """Prefill: returns (last-position logits (B, V), caches)."""
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    caches = make_cache(cfg, B, max_seq)
+    x, caches = forward(params, tokens, cfg, caches=caches, pos=0)
+    logits = logits_from_hidden(params, x[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: LMConfig):
+    """One decode step: tokens (B, 1) at absolute position ``pos``.
+    Returns (logits (B, V), updated caches)."""
+    x, caches = forward(params, tokens, cfg, caches=caches, pos=pos)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits[:, 0], caches
+
+
+# ----------------------------------------------------------------------
+# sharding specs (logical axis names per parameter)
+# ----------------------------------------------------------------------
+def param_specs(cfg: LMConfig):
+    """Pytree (matching init) of logical-axis-name tuples."""
+    def attn_spec():
+        if cfg.attn == "mla":
+            return {
+                "wq": ("embed", "heads"),
+                "w_dkv": ("embed", "kv_lora"),
+                "kv_norm": ("kv_lora",),
+                "w_uk": ("kv_lora", "heads"),
+                "w_uv": ("kv_lora", "heads"),
+                "wo": ("heads", "embed"),
+            }
+        p = {
+            "wq": ("embed", "heads"),
+            "wk": ("embed", "heads"),
+            "wv": ("embed", "heads"),
+            "wo": ("heads", "embed"),
+        }
+        if cfg.qkv_bias:
+            p.update({"bq": ("heads",), "bk": ("heads",), "bv": ("heads",)})
+        return p
+
+    def block_spec(moe_block):
+        p = {
+            "pre_attn": ("embed",),
+            "pre_ffn": ("embed",),
+            "attn": attn_spec(),
+        }
+        if moe_block:
+            p["moe"] = {
+                "router": ("embed", "experts"),
+                "w_gate": ("experts", "embed", "expert_ff"),
+                "w_up": ("experts", "embed", "expert_ff"),
+                "w_down": ("experts", "expert_ff", "embed"),
+            }
+            if cfg.n_shared:
+                p["moe"]["shared"] = {
+                    "w_gate": ("embed", "ff"),
+                    "w_up": ("embed", "ff"),
+                    "w_down": ("ff", "embed"),
+                }
+        else:
+            p["ffn"] = {
+                "w_gate": ("embed", "ff"),
+                "w_up": ("embed", "ff"),
+                "w_down": ("ff", "embed"),
+            }
+        return p
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda names: ("layers",) + names,
+            tree,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    specs = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "layers": stacked(block_spec(cfg.moe)),
+    }
+    if cfg.moe and cfg.first_dense_layers:
+        specs["dense_layers"] = stacked(block_spec(False))
+    return specs
+
+
+def cache_specs(cfg: LMConfig):
+    def entry():
+        if cfg.attn == "mla":
+            return {
+                "ckv": ("layers", "batch", "cache_seq", "kv_lora"),
+                "kr": ("layers", "batch", "cache_seq", "head_dim"),
+            }
+        return {
+            "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        }
+
+    caches = {("moe" if cfg.moe else "main"): entry()}
+    if cfg.moe and cfg.first_dense_layers:
+        caches["dense"] = entry()
+    return caches

@@ -1,0 +1,10 @@
+from .attention import gqa_attention
+from .mlp import init_mlp2, init_swiglu, mlp2, swiglu
+from .moe import MoECfg, init_moe, moe_ffn
+from .norms import layer_norm, rms_norm
+from .rotary import apply_rope
+
+__all__ = [
+    "gqa_attention", "init_mlp2", "init_swiglu", "mlp2", "swiglu",
+    "MoECfg", "init_moe", "moe_ffn", "layer_norm", "rms_norm", "apply_rope",
+]

@@ -1,0 +1,172 @@
+"""Attention: GQA (grouped KV) and MLA (DeepSeek latent KV), with a
+blockwise (flash-style) softmax so the S×S score matrix is never fully
+materialized — mandatory for the 32k prefill cells to fit HBM.
+
+Shapes: q (B,S,Hq,D), k/v (B,S,Hkv,D).  GQA repeats KV groups logically via
+einsum reshape, never materializing repeated KV.
+
+``mixed=True`` keeps q/k/v in their storage dtype (bf16) for the two einsums
+with fp32 accumulation (preferred_element_type) — the MXU-native mode; the
+softmax statistics stay fp32 either way.  ``mixed=False`` reproduces the
+all-fp32 baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _block_attn(
+    q, k, v, *, causal: bool, q_offset, kv_block: int, window: int | None,
+    mixed: bool = False, unroll_kv: bool = False,
+):
+    """Blockwise softmax attention.
+
+    q: (B, Sq, G, Hg, D) — G kv-groups × Hg q-heads per group
+    k: (B, Skv, G, D); v: (B, Skv, G, Dv) — Dv may differ (MLA)
+    q_offset: scalar — absolute position of q[0] (for causal masks in decode)
+    Returns (B, Sq, G, Hg, Dv).
+    """
+    B, Sq, G, Hg, D = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[1]
+    kb = min(kv_block, Skv)
+    nblk = -(-Skv // kb)
+    pad = nblk * kb - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = (1.0 / jnp.sqrt(D)).astype(jnp.float32)
+    if mixed:
+        qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    else:
+        qs = q.astype(jnp.float32) * scale
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        kb_i, vb_i, base = blk  # (B, kb, G, D), (B, kb, G, Dv), scalar
+        if mixed:
+            s = jnp.einsum(
+                "bqghd,bkgd->bqghk", qs, kb_i,
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            s = jnp.einsum("bqghd,bkgd->bqghk", qs, kb_i.astype(jnp.float32))
+        kv_pos = base + jnp.arange(kb)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else jnp.ones(
+            (Sq, kb), bool
+        )
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (kv_pos < Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        if mixed:
+            pv = jnp.einsum(
+                "bqghk,bkgd->bqghd", p.astype(v.dtype), vb_i,
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            pv = jnp.einsum("bqghk,bkgd->bqghd", p, vb_i.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    k_blocks = k.reshape(B, nblk, kb, G, D).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nblk, kb, G, Dv).transpose(1, 0, 2, 3, 4)
+    bases = jnp.arange(nblk) * kb
+    acc0 = jnp.zeros((B, Sq, G, Hg, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, G, Hg), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, G, Hg), jnp.float32)
+    if unroll_kv:
+        carry = (acc0, m0, l0)
+        for j in range(nblk):
+            carry, _ = body(carry, (k_blocks[j], v_blocks[j], bases[j]))
+        acc, m, l = carry
+    else:
+        (acc, m, l), _ = lax.scan(body, (acc0, m0, l0), (k_blocks, v_blocks, bases))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _block_attn_causal_skip(
+    q, k, v, *, kv_block: int, window, mixed: bool, unroll_kv: bool = False
+):
+    """Flash-style 2D blocking for CAUSAL full-sequence attention
+    (Sq == Skv, q_offset == 0): q is chunked, and each q chunk only visits
+    kv blocks that intersect its visible (lower-triangular) range — ~½ the
+    einsum FLOPs and ~½ the score-tensor traffic of the mask-after-compute
+    baseline.  The q loop is a static Python unroll so every inner scan has
+    a static trip count (reverse-mode safe).
+    """
+    B, Sq, G, Hg, D = q.shape
+    Dv = v.shape[-1]
+    qb = min(kv_block, Sq)
+    nqb = -(-Sq // qb)
+    outs = []
+    for i in range(nqb):
+        lo = i * qb
+        hi = min(Sq, lo + qb)
+        q_i = q[:, lo:hi]
+        kv_hi = -(-hi // kv_block) * kv_block
+        kv_hi = min(kv_hi, Sq)
+        o = _block_attn(
+            q_i,
+            k[:, :kv_hi],
+            v[:, :kv_hi],
+            causal=True,
+            q_offset=lo,
+            kv_block=kv_block,
+            window=window,
+            mixed=mixed,
+            unroll_kv=unroll_kv,
+        )
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Skv, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    kv_block: int = 1024,
+    window: int | None = None,
+    mixed: bool = False,
+    causal_skip: bool = False,
+    unroll_kv: bool = False,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    Hg = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, Hg, D)
+    if (
+        causal_skip
+        and causal
+        and Sq > 1
+        and Sq == k.shape[1]
+        and isinstance(q_offset, int)
+        and q_offset == 0
+    ):
+        out = _block_attn_causal_skip(
+            qg, k, v, kv_block=kv_block, window=window, mixed=mixed,
+            unroll_kv=unroll_kv,
+        )
+    else:
+        out = _block_attn(
+            qg, k, v, causal=causal, q_offset=q_offset, kv_block=kv_block,
+            window=window, mixed=mixed, unroll_kv=unroll_kv,
+        )
+    return out.reshape(B, Sq, Hq, v.shape[-1])

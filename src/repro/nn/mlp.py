@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU (LLaMA/Mistral/Qwen/DBRX style) and plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """params: w_gate (d, f), w_up (d, f), w_down (f, d)."""
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ params["w_down"]
+
+
+def mlp2(params: dict, x: jnp.ndarray, act=jax.nn.gelu) -> jnp.ndarray:
+    h = act((x @ params["w1"] + params.get("b1", 0)).astype(jnp.float32)).astype(
+        x.dtype
+    )
+    return h @ params["w2"] + params.get("b2", 0)
+
+
+def init_swiglu(key, d: int, f: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_f = 1.0 / jnp.sqrt(f)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d, f), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (f, d), dtype) * s_f,
+    }
+
+
+def init_mlp2(key, d_in: int, d_hidden: int, d_out: int, dtype=jnp.float32, bias=True):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w1": jax.random.normal(k1, (d_in, d_hidden), dtype) / jnp.sqrt(d_in),
+        "w2": jax.random.normal(k2, (d_hidden, d_out), dtype) / jnp.sqrt(d_hidden),
+    }
+    if bias:
+        p["b1"] = jnp.zeros((d_hidden,), dtype)
+        p["b2"] = jnp.zeros((d_out,), dtype)
+    return p

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with sort-based (linear-memory) dispatch.
+
+GShard's one-hot dispatch tensor is quadratic in the token-group size; here
+tokens are *sorted by expert id* (count → scan → scatter, the same primitive
+family as edgeMapChunked) and packed into an (E, C, d) capacity buffer —
+O(topk · T · d) memory.  The batched expert GEMM shards on the expert axis
+(EP over the 'model' mesh axis); GSPMD inserts the token all-to-alls.
+
+Router: softmax over the selected top-k logits (DBRX/Mixtral convention).
+Tokens overflowing an expert's capacity are dropped for that expert
+(standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .mlp import init_swiglu, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+def init_moe(key, cfg: MoECfg, dtype=jnp.float32) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, E = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    s_in, s_f = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    params = {
+        "router": jax.random.normal(kr, (d, E), dtype) * s_in,
+        "w_gate": jax.random.normal(jax.random.fold_in(ke, 0), (E, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(jax.random.fold_in(ke, 1), (E, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(jax.random.fold_in(ke, 2), (E, f, d), dtype) * s_f,
+    }
+    if cfg.n_shared:
+        params["shared"] = init_swiglu(ks, d, cfg.n_shared * f, dtype)
+    return params
+
+
+def capacity(cfg: MoECfg, T: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * T / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoECfg) -> jnp.ndarray:
+    """x: (T, d) → (T, d).  Sort-based capacity dispatch."""
+    T, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = capacity(cfg, T)
+
+    logits = (x @ params["router"]).astype(jnp.float32)  # (T, E)
+    topv, topi = lax.top_k(logits, K)                    # (T, K)
+    gates = jax.nn.softmax(topv, axis=-1).astype(x.dtype)
+
+    flat_e = topi.reshape(-1).astype(jnp.int32)          # (T·K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e, stable=True)             # count→scan→scatter
+    se = flat_e[order]
+    st = flat_t[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    pos = jnp.arange(T * K, dtype=jnp.int32) - jnp.take(starts, se)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)          # E·C = overflow bin
+
+    token_of_slot = jnp.full(E * C + 1, T, jnp.int32).at[slot].set(
+        st, mode="drop"
+    )[: E * C]
+    xg = jnp.take(x, token_of_slot, axis=0, mode="fill", fill_value=0).reshape(
+        E, C, d
+    )
+
+    # batched expert SwiGLU — shards on E (expert parallelism)
+    g = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(E * C, d)
+
+    # combine: map each (t, k) back to its slot
+    slot_of_flat = jnp.full(T * K, E * C, jnp.int32).at[order].set(
+        jnp.where(keep, slot, E * C)
+    )
+    yk = jnp.take(y, slot_of_flat, axis=0, mode="fill", fill_value=0).reshape(
+        T, K, d
+    )
+    out = jnp.sum(yk * gates[..., None], axis=1)
+
+    if "shared" in params:
+        out = out + swiglu(params["shared"], x)
+    return out
+
+
+def moe_aux_loss(logits_f32: jnp.ndarray, topi: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Switch-style load-balance loss (fraction·probability dot)."""
+    probs = jax.nn.softmax(logits_f32, axis=-1)
+    frac = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=0
+    )
+    return E * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,11 @@
+from .adamw import AdamWConfig, init as adamw_init, state_logical_specs, update as adamw_update
+from .clipping import clip_by_global_norm, global_norm
+from .compression import compressed_psum, dequantize_int8, quantize_int8
+from .schedules import warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "state_logical_specs",
+    "clip_by_global_norm", "global_norm",
+    "compressed_psum", "quantize_int8", "dequantize_int8",
+    "warmup_cosine",
+]

@@ -1,0 +1,66 @@
+"""AdamW as pure pytree functions (no optax dependency), sharding-aware.
+
+Optimizer moments are fp32 regardless of param dtype.  ``state_specs``
+derives the moments' PartitionSpec tree from the params' logical tree —
+by default the moments inherit the param sharding (TP), and the caller can
+additionally scatter them over 'data' (ZeRO-1) via ``zero1_specs`` in
+launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+    }
+
+
+def update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+        return newp.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"step": step, "m": newm, "v": newv}
+
+
+def state_logical_specs(param_logical_specs):
+    """Moments share the params' logical axes; step is replicated."""
+    return {
+        "step": (),
+        "m": param_logical_specs,
+        "v": param_logical_specs,
+    }

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the real single CPU device (the 512-device XLA flag is set ONLY
+# inside launch/dryrun.py, never globally)
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,172 @@
+"""Correctness of the 18 Sage algorithms against numpy/scipy oracles, on
+RMAT + structured graphs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import oracles as O
+from repro.algorithms import (
+    bellman_ford,
+    betweenness,
+    bfs,
+    biconnectivity,
+    coloring,
+    connectivity,
+    densest_subgraph,
+    kcore,
+    ldd,
+    maximal_matching,
+    mis,
+    pagerank,
+    pagerank_iteration,
+    set_cover,
+    spanner,
+    spanning_forest,
+    triangle_count,
+    wbfs,
+    widest_path,
+)
+from repro.data import rmat_graph, structured_graph
+
+KEY = jax.random.PRNGKey(0)
+
+
+def graphs():
+    out = [
+        ("rmat48", rmat_graph(48, 160, weighted=True, seed=2, block_size=32)),
+        ("rmat96", rmat_graph(96, 420, weighted=True, seed=5, block_size=32)),
+    ]
+    for kind in ["path", "grid", "two_triangles", "barbell"]:
+        out.append((kind, structured_graph(kind, weighted=True)))
+    return out
+
+
+GRAPHS = graphs()
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+class TestTraversal:
+    def test_bfs(self, name, g):
+        p, lev = bfs(g, 0)
+        assert np.array_equal(np.asarray(lev), O.bfs_levels(g, 0))
+        pa, la = np.asarray(p), np.asarray(lev)
+        adj = O.adj_sets(g)
+        for v in range(g.n):
+            if la[v] > 0:
+                assert pa[v] in adj[v] and la[pa[v]] == la[v] - 1
+
+    def test_wbfs(self, name, g):
+        d = np.asarray(wbfs(g, 0)).astype(float)
+        d[d == 2**31 - 1] = np.inf
+        np.testing.assert_allclose(d, O.dijkstra_int(g, 0))
+
+    def test_bellman_ford(self, name, g):
+        d, neg = bellman_ford(g, 0)
+        assert not bool(neg)
+        np.testing.assert_allclose(np.asarray(d), O.bellman_ford_ref(g, 0))
+
+    def test_widest_path(self, name, g):
+        np.testing.assert_allclose(
+            np.asarray(widest_path(g, 0)), O.widest_path_ref(g, 0)
+        )
+
+    def test_betweenness(self, name, g):
+        np.testing.assert_allclose(
+            np.asarray(betweenness(g, 0)), O.betweenness_ref(g, 0), atol=1e-3
+        )
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+class TestConnectivity:
+    def test_connectivity(self, name, g):
+        assert np.array_equal(np.asarray(connectivity(g, KEY)), O.components_ref(g))
+
+    def test_spanning_forest(self, name, g):
+        p, lab = spanning_forest(g, KEY)
+        ok, msg = O.check_spanning_forest(g, p, lab)
+        assert ok, msg
+
+    def test_ldd(self, name, g):
+        cl = ldd(g, 0.2, KEY)
+        ok, msg = O.check_ldd(g, cl, 0.2)
+        assert ok, msg
+
+    def test_spanner(self, name, g):
+        em, okflag = spanner(g, 4, KEY)
+        assert bool(okflag)
+        ok, msg = O.check_spanner(g, em, 4)
+        assert ok, msg
+
+    def test_biconnectivity(self, name, g):
+        ok, msg = O.check_bicomp(g, biconnectivity(g))
+        assert ok, msg
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+class TestCovering:
+    def test_mis(self, name, g):
+        ok, msg = O.check_mis(g, mis(g, KEY))
+        assert ok, msg
+
+    def test_matching(self, name, g):
+        ok, msg = O.check_matching(g, maximal_matching(g, KEY))
+        assert ok, msg
+
+    def test_coloring(self, name, g):
+        ok, msg = O.check_coloring(g, coloring(g, num_colors=64))
+        assert ok, msg
+
+    def test_set_cover(self, name, g):
+        sets_mask = jnp.arange(g.n) < max(4, g.n // 3)
+        cov = set_cover(g, sets_mask, KEY)
+        ok, msg = O.check_set_cover(g, sets_mask, cov)
+        assert ok, msg
+        greedy = O.greedy_set_cover_size(g, sets_mask)
+        assert int(jnp.sum(cov)) <= max(4 * greedy, greedy + 4)
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+class TestSubstructure:
+    def test_kcore(self, name, g):
+        assert np.array_equal(np.asarray(kcore(g)), O.kcore_ref(g))
+
+    def test_triangles(self, name, g):
+        assert triangle_count(g) == O.triangles_ref(g)
+
+    def test_densest(self, name, g):
+        mask, rho = densest_subgraph(g)
+        lb = O.densest_ref_lower_bound(g)
+        assert float(rho) >= lb / 2.002 - 1e-5
+        # reported density is achievable by the reported subgraph
+        m_sub = 0
+        s, d, _ = O.edges_of(g)
+        mk = np.asarray(mask)
+        m_sub = (mk[s] & mk[d]).sum() / 2
+        n_sub = mk.sum()
+        assert abs(m_sub / max(n_sub, 1) - float(rho)) < 1e-3
+
+
+@pytest.mark.parametrize("name,g", GRAPHS, ids=[n for n, _ in GRAPHS])
+def test_pagerank(name, g):
+    pr, iters = pagerank(g)
+    np.testing.assert_allclose(np.asarray(pr), O.pagerank_ref(g), atol=1e-5)
+    pr1 = pagerank_iteration(g, jnp.full(g.n, 1.0 / g.n))
+    np.testing.assert_allclose(
+        np.asarray(pr1), O.pagerank_ref(g, iters=1), atol=1e-6
+    )
+
+
+def test_bellman_ford_negative_cycle():
+    import numpy as np
+
+    from repro.core import build_csr
+
+    # 0→1→2→0 with total negative weight, plus 3 connected to 0
+    src = np.array([0, 1, 2, 0])
+    dst = np.array([1, 2, 0, 3])
+    w = np.array([-1.0, -1.0, -1.0, 1.0], dtype=np.float32)
+    g = build_csr(4, src, dst, w, block_size=32)
+    d, neg = bellman_ford(g, 0)
+    assert bool(neg)
+    assert np.asarray(d)[1] == -np.inf

@@ -1,0 +1,179 @@
+"""Unit tests for the PSAM core engine: CSR build, edgeMap modes,
+graphFilter, bucketing, primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Buckets,
+    NULL_BUCKET,
+    build_csr,
+    edge_active_flat,
+    edgemap_chunked,
+    edgemap_dense,
+    edgemap_reduce,
+    filter_edges,
+    from_indices,
+    full,
+    make_buckets,
+    make_filter,
+    pack_vertices,
+    unpack_bits,
+)
+from repro.core.primitives import (
+    compact_mask,
+    exclusive_scan,
+    lowest_set_bit,
+    mex_from_forbidden,
+    popcount32,
+)
+from repro.data import rmat_graph, structured_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_graph(64, 256, weighted=True, seed=7, block_size=32)
+
+
+def test_csr_build_roundtrip(g):
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    valid = dst < g.n
+    assert valid.sum() == g.m
+    # every vertex's slots are within its block range
+    off = np.asarray(g.offsets)
+    deg = np.asarray(g.degrees)
+    for v in [0, 1, g.n // 2, g.n - 1]:
+        span = src[off[v] : off[v + 1]]
+        real = span[span < g.n]
+        assert np.all(real == v)
+        assert (span == v).sum() == deg[v]
+
+
+def test_block_structure(g):
+    assert g.edge_src.shape[0] == g.num_blocks * g.block_size
+    bs = np.asarray(g.block_src)
+    bd = np.asarray(g.block_dst)
+    owner_ok = (bd < g.n) <= (bs[:, None] < g.n)
+    assert owner_ok.all()
+
+
+def test_edgemap_dense_vs_chunked_all_monoids(g):
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    xf = jnp.asarray(np.random.default_rng(0).normal(size=g.n), jnp.float32)
+    fr = from_indices(g.n, [0, 3, 11]).mask
+    for monoid, xx in [("min", x), ("max", x), ("sum", xf)]:
+        d, dt = edgemap_dense(g, fr, xx, monoid=monoid)
+        c, ct = edgemap_chunked(g, fr, xx, monoid=monoid)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(c), rtol=1e-6)
+        assert bool(jnp.all(dt == ct))
+
+
+def test_edgemap_auto_matches(g):
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    for frontier in [from_indices(g.n, [5]), full(g.n)]:
+        a, _ = edgemap_reduce(g, frontier.mask, x, monoid="min", mode="auto")
+        d, _ = edgemap_dense(g, frontier.mask, x, monoid="min")
+        assert bool(jnp.all(a == d))
+
+
+def test_edgemap_weighted_map_fn(g):
+    x = jnp.zeros(g.n, jnp.float32)
+    out, touched = edgemap_dense(
+        g, full(g.n).mask, x, monoid="min", map_fn=lambda xs, w: xs + w
+    )
+    # min over incoming weights
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    w = np.asarray(g.edge_w)
+    valid = dst < g.n
+    ref = np.full(g.n, np.inf)
+    np.minimum.at(ref, dst[valid], w[valid])
+    got = np.asarray(out)
+    mask = np.asarray(touched)
+    np.testing.assert_allclose(got[mask], ref[mask], rtol=1e-6)
+
+
+def test_filter_roundtrip(g):
+    f = make_filter(g)
+    assert int(f.num_active_edges) == g.m
+    keep = g.edge_valid & (g.edge_dst % 2 == 0)
+    f2, remaining = filter_edges(g, f, keep)
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    valid = dst < g.n
+    expect = (dst[valid] % 2 == 0).sum()
+    assert int(remaining) == expect
+    # unpack agrees
+    active = np.asarray(edge_active_flat(f2))
+    assert active.sum() == expect
+    assert not np.any(active & ~np.asarray(keep))
+
+
+def test_filter_subset_pack(g):
+    f = make_filter(g)
+    subset = jnp.arange(g.n) < 10
+    keep = jnp.zeros(g.edge_src.shape[0], bool)  # delete all edges of subset
+    f2 = pack_vertices(g, f, subset, keep)
+    deg2 = np.asarray(f2.active_deg)
+    deg = np.asarray(g.degrees)
+    assert np.all(deg2[:10] == 0)
+    assert np.all(deg2[10:] == deg[10:])
+    # dirty bits set on neighbors of subset vertices
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    valid = dst < g.n
+    nbrs = set(dst[valid & (src < 10)].tolist())
+    dirty = np.asarray(f2.dirty)
+    for v in nbrs:
+        assert dirty[v]
+
+
+def test_filter_edgemap_consistency(g):
+    """edgeMap over a filtered graph == edgeMap over the subgraph."""
+    f = make_filter(g)
+    keep = g.edge_valid & (g.edge_w > 2.0)
+    f2, _ = filter_edges(g, f, keep)
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    got, _ = edgemap_dense(
+        g, full(g.n).mask, x, monoid="min", edge_active=edge_active_flat(f2)
+    )
+    # build the subgraph directly
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    w = np.asarray(g.edge_w)
+    sel = (dst < g.n) & (w > 2.0)
+    g2 = build_csr(g.n, src[sel], dst[sel], w[sel], block_size=32)
+    want, _ = edgemap_dense(g2, full(g.n).mask, x, monoid="min")
+    assert bool(jnp.all(got == want))
+
+
+def test_bucketing():
+    b = make_buckets(jnp.asarray([3, 1, 1, 7, NULL_BUCKET], dtype=jnp.int32))
+    bid, mask, more = b.next_bucket()
+    assert int(bid) == 1 and bool(more)
+    assert np.array_equal(np.asarray(mask), [False, True, True, False, False])
+    b = b.retire(mask)
+    bid, mask, more = b.next_bucket()
+    assert int(bid) == 3
+    b = b.update(mask, jnp.full(5, 9))
+    bid, _, _ = b.next_bucket()
+    assert int(bid) == 7
+
+
+def test_primitives():
+    pre, tot = exclusive_scan(jnp.asarray([1, 2, 3, 4]))
+    assert np.array_equal(np.asarray(pre), [0, 1, 3, 6]) and int(tot) == 10
+    idx, cnt = compact_mask(jnp.asarray([True, False, True, True]))
+    assert int(cnt) == 3 and np.array_equal(np.asarray(idx)[:3], [0, 2, 3])
+    assert int(popcount32(jnp.uint32(0xF0F0F0F0))) == 16
+    assert int(lowest_set_bit(jnp.uint32(0b101000))) == 3
+    words = jnp.asarray([[0xFFFFFFFF, 0b111]], dtype=jnp.uint32)
+    assert int(mex_from_forbidden(words)[0]) == 35
+
+
+def test_structured_graphs_build():
+    for kind in ["path", "star", "cycle", "grid", "two_triangles", "barbell"]:
+        g = structured_graph(kind)
+        assert g.m > 0 and g.n > 0

@@ -1,0 +1,148 @@
+"""Tests for the beyond-deliverable extensions: compressed CSR, personalized
+PageRank, decode-attention kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms.local import personalized_pagerank, ppr_matrix_oracle
+from repro.core import (
+    compress,
+    decode_block,
+    decode_blocks,
+    edge_active_flat,
+    edgemap_dense,
+    edgemap_sum_compressed,
+    filter_edges,
+    full,
+    make_filter,
+)
+from repro.data import rmat_graph, structured_graph
+from repro.kernels import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+# ---------------- compressed CSR ----------------
+@pytest.mark.parametrize("n,m,bs", [(128, 1024, 32), (256, 2048, 64), (512, 3000, 128)])
+def test_compressed_roundtrip(n, m, bs):
+    g = rmat_graph(n, m, seed=n, block_size=bs)
+    c = compress(g)
+    dec = np.asarray(decode_blocks(c))
+    orig = np.asarray(g.edge_dst).reshape(g.num_blocks, g.block_size)
+    assert np.array_equal(dec, orig)
+    # single-block decode path (the filter iterator)
+    for bid in [0, g.num_blocks // 2, g.num_blocks - 1]:
+        assert np.array_equal(np.asarray(decode_block(c, jnp.int32(bid))), orig[bid])
+
+
+def test_compressed_saves_space():
+    g = rmat_graph(512, 4096, seed=1, block_size=64)
+    c = compress(g)
+    assert c.compressed_bytes < 0.6 * c.uncompressed_bytes
+
+
+def test_compressed_exceptions_path():
+    """Force wide deltas (> 2^16) and check the escape path."""
+    import numpy as np
+
+    from repro.core import build_csr
+
+    n = 200_000
+    # star-ish: vertex 0 connects to far-apart targets → huge deltas
+    dst = np.arange(1, 129) * 1500  # deltas of 1500… fine, make them wide:
+    dst = np.concatenate([[5], [70000], [190000]])
+    src = np.zeros(dst.shape[0], dtype=np.int64)
+    g = build_csr(n, src, dst, block_size=32)
+    c = compress(g)
+    assert c.n_exceptions >= 1
+    dec = np.asarray(decode_blocks(c))
+    orig = np.asarray(g.edge_dst).reshape(g.num_blocks, g.block_size)
+    assert np.array_equal(dec, orig)
+
+
+def test_compressed_edgemap_with_filter():
+    g = rmat_graph(128, 1024, seed=9, block_size=32)
+    c = compress(g)
+    f, _ = filter_edges(g, make_filter(g), g.edge_valid & (g.edge_dst % 2 == 0))
+    x = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
+    got = edgemap_sum_compressed(c, x, edge_active=edge_active_flat(f))
+    want, _ = edgemap_dense(
+        g, full(g.n).mask, x, monoid="sum", edge_active=edge_active_flat(f)
+    )
+    # symmetric graph: per-src sums == per-dst sums of the symmetric subgraph?
+    # the filter here is NOT symmetric, so compare against an explicit per-src sum
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    act = np.asarray(edge_active_flat(f))
+    xs = np.asarray(x)
+    ref = np.zeros(g.n + 1)
+    sel = act & (dst < g.n)
+    np.add.at(ref, src[sel], xs[dst[sel]])
+    np.testing.assert_allclose(np.asarray(got), ref[: g.n], rtol=1e-5, atol=1e-5)
+
+
+# ---------------- personalized PageRank ----------------
+@pytest.mark.parametrize("kind", ["rmat", "grid"])
+def test_ppr_acl_guarantee(kind):
+    g = (
+        rmat_graph(96, 512, seed=3, block_size=32)
+        if kind == "rmat"
+        else structured_graph("grid")
+    )
+    eps = 1e-6
+    p, r, rounds = personalized_pagerank(g, 0, eps=eps)
+    pi = ppr_matrix_oracle(g, 0)
+    deg = np.maximum(np.asarray(g.degrees), 1)
+    err = np.abs(np.asarray(p) - pi)
+    # ACL: residual-bounded approximation
+    assert np.all(err <= eps * deg + np.asarray(r) + 1e-7)
+    assert float(jnp.sum(p)) <= 1.0 + 1e-5
+    assert int(rounds) < 200
+
+
+def test_ppr_mass_split():
+    """p + remaining residual mass == 1 (push conserves probability)."""
+    g = rmat_graph(64, 256, seed=7, block_size=32)
+    p, r, _ = personalized_pagerank(g, 5, eps=1e-4)
+    # pushed mass α·Σpushed went to p; (1-α) spread; total = p + r·(correction)
+    total = float(jnp.sum(p) / 0.15 * 0.15 + jnp.sum(r))
+    # loose conservation: within eps·m slack
+    assert 0.9 <= float(jnp.sum(p)) + float(jnp.sum(r)) <= 1.0 + 1e-4
+
+
+# ---------------- decode attention kernel ----------------
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [(2, 64, 4, 4, 8), (6, 300, 8, 2, 16), (3, 128, 6, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, Hq, Hkv, D, dtype):
+    k0 = jax.random.PRNGKey(B * S)
+    q = jax.random.normal(k0, (B, Hq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (B, S, Hkv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (B, S, Hkv, D), jnp.float32).astype(dtype)
+    pos = jax.random.randint(jax.random.fold_in(k0, 3), (B,), 1, S)
+    got = decode_attention(q, k, v, pos, seq_tile=64, tile_batch=2)
+    kr = jnp.repeat(k, Hq // Hkv, axis=2)
+    vr = jnp.repeat(v, Hq // Hkv, axis=2)
+    want = decode_attention_ref(q, kr, vr, pos)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attention_matches_model_decode():
+    """The kernel agrees with the model's (blockwise) decode attention."""
+    from repro.nn.attention import gqa_attention
+
+    k0 = jax.random.PRNGKey(0)
+    B, S, Hq, Hkv, D = 2, 96, 4, 2, 16
+    q = jax.random.normal(k0, (B, 1, Hq, D))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (B, S, Hkv, D))
+    pos = 57
+    model_out = gqa_attention(q, k, v, causal=True, q_offset=pos, kv_block=32)[:, 0]
+    kern_out = decode_attention(
+        q[:, 0], k, v, jnp.full((B,), pos + 1, jnp.int32), seq_tile=32
+    )
+    np.testing.assert_allclose(
+        np.asarray(model_out), np.asarray(kern_out), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,151 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import oracles as O
+from repro.algorithms import bfs, connectivity, kcore, mis, pagerank_iteration
+from repro.core import (
+    build_csr,
+    edge_active_flat,
+    edgemap_chunked,
+    edgemap_dense,
+    filter_edges,
+    from_indices,
+    full,
+    make_filter,
+)
+from repro.core.primitives import mex_from_forbidden, popcount32
+
+SETTINGS = dict(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def random_graph(draw, max_n=24, max_m=60):
+    n = draw(st.integers(min_value=2, max_value=max_n))
+    m = draw(st.integers(min_value=1, max_value=max_m))
+    src = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m)
+    )
+    dst = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m)
+    )
+    return build_csr(
+        n, np.array(src), np.array(dst), symmetrize=True, block_size=32
+    )
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_edgemap_dense_equals_chunked(g, seed):
+    rng = np.random.default_rng(seed)
+    frontier = from_indices(
+        g.n, rng.integers(0, g.n, size=max(1, g.n // 3))
+    ).mask
+    x = jnp.asarray(rng.integers(0, 1000, g.n), jnp.int32)
+    d, dt = edgemap_dense(g, frontier, x, monoid="min")
+    c, ct = edgemap_chunked(g, frontier, x, monoid="min")
+    assert bool(jnp.all(d == c)) and bool(jnp.all(dt == ct))
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_filter_commutes_with_subgraph(g, seed):
+    """edgeMap∘filter == edgeMap over the materialized subgraph (the PSAM
+    immutability invariant: a filter is semantically a subgraph)."""
+    rng = np.random.default_rng(seed)
+    keep_np = rng.random(g.edge_src.shape[0]) < 0.6
+    keep = jnp.asarray(keep_np) & g.edge_valid
+    f, _ = filter_edges(g, make_filter(g), keep)
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    got, gt = edgemap_dense(
+        g, full(g.n).mask, x, monoid="min", edge_active=edge_active_flat(f)
+    )
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    sel = np.asarray(keep)
+    if sel.sum() == 0:
+        assert not bool(jnp.any(gt))
+        return
+    g2 = build_csr(g.n, src[sel], dst[sel], block_size=32)
+    want, wt = edgemap_dense(g2, full(g.n).mask, x, monoid="min")
+    assert bool(jnp.all(gt == wt))
+    assert bool(jnp.all(jnp.where(gt, got, 0) == jnp.where(wt, want, 0)))
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_connectivity_isomorphism_invariant(g, seed):
+    """Component PARTITION is invariant under vertex relabeling."""
+    labels = np.asarray(connectivity(g))
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.n)
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    valid = dst < g.n
+    g2 = build_csr(g.n, perm[src[valid]], perm[dst[valid]], block_size=32)
+    labels2 = np.asarray(connectivity(g2))
+    # same partition up to the permutation
+    for u in range(g.n):
+        for v in range(u + 1, g.n):
+            assert (labels[u] == labels[v]) == (labels2[perm[u]] == labels2[perm[v]])
+
+
+@given(random_graph())
+@settings(**SETTINGS)
+def test_bfs_triangle_inequality(g):
+    _, lev = bfs(g, 0)
+    la = np.asarray(lev)
+    s, d, _ = O.edges_of(g)
+    for a, b in zip(s, d):
+        if la[a] >= 0 and la[b] >= 0:
+            assert abs(la[a] - la[b]) <= 1
+        else:
+            assert la[a] == la[b] == -1 or (la[a] < 0) == (la[b] < 0)
+
+
+@given(random_graph(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_mis_validity(g, seed):
+    ok, msg = O.check_mis(g, mis(g, jax.random.PRNGKey(seed)))
+    assert ok, msg
+
+
+@given(random_graph())
+@settings(**SETTINGS)
+def test_kcore_degeneracy_bounds(g):
+    core = np.asarray(kcore(g))
+    deg = np.asarray(g.degrees)
+    assert np.all(core <= deg)
+    assert np.all(core >= 0)
+
+
+@given(random_graph())
+@settings(**SETTINGS)
+def test_pagerank_mass_conservation(g):
+    pr0 = jnp.full(g.n, 1.0 / g.n)
+    pr1 = pagerank_iteration(g, pr0)
+    # total mass stays 1 (dangling mass redistributed)
+    assert abs(float(jnp.sum(pr1)) - 1.0) < 1e-4
+    assert bool(jnp.all(pr1 >= 0))
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=8))
+@settings(**SETTINGS)
+def test_popcount_and_mex(words):
+    w = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = np.asarray(popcount32(w))
+    want = np.array([bin(x).count("1") for x in words])
+    assert np.array_equal(got, want)
+    mex = int(mex_from_forbidden(w[None, :])[0])
+    bits = []
+    for x in words:
+        bits.extend((x >> i) & 1 for i in range(32))
+    want_mex = next((i for i, b in enumerate(bits) if b == 0), len(bits))
+    assert mex == want_mex
