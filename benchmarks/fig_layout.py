@@ -28,6 +28,7 @@ import jax, jax.numpy as jnp
 from repro.data import rmat_graph
 from repro.distributed.engine import distributed_vertex_reduce, shard_blocks_for_mesh
 from repro.launch.dryrun import collective_bytes_from_hlo
+from repro.compat import make_mesh, use_mesh
 import json
 
 g = rmat_graph(1024, 8192, seed=0, block_size=64)
@@ -36,7 +37,7 @@ for name, shape, axes in [
     ("edges_sharded_all_axes", (2, 4), ("pod", "data")),
     ("single_axis_flat", (8,), ("data",)),
 ]:
-    mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = make_mesh(shape, axes)
     NBp = shard_blocks_for_mesh(mesh, g.num_blocks)
     pad = NBp - g.num_blocks
     bd = jnp.pad(g.block_dst, ((0, pad), (0, 0)), constant_values=g.n)
@@ -44,7 +45,7 @@ for name, shape, axes in [
     bs = jnp.pad(g.block_src, (0, pad), constant_values=g.n)
     fn = distributed_vertex_reduce(mesh, n=g.n)
     x = jnp.ones(g.n, jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(fn).lower(bd, bw, bs, x).compile()
     coll = collective_bytes_from_hlo(compiled.as_text())
     out[name] = coll["total"]

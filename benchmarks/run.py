@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig1_suite    — Fig. 1 / Fig. 6: the 18-algorithm suite + PSAM work model
   table4_filter — Table 4: filter block size F_B ↔ triangle-count work
   table5_edgemap— Table 5: edgeMap variant ↔ peak intermediate memory
+  table_compression — §5.1.3: compression ratio + compressed edgeMap throughput
   fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
   kernels_micro — Pallas kernels vs jnp oracles
   roofline      — §Roofline terms from the dry-run artifacts (if present)
@@ -21,7 +22,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
-                   table4_filter, table5_edgemap)
+                   table4_filter, table5_edgemap, table_compression)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -31,6 +32,9 @@ def main() -> None:
             n=2048 if args.full else 512, m=16384 if args.full else 4096
         ),
         "table5_edgemap": lambda: table5_edgemap.run(
+            n=4096 if args.full else 1024, m=65536 if args.full else 8192
+        ),
+        "table_compression": lambda: table_compression.run(
             n=4096 if args.full else 1024, m=65536 if args.full else 8192
         ),
         "kernels_micro": kernels_micro.run,

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.algorithms import maximal_matching, triangle_count
 from repro.algorithms.substructure import orientation_filter
-from repro.core import PSAMCost, make_filter
+from repro.core import PSAMCost
 from repro.data import rmat_graph
 
 

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.algorithms import bfs, connectivity, kcore, pagerank, triangle_count
-from repro.core import PSAMCost, edge_active_flat, filter_edges_pred, make_filter
+from repro.core import PSAMCost, filter_edges_pred, make_filter
 from repro.data import rmat_graph
 
 

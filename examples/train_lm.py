@@ -10,7 +10,6 @@ accelerator), --arch to pick any assigned architecture's smoke config.
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.launch.train import TrainConfig, Trainer
 from repro.models import transformer_lm as lm

@@ -12,8 +12,7 @@ from jax import lax
 
 from ..core.csr import CSRGraph
 from ..core.edgemap import edgemap_reduce
-from ..core.graph_filter import GraphFilter, make_filter, pack_vertices, unpack_bits
-from ..core.primitives import popcount32
+from ..core.graph_filter import make_filter, pack_vertices, unpack_bits
 
 INF_I32 = jnp.int32(2**31 - 1)
 INF_F32 = jnp.float32(jnp.inf)
@@ -114,7 +113,6 @@ def coloring(g: CSRGraph, *, num_colors: int = 256):
     """
     n, C = g.n, num_colors
     deg = g.degrees
-    ids = jnp.arange(n, dtype=jnp.int32)
     src, dst, valid = g.edge_src, g.edge_dst, g.edge_valid
     deg_s = jnp.take(deg, src, mode="fill", fill_value=0)
     deg_d = jnp.take(deg, dst, mode="fill", fill_value=0)

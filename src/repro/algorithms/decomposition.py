@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.csr import CSRGraph
+from ..core.backend import GraphLike
 from ..core.edgemap import edgemap_reduce
-from ..core.primitives import compact_mask
 
 INF_I32 = jnp.int32(2**31 - 1)
 UNVISITED = jnp.int32(-1)
@@ -25,7 +24,7 @@ UNVISITED = jnp.int32(-1)
 # ----------------------------------------------------------------------
 # Low-diameter decomposition (Miller–Peng–Xu with quantized shifts)
 # ----------------------------------------------------------------------
-def ldd(g: CSRGraph, beta: float, key: jax.Array, *, mode: str = "auto"):
+def ldd(g: GraphLike, beta: float, key: jax.Array, *, mode: str = "auto"):
     """(O(β), O(log n / β)) decomposition.  Returns cluster int32[n]
     (cluster id == center vertex id).
 
@@ -69,7 +68,7 @@ def ldd(g: CSRGraph, beta: float, key: jax.Array, *, mode: str = "auto"):
 # Connectivity — LDD seed + min-label propagation with pointer jumping
 # ----------------------------------------------------------------------
 def _min_label_prop(
-    g: CSRGraph,
+    g: GraphLike,
     labels0: jnp.ndarray,
     *,
     edge_active: jnp.ndarray | None = None,
@@ -97,7 +96,7 @@ def _min_label_prop(
     return labels
 
 
-def connectivity(g: CSRGraph, key: jax.Array | None = None, *, use_ldd: bool = True):
+def connectivity(g: GraphLike, key: jax.Array | None = None, *, use_ldd: bool = True):
     """Connected components; label = min vertex id of the component.
 
     Paper recipe (§C.2): one LDD round with β=O(1) drops inter-cluster edges
@@ -121,7 +120,7 @@ def connectivity(g: CSRGraph, key: jax.Array | None = None, *, use_ldd: bool = T
     return jnp.take(rep, labels)
 
 
-def multi_source_bfs(g: CSRGraph, roots_mask: jnp.ndarray, *, mode: str = "auto"):
+def multi_source_bfs(g: GraphLike, roots_mask: jnp.ndarray, *, mode: str = "auto"):
     """BFS forest from all roots at once.  Returns (parents, levels);
     parents[root]=root."""
     n = g.n
@@ -148,7 +147,7 @@ def multi_source_bfs(g: CSRGraph, roots_mask: jnp.ndarray, *, mode: str = "auto"
     return parents, levels
 
 
-def spanning_forest(g: CSRGraph, key: jax.Array | None = None):
+def spanning_forest(g: GraphLike, key: jax.Array | None = None):
     """Spanning forest.  Returns (parents int32[n], labels int32[n]);
     forest edges are {(v, parents[v]) : parents[v] != v}."""
     labels = connectivity(g, key, use_ldd=key is not None)
@@ -160,7 +159,7 @@ def spanning_forest(g: CSRGraph, key: jax.Array | None = None):
 # ----------------------------------------------------------------------
 # O(k)-spanner (Miller et al. [69] construction, §C.1)
 # ----------------------------------------------------------------------
-def spanner(g: CSRGraph, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
+def spanner(g: GraphLike, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
     """Returns (edge_mask bool[slots], ok bool).
 
     Spanner = intra-cluster BFS-tree edges of an LDD with β = log n / (2k)
@@ -170,6 +169,7 @@ def spanner(g: CSRGraph, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
     the §C.2 restart path when the cap overflows).
     """
     n = g.n
+    slots = g.edge_src.shape[0]
     beta = float(jnp.log(n + 1)) / (2.0 * k)
     cluster = ldd(g, beta, key)
 
@@ -218,7 +218,6 @@ def spanner(g: CSRGraph, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
     first = jnp.concatenate(
         [jnp.array([True]), (lo_s[1:] != lo_s[:-1]) | (hi_s[1:] != hi_s[:-1])]
     ) & (lo_s < n)
-    slots = g.edge_src.shape[0]
     pick = jnp.zeros(slots + 1, dtype=bool).at[jnp.where(first, idx_s, slots)].set(
         True
     )[:slots]
@@ -227,7 +226,7 @@ def spanner(g: CSRGraph, k: int, key: jax.Array, *, inter_cap_factor: int = 8):
     return _symmetrize_slot_mask(g, mask), ok
 
 
-def _symmetrize_slot_mask(g: CSRGraph, mask: jnp.ndarray) -> jnp.ndarray:
+def _symmetrize_slot_mask(g: GraphLike, mask: jnp.ndarray) -> jnp.ndarray:
     """Ensure (u,v) selected ⟺ (v,u) selected, via a per-target min-slot
     match.  Works because slot lists are sorted by (src, dst)."""
     # mark selected undirected pairs with a segment trick: a slot (u,v) is
@@ -254,7 +253,7 @@ def _symmetrize_slot_mask(g: CSRGraph, mask: jnp.ndarray) -> jnp.ndarray:
 # ----------------------------------------------------------------------
 # Biconnectivity (Tarjan–Vishkin)
 # ----------------------------------------------------------------------
-def _euler_tour_preorder(g: CSRGraph, parents: jnp.ndarray, labels: jnp.ndarray):
+def _euler_tour_preorder(g: GraphLike, parents: jnp.ndarray, labels: jnp.ndarray):
     """Preorder numbers + subtree sizes for a rooted forest, via Euler tour
     and list ranking (pointer jumping).  All state O(n) words."""
     n = g.n
@@ -314,7 +313,7 @@ def _euler_tour_preorder(g: CSRGraph, parents: jnp.ndarray, labels: jnp.ndarray)
     return pre.astype(jnp.int32), size.astype(jnp.int32)
 
 
-def biconnectivity(g: CSRGraph, key: jax.Array | None = None):
+def biconnectivity(g: GraphLike, key: jax.Array | None = None):
     """Per-edge-slot biconnected-component labels (int32[slots], -1 on padding).
 
     Tarjan–Vishkin over a BFS spanning forest: Euler-tour preorder + subtree
@@ -322,7 +321,6 @@ def biconnectivity(g: CSRGraph, key: jax.Array | None = None):
     connectivity evaluated through edge-slot masks on the original graph.
     """
     n = g.n
-    slots = g.edge_src.shape[0]
     labels = connectivity(g, key, use_ldd=False)
     roots = labels == jnp.arange(n, dtype=jnp.int32)
     parents, levels = multi_source_bfs(g, roots)

@@ -9,12 +9,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.csr import CSRGraph
+from ..core.backend import GraphLike
 from ..core.edgemap import edgemap_reduce
 
 
 def pagerank(
-    g: CSRGraph,
+    g: GraphLike,
     *,
     damping: float = 0.85,
     eps: float = 1e-6,
@@ -49,7 +49,7 @@ def pagerank(
     return pr, iters
 
 
-def pagerank_iteration(g: CSRGraph, pr: jnp.ndarray, *, damping: float = 0.85):
+def pagerank_iteration(g: GraphLike, pr: jnp.ndarray, *, damping: float = 0.85):
     """A single PageRank iteration (Table 1 'PageRank Iteration' row)."""
     n = g.n
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)

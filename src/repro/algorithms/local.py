@@ -12,16 +12,15 @@ ALL above-threshold vertices each round (standard parallel ACL).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.csr import CSRGraph
+from ..core.backend import GraphLike
 from ..core.edgemap import edgemap_reduce
 
 
 def personalized_pagerank(
-    g: CSRGraph,
+    g: GraphLike,
     src: int,
     *,
     alpha: float = 0.15,
@@ -57,7 +56,7 @@ def personalized_pagerank(
     return p, r, rounds
 
 
-def ppr_matrix_oracle(g: CSRGraph, src: int, *, alpha: float = 0.15, iters: int = 2000):
+def ppr_matrix_oracle(g: GraphLike, src: int, *, alpha: float = 0.15, iters: int = 2000):
     """Dense power-iteration oracle: π = α·e_s + (1−α)·Wᵀπ (for tests)."""
     import numpy as np
 

@@ -9,18 +9,17 @@ legal determinization.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.csr import CSRGraph
+from ..core.backend import GraphLike
 from ..core.edgemap import edgemap_reduce
 
 INF_I32 = jnp.int32(2**31 - 1)
 UNVISITED = jnp.int32(-1)
 
 
-def bfs(g: CSRGraph, src: int, *, mode: str = "auto"):
+def bfs(g: GraphLike, src: int, *, mode: str = "auto"):
     """Breadth-first search.  Returns (parents int32[n], levels int32[n]).
 
     parents[v] = -1 if unreachable, src for the source itself.
@@ -51,7 +50,7 @@ def bfs(g: CSRGraph, src: int, *, mode: str = "auto"):
     return parents, levels
 
 
-def wbfs(g: CSRGraph, src: int, *, mode: str = "auto"):
+def wbfs(g: GraphLike, src: int, *, mode: str = "auto"):
     """Integral-weight SSSP via bucketed Dijkstra (Julienne-style, App. B).
 
     Weights are read from ``g.edge_w`` and truncated to int32.  Returns
@@ -87,7 +86,7 @@ def wbfs(g: CSRGraph, src: int, *, mode: str = "auto"):
     return dist
 
 
-def bellman_ford(g: CSRGraph, src: int, *, mode: str = "auto"):
+def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto"):
     """General-weight SSSP.  Returns (dist float32[n], has_neg_cycle bool).
 
     Vertices reachable from a negative cycle get -inf (App. C.1 spec).
@@ -138,7 +137,7 @@ def bellman_ford(g: CSRGraph, src: int, *, mode: str = "auto"):
     return dist, has_neg_cycle
 
 
-def widest_path(g: CSRGraph, src: int, *, mode: str = "auto"):
+def widest_path(g: GraphLike, src: int, *, mode: str = "auto"):
     """Single-source widest path (max-min path semiring), Bellman-Ford style.
 
     Returns width float32[n]; -inf for unreachable, +inf for the source.
@@ -168,7 +167,7 @@ def widest_path(g: CSRGraph, src: int, *, mode: str = "auto"):
     return width
 
 
-def betweenness(g: CSRGraph, src: int, *, mode: str = "auto"):
+def betweenness(g: GraphLike, src: int, *, mode: str = "auto"):
     """Single-source betweenness centrality (Brandes forward/backward).
 
     Returns delta float32[n] — the dependency scores from src.

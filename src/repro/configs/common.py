@@ -9,7 +9,7 @@ the smoke tests run REDUCED configs of the same families on real arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ n_radial=6  [arXiv:2003.03123; unverified]"""
 from __future__ import annotations
 
 from ..models.gnn import dimenet as mod
-from .common import TRIPLET_CAP
 from .gnn_common import gnn_cells, gnn_smoke_batch
 
 ARCH_ID = "dimenet"

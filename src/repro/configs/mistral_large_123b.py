@@ -2,9 +2,7 @@
 vocab=32768  [hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
 from __future__ import annotations
 
-import dataclasses
 
-import jax
 
 from ..models import transformer_lm as lm
 from .lm_common import lm_cells, lm_smoke_batch

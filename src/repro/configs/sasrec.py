@@ -7,7 +7,6 @@ train_batch 65,536 (training) · serve_p99 512 (online) · serve_bulk 262,144
 1,000,448 = 512·1954) — batched dot against the sharded candidate rows."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

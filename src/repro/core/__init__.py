@@ -2,14 +2,24 @@
 
 Public surface:
   CSRGraph / build_csr / graph_spec       — immutable blocked CSR (large memory)
+  CompressedCSR / compress                — delta-packed execution backend (§5.1.3)
+  GraphBackend / GraphLike                — the protocol both backends satisfy
   VertexSubset / from_indices / from_mask — frontiers (O(n) small memory)
   edgemap_reduce / edge_map               — direction-optimized edgeMapChunked
   GraphFilter / make_filter / pack_vertices / filter_edges — §4.2 bitset filter
   Buckets / make_buckets                  — semi-eager bucketing (App. B)
   PSAMCost                                — §3 cost accounting
 """
+from .backend import GraphBackend, GraphLike, dense_block_view, tile_block_view
 from .bucketing import NULL_BUCKET, Buckets, make_buckets
-from .compressed import CompressedCSR, compress, decode_block, decode_blocks, edgemap_sum_compressed
+from .compressed import (
+    CompressedCSR,
+    compress,
+    decode_block,
+    decode_block_tile,
+    decode_blocks,
+    edgemap_sum_compressed,
+)
 from .csr import DEFAULT_BLOCK_SIZE, CSRGraph, build_csr, graph_spec
 from .edgemap import edge_map, edgemap_chunked, edgemap_dense, edgemap_reduce
 from .graph_filter import (
@@ -22,15 +32,21 @@ from .graph_filter import (
     pack_bits,
     pack_vertices,
     unpack_bits,
+    unpack_word_bits,
 )
 from .psam import PSAMCost
 from .vertex_subset import VertexSubset, empty, from_indices, from_mask, full
 
 __all__ = [
     "CompressedCSR",
+    "GraphBackend",
+    "GraphLike",
     "compress",
     "decode_blocks",
     "decode_block",
+    "decode_block_tile",
+    "dense_block_view",
+    "tile_block_view",
     "edgemap_sum_compressed",
     "CSRGraph",
     "build_csr",
@@ -51,6 +67,7 @@ __all__ = [
     "filter_edges",
     "filter_edges_pred",
     "unpack_bits",
+    "unpack_word_bits",
     "pack_bits",
     "edge_active_flat",
     "live_block_indices",

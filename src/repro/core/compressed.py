@@ -12,9 +12,17 @@ dimension — exactly the "decode the whole block to fetch one edge"
 discipline the paper's filter iterator uses (App. D.1) — and the
 graphFilter bits apply unchanged on top of the decoded block.
 
+``CompressedCSR`` is a first-class execution backend: it exposes the same
+block view (``block_src`` / ``block_dst`` / ``block_w`` / ``edge_valid``)
+that ``edge_map`` and the graphFilter consume, with the decoded arrays
+produced lazily (XLA fuses the cumsum decode into the consumer, so nothing
+int32-wide is ever materialized in HBM on the jit path; the Pallas kernel in
+``repro.kernels.compressed_spmv`` streams the raw uint16 deltas directly).
+
 Compression ratio: 32-bit targets → ~16.25 bits/edge + exceptions, i.e.
 ~2× on locality-friendly orderings (the paper reports 2.7–2.9× with
-byte codes on web graphs).
+byte codes on web graphs).  Weights (when present) do not delta-compress
+and are carried uncompressed.
 """
 from __future__ import annotations
 
@@ -35,13 +43,15 @@ ESCAPE = np.uint16(0xFFFF)
     data_fields=[
         "block_first",
         "deltas",
+        "valid_count",
         "exc_block",
         "exc_slot",
         "exc_value",
         "block_src",
         "degrees",
+        "block_weights",
     ],
-    meta_fields=["n", "m", "num_blocks", "block_size", "n_exceptions"],
+    meta_fields=["n", "m", "num_blocks", "block_size", "n_exceptions", "weighted"],
 )
 @dataclasses.dataclass(frozen=True)
 class CompressedCSR:
@@ -49,6 +59,7 @@ class CompressedCSR:
 
     block_first: jnp.ndarray  # int32[NB]       — first target per block
     deltas: jnp.ndarray       # uint16[NB, FB]  — deltas[:, 0] unused (=0)
+    valid_count: jnp.ndarray  # uint16[NB]      — real (non-padding) slots, front-packed
     exc_block: jnp.ndarray    # int32[NE]       — exception coordinates
     exc_slot: jnp.ndarray     # int32[NE]
     exc_value: jnp.ndarray    # int32[NE]       — true delta value
@@ -59,12 +70,15 @@ class CompressedCSR:
     num_blocks: int
     block_size: int
     n_exceptions: int
+    block_weights: jnp.ndarray | None = None  # float32[NB, FB] when weighted
+    weighted: bool = False
 
     @property
     def compressed_bytes(self) -> int:
         return int(
             self.block_first.size * 4
             + self.deltas.size * 2
+            + self.valid_count.size * 2
             + self.n_exceptions * 12
         )
 
@@ -72,16 +86,86 @@ class CompressedCSR:
     def uncompressed_bytes(self) -> int:
         return int(self.deltas.size * 4)
 
+    @property
+    def compression_ratio(self) -> float:
+        return self.uncompressed_bytes / max(self.compressed_bytes, 1)
+
+    @property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    def out_degree(self, v):
+        return self.degrees[v]
+
+    # ------------------------------------------------------------------
+    # Backend view — same surface the uncompressed CSRGraph offers.  The
+    # decoded arrays are *lazy*: under jit the cumsum decode fuses into
+    # whatever consumes it (edgeMap's gather/segment-reduce), so the wide
+    # int32 targets never round-trip through HBM.
+    # ------------------------------------------------------------------
+    @property
+    def block_dst(self) -> jnp.ndarray:
+        """Decoded int32[NB, FB] targets (sentinel n on padding slots)."""
+        return decode_blocks(self)
+
+    @property
+    def block_w(self) -> jnp.ndarray:
+        if self.block_weights is not None:
+            return self.block_weights
+        return jnp.ones((self.num_blocks, self.block_size), jnp.float32)
+
+    @property
+    def edge_dst(self) -> jnp.ndarray:
+        return decode_blocks(self).reshape(-1)
+
+    @property
+    def edge_src(self) -> jnp.ndarray:
+        """int32[NB*F_B] — owner per slot, sentinel n on padding (the exact
+        CSRGraph padding contract, so src == n neutralizes padding for any
+        consumer keyed on out-of-range sources)."""
+        src = jnp.broadcast_to(
+            self.block_src[:, None], (self.num_blocks, self.block_size)
+        ).reshape(-1)
+        return jnp.where(self.edge_valid, src, jnp.int32(self.n))
+
+    @property
+    def edge_w(self) -> jnp.ndarray:
+        return self.block_w.reshape(-1)
+
+    @property
+    def edge_valid(self) -> jnp.ndarray:
+        """bool[NB*F_B] — True on real (non-padding) edge slots.
+
+        Structural: read straight off ``valid_count``, no decode needed —
+        makeFilter on a compressed graph never touches the delta stream.
+        """
+        lane = jnp.arange(self.block_size, dtype=jnp.int32)
+        vc = self.valid_count.astype(jnp.int32)
+        return (lane[None, :] < vc[:, None]).reshape(-1)
+
 
 def compress(g: CSRGraph) -> CompressedCSR:
-    """Host-side encoder (runs once at load, like the paper's preprocessing)."""
+    """Host-side encoder (runs once at load, like the paper's preprocessing).
+
+    Padding slots (sentinel n in the CSR) are encoded as *repeats of the
+    last real target* — delta 0 — and validity is carried structurally as a
+    per-block count (slots are front-packed by build_csr).  The decoders
+    re-insert the sentinel on padding slots, so
+    ``decode_blocks(compress(g)) == g.block_dst`` bit for bit while the
+    exception list stays tied to true ≥2¹⁶ adjacency gaps — without this,
+    every padded block on a graph with n > 2¹⁶ would land on the exception
+    list and the "rare path" would stop being rare.  Weighted graphs keep
+    their weights uncompressed alongside the delta-packed targets.
+    """
     NB, FB = g.num_blocks, g.block_size
     dst = np.asarray(g.edge_dst).reshape(NB, FB).astype(np.int64)
-    # padding slots carry the sentinel n; treat them as repeats of the last
-    # real target so deltas stay small, and rely on the CSR valid mask later
-    first = dst[:, 0].astype(np.int32)
-    prev = dst[:, :-1]
-    cur = dst[:, 1:]
+    vc = (dst < g.n).sum(axis=1).astype(np.int64)  # front-packed real slots
+    last = np.where(vc > 0, dst[np.arange(NB), np.maximum(vc - 1, 0)], 0)
+    lane = np.arange(FB)[None, :]
+    dst_enc = np.where(lane < vc[:, None], dst, last[:, None])
+    first = dst_enc[:, 0].astype(np.int32)
+    prev = dst_enc[:, :-1]
+    cur = dst_enc[:, 1:]
     raw = cur - prev
     raw = np.concatenate([np.zeros((NB, 1), np.int64), raw], axis=1)
     over = (raw >= int(ESCAPE)) | (raw < 0)
@@ -90,6 +174,7 @@ def compress(g: CSRGraph) -> CompressedCSR:
     return CompressedCSR(
         block_first=jnp.asarray(first),
         deltas=jnp.asarray(deltas),
+        valid_count=jnp.asarray(vc.astype(np.uint16)),
         exc_block=jnp.asarray(eb.astype(np.int32)),
         exc_slot=jnp.asarray(es.astype(np.int32)),
         exc_value=jnp.asarray(raw[eb, es].astype(np.int32)),
@@ -100,21 +185,31 @@ def compress(g: CSRGraph) -> CompressedCSR:
         num_blocks=NB,
         block_size=FB,
         n_exceptions=int(eb.shape[0]),
+        block_weights=g.block_w if g.weighted else None,
+        weighted=g.weighted,
     )
+
+
+def _lane_iota(c: CompressedCSR) -> jnp.ndarray:
+    return jnp.arange(c.block_size, dtype=jnp.int32)
 
 
 def decode_blocks(c: CompressedCSR) -> jnp.ndarray:
     """Decode ALL blocks → int32[NB, FB] targets (vectorized cumsum).
 
-    O(m) work / O(log F_B) depth per block, matching the paper's block
-    decode cost; used by edgeMap over compressed graphs.
+    Padding slots come back as the sentinel n (structural ``valid_count``
+    mask), bit-identical to the uncompressed ``block_dst``.  O(m) work /
+    O(log F_B) depth per block, matching the paper's block decode cost;
+    used by edgeMap over compressed graphs.
     """
     d = c.deltas.astype(jnp.int32)
     # patch exceptions (escaped wide deltas)
     if c.n_exceptions:
         d = d.at[c.exc_block, c.exc_slot].set(c.exc_value, mode="drop")
     d = d.at[:, 0].set(0)
-    return c.block_first[:, None] + jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    raw = c.block_first[:, None] + jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    valid = _lane_iota(c)[None, :] < c.valid_count.astype(jnp.int32)[:, None]
+    return jnp.where(valid, raw, jnp.int32(c.n))
 
 
 def decode_block(c: CompressedCSR, bid) -> jnp.ndarray:
@@ -126,7 +221,47 @@ def decode_block(c: CompressedCSR, bid) -> jnp.ndarray:
             jnp.where(hit, c.exc_value, 0), mode="drop"
         )
     d = d.at[0].set(0)
-    return jnp.take(c.block_first, bid) + jnp.cumsum(d, dtype=jnp.int32)
+    raw = jnp.take(c.block_first, bid) + jnp.cumsum(d, dtype=jnp.int32)
+    vc = jnp.take(c.valid_count, bid).astype(jnp.int32)
+    return jnp.where(_lane_iota(c) < vc, raw, jnp.int32(c.n))
+
+
+def exception_dense(c: CompressedCSR) -> bool:
+    """Static (metadata-only) test: is the exception list too dense for the
+    per-tile COO patch to stay a rare path?  Past this point consumers
+    should decode exactly instead (the compression is doing little on such
+    id-locality-free graphs anyway)."""
+    return c.n_exceptions > max(16, min(c.num_blocks // 4, 4096))
+
+
+def decode_block_tile(c: CompressedCSR, bids: jnp.ndarray) -> jnp.ndarray:
+    """Decode a tile of blocks → int32[C, FB] (the chunk-loop path, §4.1).
+
+    ``bids`` may contain the fill value ``num_blocks`` (or anything out of
+    range): those rows decode to all-sentinel (target == n), matching the
+    uncompressed chunk gather with ``fill_value=n``.  Peak intermediate is
+    ``C × F_B`` words — never proportional to the whole edge set.
+
+    Precondition: real block ids in ``bids`` must be unique (chunk tiles are
+    compacted indices, so this always holds there) — a duplicated id would
+    get its exceptions patched only into its first row.  For decoding the
+    exception list itself (which can repeat a block), vmap ``decode_block``.
+    The patch is O(C · NE) boolean compares + an O(NE) scatter per tile.
+    """
+    C = bids.shape[0]
+    d = jnp.take(c.deltas, bids, axis=0, mode="fill", fill_value=0).astype(jnp.int32)
+    if c.n_exceptions:
+        # route each exception to the (unique) tile row holding its block;
+        # exceptions whose block is not in the tile scatter-drop at row C
+        match = bids[:, None] == c.exc_block[None, :]                      # (C, NE)
+        hit = jnp.any(match, axis=0)
+        row = jnp.where(hit, jnp.argmax(match, axis=0), jnp.int32(C))
+        d = d.at[row, c.exc_slot].set(c.exc_value, mode="drop")
+    d = d.at[:, 0].set(0)
+    first = jnp.take(c.block_first, bids, mode="fill", fill_value=c.n)
+    raw = first[:, None] + jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    vc = jnp.take(c.valid_count, bids, mode="fill", fill_value=0).astype(jnp.int32)
+    return jnp.where(_lane_iota(c)[None, :] < vc[:, None], raw, jnp.int32(c.n))
 
 
 def edgemap_sum_compressed(

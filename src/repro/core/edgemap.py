@@ -19,17 +19,22 @@ Semantics (Ligra): ``out[v] = monoid over {map_fn(x[u], w_uv) : u∈frontier,
 (u,v) active}``, plus a ``touched`` mask (v received ≥1 contribution).  The
 caller applies the ``cond`` predicate to form the next frontier, exactly like
 Ligra's C(v).
+
+Every mode accepts either execution backend (``CSRGraph | CompressedCSR``,
+see ``repro.core.backend``): the dense pass reads the backend's block view
+(a lazy, fused cumsum decode for compressed graphs) and the chunked pass
+decodes block tiles *inside* the chunk loop, so the peak intermediate stays
+``chunk_blocks × F_B`` words regardless of storage format.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .csr import CSRGraph
+from .backend import GraphLike, dense_block_view, tile_block_view
 from .primitives import compact_mask, monoid_identity, segment_reduce
 from .vertex_subset import VertexSubset
 
@@ -58,7 +63,7 @@ def _combine(monoid, a, b):
 
 
 def edgemap_dense(
-    g: CSRGraph,
+    g: GraphLike,
     frontier_mask: jnp.ndarray,
     x: jnp.ndarray,
     *,
@@ -66,21 +71,32 @@ def edgemap_dense(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
 ):
-    """Pull-style pass over all edge slots.  Returns (out[n,...], touched[n])."""
-    n = g.n
+    """Pull-style pass over all edge slots.  Returns (out[n,...], touched[n]).
+
+    Reads the backend's block view: for ``CompressedCSR`` the target decode
+    is a lazy cumsum fused into the gather/segment-reduce below.
+    """
+    n, FB = g.n, g.block_size
     ident = monoid_identity(monoid, x.dtype)
-    act = _gather_rows(frontier_mask, g.edge_src, False) & g.edge_valid
+    block_dst, block_w = dense_block_view(g)
+    edge_dst = block_dst.reshape(-1)
+    frontier_blk = _gather_rows(frontier_mask, g.block_src, False)
+    act = (frontier_blk[:, None] & (block_dst < jnp.int32(n))).reshape(-1)
     if edge_active is not None:
         act = act & edge_active.reshape(-1)
-    xs = _gather_rows(x, g.edge_src, ident)
-    w = g.edge_w if x.ndim == 1 else g.edge_w[..., None]
+    xs_blk = _gather_rows(x, g.block_src, ident)
+    xs = jnp.broadcast_to(
+        xs_blk[:, None], (g.num_blocks, FB) + x.shape[1:]
+    ).reshape((g.num_blocks * FB,) + x.shape[1:])
+    edge_w = block_w.reshape(-1)
+    w = edge_w if x.ndim == 1 else edge_w[..., None]
     vals = map_fn(xs, w)
     if vals.ndim > act.ndim:
         sel = act.reshape(act.shape + (1,) * (vals.ndim - act.ndim))
     else:
         sel = act
     vals = jnp.where(sel, vals, ident)
-    ids = jnp.where(act, g.edge_dst, jnp.int32(n))
+    ids = jnp.where(act, edge_dst, jnp.int32(n))
     out = segment_reduce(vals, ids, n + 1, monoid)[:n]
     touched = (
         jax.ops.segment_max(act.astype(jnp.int32), ids, num_segments=n + 1)[:n] > 0
@@ -89,7 +105,7 @@ def edgemap_dense(
 
 
 def edgemap_chunked(
-    g: CSRGraph,
+    g: GraphLike,
     frontier_mask: jnp.ndarray,
     x: jnp.ndarray,
     *,
@@ -121,14 +137,12 @@ def edgemap_chunked(
     def body(state):
         i, out, touched = state
         bids = lax.dynamic_slice(idx, (i * C,), (C,))
-        dsts = _gather_rows(g.block_dst, bids, n)          # (C, FB)
-        ws = _gather_rows(g.block_w, bids, 0.0)            # (C, FB)
+        # per-backend tile view; compressed backends decode here, inside the
+        # chunk loop, so the peak intermediate stays C × F_B words
+        dsts, ws = tile_block_view(g, bids)                # (C, FB)
         srcs = _gather_rows(g.block_src, bids, n)          # (C,)
         xs = _gather_rows(x, srcs, ident)                  # (C, ...)
-        xs = jnp.broadcast_to(
-            xs[:, None] if x.ndim == 1 else xs[:, None, ...],
-            (C, FB) + feat_shape,
-        )
+        xs = jnp.broadcast_to(xs[:, None], (C, FB) + feat_shape)
         act = dsts < n
         if bits is not None:
             act = act & _gather_rows(bits, bids, False)
@@ -153,7 +167,7 @@ def edgemap_chunked(
 
 
 def edgemap_reduce(
-    g: CSRGraph,
+    g: GraphLike,
     frontier_mask: jnp.ndarray,
     x: jnp.ndarray,
     *,
@@ -199,7 +213,7 @@ def edgemap_reduce(
 
 
 def edge_map(
-    g: CSRGraph,
+    g: GraphLike,
     frontier: VertexSubset,
     x: jnp.ndarray,
     *,

@@ -17,6 +17,10 @@ compacted live-block index list produced on demand (O(n) words).
 
 TPU adaptation of §4.2.3: the TZCNT/BLSR word loop becomes vectorized
 popcount/mask arithmetic over whole VMEM tiles (see kernels/filter_pack).
+
+The filter composes with either execution backend (``CSRGraph`` or
+``CompressedCSR``): the block size is the compression block size (§4.2.1),
+so the bits line up 1:1 with decoded compressed blocks.
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .csr import CSRGraph
+from .backend import GraphLike
 from .primitives import popcount32
 
 WORD = 32
@@ -55,7 +59,7 @@ class GraphFilter:
         return jnp.any(self.bits != 0, axis=-1)
 
 
-def make_filter(g: CSRGraph) -> GraphFilter:
+def make_filter(g: GraphLike) -> GraphFilter:
     """makeFilter (§4.2.2): all real edges start active."""
     words = g.block_size // WORD
     mask = g.edge_valid.reshape(g.num_blocks, words, WORD)
@@ -71,12 +75,21 @@ def make_filter(g: CSRGraph) -> GraphFilter:
     )
 
 
+def unpack_word_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32[..., W] → bool[..., W*32], little-endian within each word.
+
+    The canonical bit order for every graphFilter consumer (edgeMap, the
+    Pallas kernels and their oracles) — change the packing here and in
+    ``pack_bits`` together.
+    """
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    opened = ((bits[..., :, None] >> shifts) & jnp.uint32(1)).astype(bool)
+    return opened.reshape(bits.shape[:-1] + (bits.shape[-1] * WORD,))
+
+
 def unpack_bits(f: GraphFilter) -> jnp.ndarray:
     """bool[NB, F_B] active-edge mask (the dense working view)."""
-    words = f.bits[..., :, None]  # (NB, W, 1)
-    shifts = jnp.arange(WORD, dtype=jnp.uint32)
-    opened = ((words >> shifts) & jnp.uint32(1)).astype(bool)
-    return opened.reshape(f.num_blocks, f.block_size)
+    return unpack_word_bits(f.bits)
 
 
 def pack_bits(mask: jnp.ndarray) -> jnp.ndarray:
@@ -92,14 +105,14 @@ def edge_active_flat(f: GraphFilter) -> jnp.ndarray:
     return unpack_bits(f).reshape(-1)
 
 
-def _recount(g: CSRGraph, bits: jnp.ndarray) -> jnp.ndarray:
+def _recount(g: GraphLike, bits: jnp.ndarray) -> jnp.ndarray:
     """active_deg from bits via per-block popcount + segment-sum (PackVertex)."""
     per_block = jnp.sum(popcount32(bits), axis=-1)  # int32[NB]
     return jax.ops.segment_sum(per_block, g.block_src, num_segments=g.n + 1)[: g.n]
 
 
 def pack_vertices(
-    g: CSRGraph,
+    g: GraphLike,
     f: GraphFilter,
     subset_mask: jnp.ndarray,
     keep_pred: jnp.ndarray,
@@ -130,14 +143,14 @@ def pack_vertices(
     )
 
 
-def filter_edges(g: CSRGraph, f: GraphFilter, keep_pred: jnp.ndarray):
+def filter_edges(g: GraphLike, f: GraphFilter, keep_pred: jnp.ndarray):
     """filterEdges (§4.2): pack every vertex; returns (filter', remaining)."""
     all_v = jnp.ones(g.n, dtype=bool)
     f2 = pack_vertices(g, f, all_v, keep_pred)
     return f2, f2.num_active_edges
 
 
-def filter_edges_pred(g: CSRGraph, f: GraphFilter, pred_fn):
+def filter_edges_pred(g: GraphLike, f: GraphFilter, pred_fn):
     """Convenience: ``pred_fn(src, dst, w) -> keep?`` evaluated on all slots."""
     keep = pred_fn(g.edge_src, g.edge_dst, g.edge_w)
     return filter_edges(g, f, keep)

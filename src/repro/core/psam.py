@@ -13,6 +13,32 @@ from __future__ import annotations
 import dataclasses
 
 
+def _compressed_target_words(g, blocks: int) -> int:
+    """Words read to stream ``blocks`` compressed target blocks: int32 first
+    + uint16 valid count + packed uint16 deltas per block, plus the
+    amortized COO exception triples (§5.1.3 / App. D.1)."""
+    per_block = -(-(4 + 2 + 2 * g.block_size) // 4)  # bytes → words, rounded up
+    exc = 3 * g.n_exceptions * blocks // max(g.num_blocks, 1)
+    return per_block * blocks + exc
+
+
+def _block_read_words(g, blocks: int) -> int:
+    """Words of large memory read to stream ``blocks`` edge blocks.
+
+    Compressed backends (anything exposing ``compressed_bytes``) are charged
+    the *compressed* footprint, which is how the paper's byte-decoded blocks
+    hit NVRAM at a fraction of the uncompressed bytes (§5.1.3); weights
+    (when present) ride along uncompressed.  Uncompressed blocks are charged
+    the flat dst + w words.
+    """
+    if hasattr(g, "compressed_bytes"):
+        words = _compressed_target_words(g, blocks)
+        if getattr(g, "weighted", False):
+            words += g.block_size * blocks
+        return words
+    return 2 * g.block_size * blocks  # dst + w
+
+
 @dataclasses.dataclass
 class PSAMCost:
     large_reads: int = 0      # words read from the read-only graph
@@ -21,17 +47,20 @@ class PSAMCost:
     omega: float = 4.0        # NVRAM write/read cost ratio (paper: ~4x)
 
     def charge_edgemap_dense(self, g):
-        self.large_reads += 2 * g.num_blocks * g.block_size  # dst + w
+        self.large_reads += _block_read_words(g, g.num_blocks)
         self.small_ops += 3 * g.n
 
     def charge_edgemap_chunked(self, g, active_blocks: int):
-        self.large_reads += 2 * active_blocks * g.block_size
+        self.large_reads += _block_read_words(g, active_blocks)
         self.small_ops += 3 * g.n
 
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,
         # writes only bits + degrees (small memory)
-        self.large_reads += touched_blocks * g.block_size
+        if hasattr(g, "compressed_bytes"):
+            self.large_reads += _compressed_target_words(g, touched_blocks)
+        else:
+            self.large_reads += touched_blocks * g.block_size
         self.small_ops += touched_blocks * (g.block_size // 32) + g.n
 
     def charge_small(self, words: int):

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 
 from ..checkpoint.ckpt import restore_latest
+from ..compat import make_mesh as _make_mesh
 from .shardings import axis_rules, spec_tree
 
 
@@ -25,12 +26,7 @@ def carve_mesh(n_devices: int | None = None, *, max_model: int = 16, devices=Non
     while model * 2 <= max_model and n % (model * 2) == 0:
         model *= 2
     data = n // model
-    return jax.make_mesh(
-        (data, model),
-        ("data", "model"),
-        devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"), devices=devices[:n])
 
 
 def elastic_restore(ckpt_dir: str, example_tree, logical_tree, rules, mesh):

@@ -12,8 +12,6 @@ reduction (the paper's "no cross-socket edge reads" rule, §5.2).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -5,9 +5,18 @@ Each kernel directory contains:
   ops.py    — jit'd public wrapper
   ref.py    — pure-jnp oracle (tests assert allclose against it)
 """
+from .compressed_spmv import compressed_block_spmv, compressed_spmv_vertex
 from .decode_attention import decode_attention
 from .edge_block_spmv import edge_block_spmv, spmv_vertex
 from .embedding_bag import embedding_bag
 from .filter_pack import filter_pack
 
-__all__ = ["edge_block_spmv", "spmv_vertex", "embedding_bag", "filter_pack", "decode_attention"]
+__all__ = [
+    "edge_block_spmv",
+    "spmv_vertex",
+    "compressed_block_spmv",
+    "compressed_spmv_vertex",
+    "embedding_bag",
+    "filter_pack",
+    "decode_attention",
+]

@@ -1,0 +1,9 @@
+from .ops import compressed_block_spmv, compressed_spmv_vertex
+from .ref import compressed_block_spmv_ref, compressed_spmv_vertex_ref
+
+__all__ = [
+    "compressed_block_spmv",
+    "compressed_spmv_vertex",
+    "compressed_block_spmv_ref",
+    "compressed_spmv_vertex_ref",
+]

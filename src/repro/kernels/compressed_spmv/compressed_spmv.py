@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused delta-decode + blocked masked SpMV — the dense
+edgeMap hot loop over the **compressed** graph backend (§5.1.3, App. D.1).
+
+PSAM → TPU mapping: the vertex state ``x`` (small memory) is VMEM-resident
+across the whole grid; the *compressed* edge blocks — one int32 first-target
+plus uint16 deltas per block — are streamed HBM→VMEM at roughly half the
+bytes of the int32 target stream the uncompressed kernel reads.  The decode
+(a lane-dimension cumsum) happens in VMEM, fused with the gather and the
+masked reduction: the int32 targets are never materialized in HBM, which is
+the TPU analogue of the paper's "decode the whole block to fetch one edge"
+filter-iterator discipline.  The graphFilter bits ride along as one uint32
+word per 32 edges, exactly as in ``edge_block_spmv``.
+
+Exception handling: deltas ≥ 2¹⁶ are stored as the ESCAPE sentinel and the
+kernel decodes those blocks *incorrectly on purpose* — patching a COO
+exception list inside a tiled kernel would serialize the pipeline.  The
+(rare) exception blocks are recomputed exactly by the wrapper in ops.py and
+overwritten in the per-block output; see ``compressed_spmv_vertex``.
+
+Grid: one program per tile of TB edge-blocks, mirroring edge_block_spmv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.graph_filter import unpack_word_bits
+
+DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
+
+
+def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, out_ref, *, n: int):
+    first = first_ref[...]        # (TB,)   int32 — first target per block
+    deltas = deltas_ref[...]      # (TB, FB) uint16 — streamed compressed tile
+    vc = vc_ref[...]              # (TB,)   int32 — valid (front-packed) slots
+    x = x_ref[...]                # (n_pad,) — PSAM small memory, VMEM-resident
+    bits = bits_ref[...]          # (TB, FB//32) uint32 — graphFilter view
+
+    # fused decode: zero the unused lane-0 delta, cumsum along lanes
+    d = deltas.astype(jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(lane == 0, 0, d)
+    dst = first[:, None] + jnp.cumsum(d, axis=1)
+
+    act = unpack_word_bits(bits)  # (TB, FB) bool, canonical graphFilter order
+
+    mask = (lane < vc[:, None]) & act  # structural padding mask ∧ filter bits
+    safe = jnp.where(mask & (dst < jnp.int32(n)), dst, 0)
+    xv = x[safe]                  # gather from VMEM-resident vertex state
+    contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
+    out_ref[...] = jnp.sum(contrib, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile_blocks", "interpret"))
+def compressed_block_spmv_pallas(
+    x: jnp.ndarray,            # (n_pad,) vertex values (padded to n+1 at least)
+    block_first: jnp.ndarray,  # (NB,) int32
+    deltas: jnp.ndarray,       # (NB, FB) uint16
+    valid_count: jnp.ndarray,  # (NB,) uint16/int32 — real slots per block
+    bits: jnp.ndarray,         # (NB, FB//32) uint32
+    *,
+    n: int,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-block partial sums off the compressed stream:
+    out[b] = Σ_slot active(b,slot)·x[decode(b)[slot]].
+
+    Blocks containing ESCAPE deltas decode wrong here and must be patched by
+    the caller (ops.compressed_spmv_vertex does this).
+    """
+    NB, FB = deltas.shape
+    vc = valid_count.astype(jnp.int32)
+    TB = min(tile_blocks, NB)
+    pad = (-NB) % TB
+    if pad:
+        block_first = jnp.pad(block_first, (0, pad), constant_values=n)
+        deltas = jnp.pad(deltas, ((0, pad), (0, 0)))
+        vc = jnp.pad(vc, (0, pad))
+        bits = jnp.pad(bits, ((0, pad), (0, 0)))
+    nb_pad = NB + pad
+    grid = (nb_pad // TB,)
+    W = FB // 32
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),  # x stays resident
+            pl.BlockSpec((TB,), lambda i: (i,)),          # compressed stream:
+            pl.BlockSpec((TB, FB), lambda i: (i, 0)),     #   first + deltas
+            pl.BlockSpec((TB,), lambda i: (i,)),          #   + valid counts
+            pl.BlockSpec((TB, W), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad,), x.dtype),
+        interpret=interpret,
+    )(x, block_first, deltas, vc, bits)
+    return out[:NB]

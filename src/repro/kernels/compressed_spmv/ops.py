@@ -1,0 +1,100 @@
+"""jit'd public wrappers around the compressed_spmv Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.compressed import CompressedCSR, decode_block, exception_dense
+from ...core.graph_filter import GraphFilter, make_filter, unpack_word_bits
+from .compressed_spmv import compressed_block_spmv_pallas
+from .ref import compressed_block_spmv_ref
+
+
+def compressed_block_spmv(
+    x,
+    block_first,
+    deltas,
+    valid_count,
+    bits,
+    *,
+    n: int,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+):
+    return compressed_block_spmv_pallas(
+        x,
+        block_first,
+        deltas,
+        valid_count,
+        bits,
+        n=n,
+        interpret=interpret,
+        tile_blocks=tile_blocks,
+    )
+
+
+def _exception_block_sums(c: CompressedCSR, x, bits):
+    """Exact per-block partial sums for the blocks on the exception list.
+
+    ``exc_block`` may repeat a block (several wide gaps in one block), so
+    each row is decoded with ``decode_block``, which patches *every*
+    exception matching its block id — O(NE² ) integer compares plus
+    O(NE · F_B) decode work, no NE×NE×F_B intermediates (App. D.1's rare
+    path; the ops-level fallback caps NE before this could dominate).
+    """
+    ebids = c.exc_block
+    dst = jax.vmap(lambda b: decode_block(c, b))(ebids)    # exact decode
+    act = unpack_word_bits(jnp.take(bits, ebids, axis=0))
+    mask = (dst < jnp.int32(c.n)) & act
+    safe = jnp.where(mask, dst, 0)
+    xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
+    contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
+    return jnp.sum(contrib, axis=1)                        # (NE,)
+
+
+def compressed_spmv_vertex(
+    c: CompressedCSR,
+    x: jnp.ndarray,
+    f: GraphFilter | None = None,
+    *,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+) -> jnp.ndarray:
+    """out[v] = Σ_{(v,u) active} x[u], straight off the compressed stream.
+
+    The Pallas kernel fuses the uint16-delta decode with the masked SpMV; the
+    rare ESCAPE blocks are then recomputed exactly and patched into the
+    per-block sums before the cheap O(#blocks) owner reduction.
+
+    Graphs whose neighbor lists lack id-locality (many true ≥2¹⁶ gaps) make
+    the exception list dense; past num_blocks/4 exceptions — or past the
+    absolute cap where the O(NE²) tile fixup would dominate — the fused
+    stream saves nothing and the exact jnp decode is used instead, a static
+    (trace-time) choice since n_exceptions is metadata.  Weighted graphs
+    keep w uncompressed, so their hot loop stays on the uncompressed
+    ``edge_block_spmv`` kernel; this wrapper is the unweighted
+    (web-graph-shaped) fast path.
+    """
+    if c.weighted:
+        raise ValueError(
+            "compressed_spmv_vertex is the unweighted fast path; "
+            "use kernels.edge_block_spmv.spmv_vertex on the uncompressed view"
+        )
+    bits = f.bits if f is not None else make_filter(c).bits
+    if exception_dense(c):
+        per_block = compressed_block_spmv_ref(c, x, bits)
+    else:
+        per_block = compressed_block_spmv_pallas(
+            x,
+            c.block_first,
+            c.deltas,
+            c.valid_count,
+            bits,
+            n=c.n,
+            interpret=interpret,
+            tile_blocks=tile_blocks,
+        )
+        if c.n_exceptions:
+            fixed = _exception_block_sums(c, x, bits)
+            per_block = per_block.at[c.exc_block].set(fixed)
+    return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

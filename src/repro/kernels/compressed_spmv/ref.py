@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the compressed_spmv kernel.
+
+Uses the exact block decode (exception list included), so it is the ground
+truth both for the fused kernel and for the exception-patching wrapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.compressed import CompressedCSR, decode_blocks
+from ...core.graph_filter import unpack_word_bits
+
+
+def compressed_block_spmv_ref(c: CompressedCSR, x, bits):
+    """Per-block partial sums, computed with plain jnp ops (exact decode)."""
+    dst = decode_blocks(c)
+    act = unpack_word_bits(bits)
+    mask = (dst < jnp.int32(c.n)) & act
+    safe = jnp.where(mask, dst, 0)
+    xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
+    contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
+    return jnp.sum(contrib, axis=1)
+
+
+def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits):
+    per_block = compressed_block_spmv_ref(c, x, bits)
+    return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

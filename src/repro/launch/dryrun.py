@@ -22,6 +22,7 @@ import traceback
 
 import jax
 
+from ..compat import use_mesh
 from ..configs import all_cells
 from ..distributed.shardings import axis_rules
 from .mesh import make_production_mesh
@@ -161,7 +162,7 @@ def _compile_cost_variant(cell, mesh, n_layers: int):
     )
     cc = dataclasses.replace(cell, model_cfg=cfg)
     fn, specs, shardings, out_shardings = build_step(cc, mesh)
-    with jax.set_mesh(mesh), axis_rules(cell.rules, mesh):
+    with use_mesh(mesh), axis_rules(cell.rules, mesh):
         compiled = jax.jit(
             fn, in_shardings=shardings, out_shardings=out_shardings
         ).lower(*specs).compile()
@@ -197,7 +198,7 @@ def run_cell(cell, mesh, mesh_name: str, out_dir: str):
     }
     try:
         fn, specs, shardings, out_shardings = build_step(cell, mesh)
-        with jax.set_mesh(mesh), axis_rules(cell.rules, mesh):
+        with use_mesh(mesh), axis_rules(cell.rules, mesh):
             jitted = jax.jit(fn, in_shardings=shardings, out_shardings=out_shardings)
             lowered = jitted.lower(*specs)
             t_lower = time.time() - t0
@@ -281,7 +282,7 @@ def run_graph_engine(mesh, mesh_name: str, out_dir: str, *, rules_name: str = "b
                "model_flops": 2.0 * NB * FB}
         try:
             fn = build()
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 compiled = jax.jit(fn).lower(*specs).compile()
             cost = compiled.cost_analysis()
             mem = compiled.memory_analysis()

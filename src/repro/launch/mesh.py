@@ -3,29 +3,28 @@
 A FUNCTION, not a module-level constant: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
 tests see the real single CPU device).
+
+Mesh construction goes through ``repro.compat`` so the same code runs on
+JAX versions with and without ``jax.sharding.AxisType``.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
-
-def _auto(n):
-    return (AxisType.Auto,) * n
+from ..compat import make_mesh as _make_mesh
+from ..compat import use_mesh  # noqa: F401  (re-export: the mesh entry point)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Explicit mesh for elastic re-carves and tests."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def single_device_mesh():
     """1×1 mesh over the local device — lets the same pjit code paths run in
     CPU tests."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((1, 1), ("data", "model"))

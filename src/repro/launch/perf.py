@@ -37,6 +37,7 @@ import os
 
 import jax
 
+from ..compat import use_mesh
 from ..configs import all_cells
 from ..distributed.shardings import (
     GNN_RULES_TP,
@@ -154,7 +155,7 @@ def _run_engine_variants(mesh, mesh_name, out_dir):
                "notes": str(kwargs), "model_flops": 2.0 * NB * FB}
         try:
             fn = distributed_pagerank_step(mesh, n=n, **kwargs)
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 compiled = jax.jit(fn).lower(*specs).compile()
             cost = compiled.cost_analysis()
             mem = compiled.memory_analysis()

@@ -7,10 +7,8 @@ serving path runs them.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -98,7 +98,6 @@ def forward(params, batch, cfg: EquiformerV2Config):
 
     tab = sh_index_table(cfg.l_max)
     l_of = jnp.asarray(tab[:, 0], jnp.int32)      # (Cf,)
-    m_of = jnp.asarray(tab[:, 1], jnp.int32)
     m_ok_np = np.abs(tab[:, 1]) <= cfg.m_max      # host-side (static) mask
     m_ok = jnp.asarray(m_ok_np)
     m_idx = jnp.asarray(

@@ -19,7 +19,6 @@ from .aggregate import (
     scatter_mean,
     scatter_min,
     scatter_std,
-    scatter_sum,
 )
 
 

@@ -17,7 +17,6 @@ compact; each block is wrapped in jax.checkpoint.  Attention is blockwise
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax

@@ -12,9 +12,6 @@ all-fp32 baseline.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -33,8 +30,8 @@ def _block_attn(
     Returns (B, Sq, G, Hg, Dv).
     """
     B, Sq, G, Hg, D = q.shape
-    Dv = v.shape[-1]
     Skv = k.shape[1]
+    Dv = v.shape[-1]
     kb = min(kv_block, Skv)
     nblk = -(-Skv // kb)
     pad = nblk * kb - Skv
@@ -109,7 +106,6 @@ def _block_attn_causal_skip(
     a static trip count (reverse-mode safe).
     """
     B, Sq, G, Hg, D = q.shape
-    Dv = v.shape[-1]
     qb = min(kv_block, Sq)
     nqb = -(-Sq // qb)
     outs = []

@@ -62,7 +62,6 @@ def widest_path_ref(g, src):
     width[src] = np.inf
     for _ in range(g.n):
         nw = np.minimum(width[s], w)
-        upd = np.maximum.reduceat if False else None
         best = width.copy()
         np.maximum.at(best, d, nw)
         if np.array_equal(best, width):

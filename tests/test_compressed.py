@@ -1,0 +1,318 @@
+"""Compressed execution backend: encode/decode round-trips, edgeMap
+equivalence in every mode, algorithm end-to-end parity, the fused
+decode+SpMV Pallas kernel, graphFilter composition, and PSAM accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import bfs, connectivity, pagerank, pagerank_iteration
+from repro.core import (
+    CompressedCSR,
+    PSAMCost,
+    build_csr,
+    compress,
+    decode_block,
+    decode_block_tile,
+    decode_blocks,
+    edgemap_reduce,
+    from_indices,
+    full,
+    make_filter,
+    pack_vertices,
+)
+from repro.data import rmat_graph
+from repro.kernels import compressed_spmv_vertex, spmv_vertex
+from repro.kernels.compressed_spmv.compressed_spmv import compressed_block_spmv_pallas
+from repro.kernels.compressed_spmv.ref import (
+    compressed_block_spmv_ref,
+    compressed_spmv_vertex_ref,
+)
+
+
+@pytest.fixture(scope="module")
+def g():
+    return rmat_graph(64, 256, seed=7, block_size=32)
+
+
+@pytest.fixture(scope="module")
+def c(g):
+    return compress(g)
+
+
+def wide_delta_graph():
+    """Graph whose encoding needs the ≥2¹⁶-delta COO exception path."""
+    n = 70000
+    src = np.array([0, 0, 0, 0, 0, 0, 1, 1], np.int64)
+    dst = np.array([1, 2, 66000, 66001, 69998, 69999, 3, 69000], np.int64)
+    return build_csr(n, src, dst, block_size=32)
+
+
+# ----------------------------------------------------------------------
+# Encode/decode round-trips
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,bs", [(32, 96, 32), (64, 256, 32), (128, 700, 64)])
+def test_roundtrip_rmat(n, m, bs):
+    g = rmat_graph(n, m, seed=n + m, block_size=bs)
+    c = compress(g)
+    np.testing.assert_array_equal(
+        np.asarray(decode_blocks(c)), np.asarray(g.block_dst)
+    )
+    assert c.compressed_bytes < c.uncompressed_bytes
+
+
+def test_roundtrip_exception_path():
+    g = wide_delta_graph()
+    c = compress(g)
+    assert c.n_exceptions > 0  # the ≥2^16 gaps must escape
+    np.testing.assert_array_equal(
+        np.asarray(decode_blocks(c)), np.asarray(g.block_dst)
+    )
+    # single-block decode agrees too, including on exception blocks
+    for bid in [0, int(np.asarray(c.exc_block)[0])]:
+        np.testing.assert_array_equal(
+            np.asarray(decode_block(c, bid)), np.asarray(g.block_dst)[bid]
+        )
+
+
+def test_decode_block_tile_matches_rows():
+    g = wide_delta_graph()
+    c = compress(g)
+    # unique real bids (the decode_block_tile precondition): both blocks of
+    # this graph carry an exception, plus one fill row
+    assert set(np.asarray(c.exc_block).tolist()) == {0, 1}
+    bids = jnp.asarray([0, 1, c.num_blocks], jnp.int32)
+    tile = np.asarray(decode_block_tile(c, bids))
+    np.testing.assert_array_equal(tile[0], np.asarray(g.block_dst)[0])
+    np.testing.assert_array_equal(tile[1], np.asarray(g.block_dst)[1])
+    assert np.all(tile[2] == g.n)  # fill rows decode to all-sentinel
+
+
+def test_backend_views_match_csr(g, c):
+    np.testing.assert_array_equal(np.asarray(c.edge_dst), np.asarray(g.edge_dst))
+    np.testing.assert_array_equal(np.asarray(c.edge_valid), np.asarray(g.edge_valid))
+    assert c.compression_ratio > 1.5
+
+
+# ----------------------------------------------------------------------
+# edgeMap equivalence: compressed vs uncompressed in all three modes
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["dense", "sparse", "auto"])
+def test_edgemap_int_bit_identical(g, c, mode):
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    for frontier in [from_indices(g.n, [0, 3, 11]), full(g.n)]:
+        a, at = edgemap_reduce(g, frontier.mask, x, monoid="min", mode=mode)
+        b, bt = edgemap_reduce(c, frontier.mask, x, monoid="min", mode=mode)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(at), np.asarray(bt))
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse", "auto"])
+def test_edgemap_float_allclose(g, c, mode):
+    xf = jnp.asarray(np.random.default_rng(0).normal(size=g.n), jnp.float32)
+    fr = from_indices(g.n, [0, 3, 11]).mask
+    a, _ = edgemap_reduce(g, fr, xf, monoid="sum", mode=mode)
+    b, _ = edgemap_reduce(c, fr, xf, monoid="sum", mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_edgemap_weighted_backend():
+    gw = rmat_graph(64, 256, weighted=True, seed=3, block_size=32)
+    cw = compress(gw)
+    assert cw.weighted and cw.block_weights is not None
+    xf = jnp.asarray(np.random.default_rng(1).normal(size=gw.n), jnp.float32)
+    fr = from_indices(gw.n, [0, 5, 9]).mask
+    for mode in ["dense", "sparse"]:
+        a, _ = edgemap_reduce(
+            gw, fr, xf, monoid="sum", map_fn=lambda xs, w: xs * w, mode=mode
+        )
+        b, _ = edgemap_reduce(
+            cw, fr, xf, monoid="sum", map_fn=lambda xs, w: xs * w, mode=mode
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_edgemap_exception_graph_equivalence():
+    g = wide_delta_graph()
+    c = compress(g)
+    x = jnp.arange(g.n, dtype=jnp.int32)
+    fr = from_indices(g.n, [0, 1]).mask
+    for mode in ["dense", "sparse"]:
+        a, at = edgemap_reduce(g, fr, x, monoid="min", mode=mode)
+        b, bt = edgemap_reduce(c, fr, x, monoid="min", mode=mode)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(at), np.asarray(bt))
+
+
+# ----------------------------------------------------------------------
+# Algorithms end-to-end on the compressed backend
+# ----------------------------------------------------------------------
+def test_bfs_end_to_end(g, c):
+    pg, lg = bfs(g, 0)
+    pc, lc = bfs(c, 0)
+    np.testing.assert_array_equal(np.asarray(pg), np.asarray(pc))
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lc))
+
+
+def test_pagerank_end_to_end(g, c):
+    pr_g, it_g = pagerank(g)
+    pr_c, it_c = pagerank(c)
+    assert int(it_g) == int(it_c)
+    np.testing.assert_allclose(np.asarray(pr_g), np.asarray(pr_c), atol=1e-7)
+    pr1g = pagerank_iteration(g, pr_g)
+    pr1c = pagerank_iteration(c, pr_c)
+    np.testing.assert_allclose(np.asarray(pr1g), np.asarray(pr1c), atol=1e-7)
+
+
+def test_connectivity_end_to_end(g, c):
+    np.testing.assert_array_equal(
+        np.asarray(connectivity(g)), np.asarray(connectivity(c))
+    )
+    key = jax.random.PRNGKey(0)
+    np.testing.assert_array_equal(
+        np.asarray(connectivity(g, key)), np.asarray(connectivity(c, key))
+    )
+
+
+# ----------------------------------------------------------------------
+# graphFilter composes over the compressed backend (§4.2.1)
+# ----------------------------------------------------------------------
+def test_filter_composes_with_compressed(g, c):
+    fg = make_filter(g)
+    fc = make_filter(c)
+    np.testing.assert_array_equal(np.asarray(fg.bits), np.asarray(fc.bits))
+    keep = g.edge_valid & (g.edge_dst % 3 != 0)
+    f2g = pack_vertices(g, fg, jnp.ones(g.n, bool), keep)
+    f2c = pack_vertices(c, fc, jnp.ones(g.n, bool), keep)
+    np.testing.assert_array_equal(np.asarray(f2g.bits), np.asarray(f2c.bits))
+    np.testing.assert_array_equal(
+        np.asarray(f2g.active_deg), np.asarray(f2c.active_deg)
+    )
+
+
+# ----------------------------------------------------------------------
+# Fused decode+SpMV Pallas kernel
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,bs,tile", [(32, 96, 32, 2), (64, 256, 32, 8), (128, 700, 64, 4)])
+def test_compressed_spmv_kernel_sweep(n, m, bs, tile):
+    g = rmat_graph(n, m, seed=n + m, block_size=bs)
+    c = compress(g)
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (g.n,), jnp.float32)
+    got = compressed_spmv_vertex(c, x, f, tile_blocks=tile)
+    want = compressed_spmv_vertex_ref(c, x, f.bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # and against the uncompressed kernel on identical (unweighted) work
+    unc = spmv_vertex(g, x, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(unc), rtol=1e-5, atol=1e-5)
+
+
+def test_compressed_spmv_kernel_exception_fixup():
+    g = wide_delta_graph()
+    c = compress(g)
+    assert c.n_exceptions > 0
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(2), (g.n,), jnp.float32)
+    got = compressed_spmv_vertex(c, x, f)
+    want = compressed_spmv_vertex_ref(c, x, f.bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # the raw kernel (no fixup) must disagree on the escaped blocks' owners —
+    # proving the fixup is actually exercised
+    raw = compressed_block_spmv_pallas(
+        x, c.block_first, c.deltas, c.valid_count, f.bits, n=c.n
+    )
+    ref = compressed_block_spmv_ref(c, x, f.bits)
+    eb = np.asarray(c.exc_block)
+    assert not np.allclose(np.asarray(raw)[eb], np.asarray(ref)[eb])
+
+
+def test_padding_never_escapes_at_scale():
+    """On a locality-friendly graph with n >> 2^16, padding must not land on
+    the exception list (the rare path has to stay rare — the whole §5.1.3
+    design premise).  A path graph has only delta-1 gaps, so any exception
+    would come from padding."""
+    n = 200_000
+    src = np.arange(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    g = build_csr(n, src, dst, block_size=32)
+    c = compress(g)
+    assert c.n_exceptions == 0
+    np.testing.assert_array_equal(np.asarray(decode_blocks(c)), np.asarray(g.block_dst))
+    f = make_filter(g)
+    x = jnp.ones(n, jnp.float32)
+    got = compressed_spmv_vertex(c, x, f)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(compressed_spmv_vertex_ref(c, x, f.bits))
+    )
+
+
+def test_exception_heavy_graph_falls_back_exact():
+    """A graph with no id-locality: every vertex's two neighbors sit >= 2^16
+    apart, the exception list is dense, and the wrapper must route to the
+    exact decode (static choice on n_exceptions) and still agree with the
+    oracle."""
+    n = 200_000
+    k = 2000
+    src = np.repeat(np.arange(k, dtype=np.int64), 2)
+    dst = np.stack(
+        [np.arange(k, dtype=np.int64) + 1, np.arange(k, dtype=np.int64) + 150_000],
+        axis=1,
+    ).reshape(-1)
+    g = build_csr(n, src, dst, block_size=32)
+    c = compress(g)
+    from repro.core.compressed import exception_dense
+
+    assert exception_dense(c)  # fallback regime
+    np.testing.assert_array_equal(np.asarray(decode_blocks(c)), np.asarray(g.block_dst))
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,), jnp.float32)
+    got = compressed_spmv_vertex(c, x, f)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(compressed_spmv_vertex_ref(c, x, f.bits)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    # sparse/chunked edgeMap routes through the exact-decode tile fallback
+    # in this regime — must still match the uncompressed backend
+    xi = jnp.arange(n, dtype=jnp.int32)
+    fr = from_indices(n, [0, 1, k - 1]).mask
+    a, at = edgemap_reduce(g, fr, xi, monoid="min", mode="sparse")
+    b, bt = edgemap_reduce(c, fr, xi, monoid="min", mode="sparse")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(at), np.asarray(bt))
+
+
+def test_edge_src_padding_contract(g, c):
+    """CompressedCSR.edge_src must return sentinel n on padding slots —
+    the exact CSRGraph contract."""
+    np.testing.assert_array_equal(np.asarray(c.edge_src), np.asarray(g.edge_src))
+
+
+def test_compressed_spmv_rejects_weighted():
+    gw = rmat_graph(32, 96, weighted=True, seed=1, block_size=32)
+    cw = compress(gw)
+    with pytest.raises(ValueError, match="unweighted"):
+        compressed_spmv_vertex(cw, jnp.ones(gw.n, jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# PSAM accounting charges compressed-byte reads
+# ----------------------------------------------------------------------
+def test_psam_charges_compressed_reads(g, c):
+    cost_u, cost_c = PSAMCost(), PSAMCost()
+    cost_u.charge_edgemap_dense(g)
+    cost_c.charge_edgemap_dense(c)
+    assert cost_c.large_reads < cost_u.large_reads
+    # fixed-width packing reads just over half the words of dst+w streaming
+    assert cost_c.large_reads <= cost_u.large_reads // 2 + 3 * c.n_exceptions + c.num_blocks
+
+
+def test_compressed_is_jit_compatible(c):
+    """CompressedCSR is a registered pytree: it can cross jit boundaries."""
+
+    @jax.jit
+    def deg_sum(graph: CompressedCSR):
+        return jnp.sum(graph.degrees) + jnp.sum(graph.block_first) * 0
+
+    assert int(deg_sum(c)) == int(jnp.sum(c.degrees))

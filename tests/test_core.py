@@ -1,12 +1,10 @@
 """Unit tests for the PSAM core engine: CSR build, edgeMap modes,
 graphFilter, bucketing, primitives."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
-    Buckets,
     NULL_BUCKET,
     build_csr,
     edge_active_flat,
@@ -19,7 +17,6 @@ from repro.core import (
     make_buckets,
     make_filter,
     pack_vertices,
-    unpack_bits,
 )
 from repro.core.primitives import (
     compact_mask,
@@ -84,7 +81,6 @@ def test_edgemap_weighted_map_fn(g):
         g, full(g.n).mask, x, monoid="min", map_fn=lambda xs, w: xs + w
     )
     # min over incoming weights
-    src = np.asarray(g.edge_src)
     dst = np.asarray(g.edge_dst)
     w = np.asarray(g.edge_w)
     valid = dst < g.n
@@ -100,7 +96,6 @@ def test_filter_roundtrip(g):
     assert int(f.num_active_edges) == g.m
     keep = g.edge_valid & (g.edge_dst % 2 == 0)
     f2, remaining = filter_edges(g, f, keep)
-    src = np.asarray(g.edge_src)
     dst = np.asarray(g.edge_dst)
     valid = dst < g.n
     expect = (dst[valid] % 2 == 0).sum()

@@ -113,12 +113,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, use_mesh
 from repro.optim import compressed_psum
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
 f = shard_map(lambda a: compressed_psum(a[0], "pod")[None],
               mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     got = f(x)
 want = jnp.mean(x, axis=0)
 err = float(jnp.max(jnp.abs(got - want[None])))

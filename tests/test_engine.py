@@ -28,11 +28,11 @@ def test_distributed_pagerank_modes_agree():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
 from repro.data import rmat_graph
 from repro.distributed.engine import distributed_pagerank_step, shard_blocks_for_mesh
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 g = rmat_graph(128, 512, seed=3, block_size=32)
 NBp = shard_blocks_for_mesh(mesh, g.num_blocks)
 pad = NBp - g.num_blocks
@@ -42,7 +42,7 @@ bs = jnp.pad(g.block_src, (0, pad), constant_values=g.n)
 pr = jnp.full(g.n, 1.0 / g.n)
 inv = jnp.where(g.degrees > 0, 1.0 / jnp.maximum(g.degrees, 1).astype(jnp.float32), 0.0)
 outs = {}
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     for mode in ["flat", "hierarchical"]:
         fn = distributed_pagerank_step(mesh, n=g.n, mode=mode)
         outs[mode] = np.asarray(jax.jit(fn)(bd, bw, bs, pr, inv))
@@ -69,12 +69,12 @@ def test_distributed_frontier_min_matches_edgemap():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
 from repro.data import rmat_graph
 from repro.core import edgemap_dense, from_indices
 from repro.distributed.engine import distributed_frontier_min, shard_blocks_for_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 g = rmat_graph(128, 512, seed=5, block_size=32)
 NBp = shard_blocks_for_mesh(mesh, g.num_blocks)
 pad = NBp - g.num_blocks
@@ -83,7 +83,7 @@ bs = jnp.pad(g.block_src, (0, pad), constant_values=g.n)
 fr = from_indices(g.n, [0, 5, 9]).mask
 x = jnp.arange(g.n, dtype=jnp.int32)
 fn = distributed_frontier_min(mesh, n=g.n)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     got = np.asarray(jax.jit(fn)(bd, bs, x, fr))
 want, touched = edgemap_dense(g, fr, x, monoid="min")
 w = np.asarray(want); t = np.asarray(touched)
