@@ -1,0 +1,110 @@
+"""Gate a bench CSV against the committed baseline JSON.
+
+    PYTHONPATH=src python -m benchmarks.check_regression bench_full.csv \
+        benchmarks/baseline_full.json [--threshold 1.25]
+
+Fails (exit 1) when any benchmark present in both files regressed in
+``us_per_call`` by more than the threshold factor, or when any row errored.
+Rows below ``--floor`` microseconds in the baseline are skipped — timer
+noise dominates there — as are derived-only rows (us_per_call <= 0).
+
+``BENCH_REGRESSION_FACTOR`` (env) scales the threshold for known-slower
+runners without editing the workflow.
+
+Regenerate the baseline on a quiet machine with:
+    PYTHONPATH=src python -m benchmarks.run --full > bench_full.csv
+    PYTHONPATH=src python -m benchmarks.check_regression bench_full.csv \
+        benchmarks/baseline_full.json --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def read_csv(path: str) -> tuple[dict[str, float], list[str]]:
+    rows, errors = {}, []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith("name,"):
+                continue
+            parts = line.split(",", 2)
+            if len(parts) < 3:
+                continue  # continuation of a multi-line error message
+            name, us, derived = parts
+            try:
+                us_val = float(us)
+            except ValueError:
+                continue  # not a bench row (stray output on stdout)
+            if us_val < 0 or derived.startswith(("ERROR:", "FAILED:")):
+                errors.append(f"{name}: {derived.splitlines()[0]}")
+                continue
+            rows[name] = us_val
+    return rows, errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when us_per_call > baseline * threshold")
+    ap.add_argument("--floor", type=float, default=200.0,
+                    help="skip rows whose baseline is below this (us)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the baseline JSON from the CSV and exit")
+    args = ap.parse_args()
+
+    rows, errors = read_csv(args.csv)
+    if args.write_baseline:
+        if errors:
+            # an errored row silently vanishing from the baseline would
+            # exempt that benchmark from the gate forever — refuse
+            print("refusing to write baseline from a run with errors:",
+                  file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        with open(args.baseline, "w") as fh:
+            json.dump(rows, fh, indent=1, sort_keys=True)
+        print(f"wrote {len(rows)} baseline rows to {args.baseline}")
+        return 0
+
+    threshold = args.threshold * float(os.environ.get("BENCH_REGRESSION_FACTOR", 1.0))
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+
+    failures = list(errors)
+    for name, base_us in sorted(base.items()):
+        if base_us <= 0 or base_us < args.floor:
+            continue
+        if name not in rows:
+            failures.append(f"{name}: missing from bench run (baseline {base_us:.0f}us)")
+            continue
+        now = rows[name]
+        ratio = now / base_us
+        flag = "REGRESSED" if ratio > threshold else "ok"
+        print(f"{name}: {base_us:.0f}us -> {now:.0f}us ({ratio:.2f}x) {flag}")
+        if ratio > threshold:
+            failures.append(f"{name}: {ratio:.2f}x > {threshold:.2f}x threshold")
+    unbaselined = sorted(set(rows) - set(base))
+    if unbaselined:
+        print(
+            f"note: {len(unbaselined)} rows have no baseline entry and are "
+            f"ungated (regenerate with --write-baseline): "
+            + ", ".join(unbaselined)
+        )
+    if failures:
+        print("\nFAIL:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} rows within {threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,7 +26,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from repro.data import rmat_graph
-from repro.distributed.engine import distributed_vertex_reduce, shard_blocks_for_mesh
+from repro.distributed.engine import distributed_vertex_reduce, prepare_sharded
 from repro.launch.dryrun import collective_bytes_from_hlo
 from repro.compat import make_mesh, use_mesh
 import json
@@ -38,15 +38,11 @@ for name, shape, axes in [
     ("single_axis_flat", (8,), ("data",)),
 ]:
     mesh = make_mesh(shape, axes)
-    NBp = shard_blocks_for_mesh(mesh, g.num_blocks)
-    pad = NBp - g.num_blocks
-    bd = jnp.pad(g.block_dst, ((0, pad), (0, 0)), constant_values=g.n)
-    bw = jnp.pad(g.block_w, ((0, pad), (0, 0)))
-    bs = jnp.pad(g.block_src, (0, pad), constant_values=g.n)
+    gs = prepare_sharded(mesh, g)
     fn = distributed_vertex_reduce(mesh, n=g.n)
     x = jnp.ones(g.n, jnp.float32)
     with use_mesh(mesh):
-        compiled = jax.jit(fn).lower(bd, bw, bs, x).compile()
+        compiled = jax.jit(fn).lower(gs, x).compile()
     coll = collective_bytes_from_hlo(compiled.as_text())
     out[name] = coll["total"]
 print(json.dumps(out))

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   table4_filter — Table 4: filter block size F_B ↔ triangle-count work
   table5_edgemap— Table 5: edgeMap variant ↔ peak intermediate memory
   table_compression — §5.1.3: compression ratio + compressed edgeMap throughput
+  table_distributed — planner: per-shard PageRank throughput, compressed vs raw
   fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
   kernels_micro — Pallas kernels vs jnp oracles
   roofline      — §Roofline terms from the dry-run artifacts (if present)
@@ -22,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
-                   table4_filter, table5_edgemap, table_compression)
+                   table4_filter, table5_edgemap, table_compression,
+                   table_distributed)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -36,6 +38,11 @@ def main() -> None:
         ),
         "table_compression": lambda: table_compression.run(
             n=4096 if args.full else 1024, m=65536 if args.full else 8192
+        ),
+        # --full is RMAT-20: 2^20 vertices, the paper-scale stand-in
+        "table_distributed": lambda: table_distributed.run(
+            n=(1 << 20) if args.full else 4096,
+            m=(1 << 22) if args.full else 16384,
         ),
         "kernels_micro": kernels_micro.run,
         "fig_layout": fig_layout.run,

@@ -24,7 +24,7 @@ UNVISITED = jnp.int32(-1)
 # ----------------------------------------------------------------------
 # Low-diameter decomposition (Miller–Peng–Xu with quantized shifts)
 # ----------------------------------------------------------------------
-def ldd(g: GraphLike, beta: float, key: jax.Array, *, mode: str = "auto"):
+def ldd(g: GraphLike, beta: float, key: jax.Array, *, mode: str = "auto", plan=None):
     """(O(β), O(log n / β)) decomposition.  Returns cluster int32[n]
     (cluster id == center vertex id).
 
@@ -34,6 +34,8 @@ def ldd(g: GraphLike, beta: float, key: jax.Array, *, mode: str = "auto"):
     O(β·m) expected inter-cluster edge bound up to constants).
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     shift = jax.random.exponential(key, (n,), dtype=jnp.float32) / beta
     shift = jnp.minimum(shift, jnp.float32(2.0 * jnp.log(n + 1) / beta))
     start_round = jnp.floor(jnp.max(shift) - shift).astype(jnp.int32)
@@ -45,7 +47,9 @@ def ldd(g: GraphLike, beta: float, key: jax.Array, *, mode: str = "auto"):
     def body(state):
         r, cluster, frontier = state
         # expansion of last round's frontier
-        cand, touched = edgemap_reduce(g, frontier, cluster, monoid="min", mode=mode)
+        cand, touched = edgemap_reduce(
+            g, frontier, cluster, monoid="min", mode=mode, plan=plan
+        )
         newly = touched & (cluster == UNVISITED)
         cluster = jnp.where(newly, cand, cluster)
         # new centers wake up this round
@@ -73,15 +77,19 @@ def _min_label_prop(
     *,
     edge_active: jnp.ndarray | None = None,
     vertex_mask: jnp.ndarray | None = None,
+    plan=None,
 ):
     """Hook-and-compress min-label fixpoint; labels must be vertex ids."""
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     full_mask = jnp.ones(n, dtype=bool) if vertex_mask is None else vertex_mask
 
     def body(state):
         labels, _ = state
         nbr, _ = edgemap_reduce(
-            g, full_mask, labels, monoid="min", edge_active=edge_active, mode="dense"
+            g, full_mask, labels, monoid="min", edge_active=edge_active,
+            mode="dense", plan=plan,
         )
         new = jnp.minimum(labels, nbr)
         if vertex_mask is not None:
@@ -96,7 +104,9 @@ def _min_label_prop(
     return labels
 
 
-def connectivity(g: GraphLike, key: jax.Array | None = None, *, use_ldd: bool = True):
+def connectivity(
+    g: GraphLike, key: jax.Array | None = None, *, use_ldd: bool = True, plan=None
+):
     """Connected components; label = min vertex id of the component.
 
     Paper recipe (§C.2): one LDD round with β=O(1) drops inter-cluster edges
@@ -105,14 +115,16 @@ def connectivity(g: GraphLike, key: jax.Array | None = None, *, use_ldd: bool = 
     label array and the min-label fixpoint runs on cluster ids.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     if use_ldd and key is not None:
-        clusters = ldd(g, 0.2, key)
+        clusters = ldd(g, 0.2, key, plan=plan)
         # cluster ids are center ids; prop below converges to the min center
         # id per component, canonicalized to min vertex id afterwards.
         labels0 = clusters
     else:
         labels0 = jnp.arange(n, dtype=jnp.int32)
-    labels = _min_label_prop(g, labels0)
+    labels = _min_label_prop(g, labels0, plan=plan)
     # canonicalize: component representative = min vertex id
     rep = jax.ops.segment_min(
         jnp.arange(n, dtype=jnp.int32), labels, num_segments=n
@@ -120,10 +132,14 @@ def connectivity(g: GraphLike, key: jax.Array | None = None, *, use_ldd: bool = 
     return jnp.take(rep, labels)
 
 
-def multi_source_bfs(g: GraphLike, roots_mask: jnp.ndarray, *, mode: str = "auto"):
+def multi_source_bfs(
+    g: GraphLike, roots_mask: jnp.ndarray, *, mode: str = "auto", plan=None
+):
     """BFS forest from all roots at once.  Returns (parents, levels);
     parents[root]=root."""
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     ids = jnp.arange(n, dtype=jnp.int32)
     parents0 = jnp.where(roots_mask, ids, UNVISITED)
     levels0 = jnp.where(roots_mask, 0, UNVISITED)
@@ -131,7 +147,9 @@ def multi_source_bfs(g: GraphLike, roots_mask: jnp.ndarray, *, mode: str = "auto
 
     def body(state):
         rnd, parents, levels, frontier = state
-        cand, touched = edgemap_reduce(g, frontier, ids, monoid="min", mode=mode)
+        cand, touched = edgemap_reduce(
+            g, frontier, ids, monoid="min", mode=mode, plan=plan
+        )
         newly = touched & (parents == UNVISITED)
         parents = jnp.where(newly, cand, parents)
         levels = jnp.where(newly, rnd + 1, levels)

@@ -19,9 +19,17 @@ def pagerank(
     damping: float = 0.85,
     eps: float = 1e-6,
     max_iters: int = 100,
+    plan=None,
 ):
-    """Returns (pr float32[n], iters int32)."""
+    """Returns (pr float32[n], iters int32).
+
+    ``plan`` (``repro.core.plan``) picks the execution target — the same
+    iteration runs single-device or sharded over a mesh, compressed or raw
+    (degrees are read off the unsharded graph; they are O(n) vertex state).
+    """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
     dangling = g.degrees == 0
     full_mask = jnp.ones(n, dtype=bool)
@@ -29,7 +37,9 @@ def pagerank(
 
     def one_iter(pr):
         contrib = jnp.where(dangling, 0.0, pr / deg)
-        s, _ = edgemap_reduce(g, full_mask, contrib, monoid="sum", mode="dense")
+        s, _ = edgemap_reduce(
+            g, full_mask, contrib, monoid="sum", mode="dense", plan=plan
+        )
         dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
         return (1.0 - damping) / n + damping * (s + dangling_mass / n)
 
@@ -49,12 +59,16 @@ def pagerank(
     return pr, iters
 
 
-def pagerank_iteration(g: GraphLike, pr: jnp.ndarray, *, damping: float = 0.85):
+def pagerank_iteration(g: GraphLike, pr: jnp.ndarray, *, damping: float = 0.85, plan=None):
     """A single PageRank iteration (Table 1 'PageRank Iteration' row)."""
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
     dangling = g.degrees == 0
     contrib = jnp.where(dangling, 0.0, pr / deg)
-    s, _ = edgemap_reduce(g, jnp.ones(n, dtype=bool), contrib, monoid="sum", mode="dense")
+    s, _ = edgemap_reduce(
+        g, jnp.ones(n, dtype=bool), contrib, monoid="sum", mode="dense", plan=plan
+    )
     dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
     return (1.0 - damping) / n + damping * (s + dangling_mass / n)

@@ -19,13 +19,17 @@ INF_I32 = jnp.int32(2**31 - 1)
 UNVISITED = jnp.int32(-1)
 
 
-def bfs(g: GraphLike, src: int, *, mode: str = "auto"):
+def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """Breadth-first search.  Returns (parents int32[n], levels int32[n]).
 
     parents[v] = -1 if unreachable, src for the source itself.
     PSAM: O(m) work, O(d_G log n) depth, O(n) words small memory (Thm 4.2).
+    ``plan`` (``repro.core.plan``) picks the execution target — the same
+    loop runs single-device or sharded over a mesh, compressed or raw.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     src = jnp.asarray(src, jnp.int32)
     parents0 = jnp.full(n, UNVISITED).at[src].set(src)
     levels0 = jnp.full(n, UNVISITED).at[src].set(0)
@@ -34,7 +38,9 @@ def bfs(g: GraphLike, src: int, *, mode: str = "auto"):
 
     def body(state):
         rnd, parents, levels, frontier = state
-        cand, touched = edgemap_reduce(g, frontier, ids, monoid="min", mode=mode)
+        cand, touched = edgemap_reduce(
+            g, frontier, ids, monoid="min", mode=mode, plan=plan
+        )
         newly = touched & (parents == UNVISITED)
         parents = jnp.where(newly, cand, parents)
         levels = jnp.where(newly, rnd + 1, levels)

@@ -4,6 +4,8 @@ Public surface:
   CSRGraph / build_csr / graph_spec       — immutable blocked CSR (large memory)
   CompressedCSR / compress                — delta-packed execution backend (§5.1.3)
   GraphBackend / GraphLike                — the protocol both backends satisfy
+  ExecutionPlan / make_plan / ShardedGraph— unified planner: one edgeMap,
+                                            single-device or sharded mesh
   VertexSubset / from_indices / from_mask — frontiers (O(n) small memory)
   edgemap_reduce / edge_map               — direction-optimized edgeMapChunked
   GraphFilter / make_filter / pack_vertices / filter_edges — §4.2 bitset filter
@@ -34,11 +36,23 @@ from .graph_filter import (
     unpack_bits,
     unpack_word_bits,
 )
+from .plan import (
+    ExecutionPlan,
+    ShardedGraph,
+    make_plan,
+    sharded_edgemap_reduce,
+    sharded_graph_spec,
+)
 from .psam import PSAMCost
 from .vertex_subset import VertexSubset, empty, from_indices, from_mask, full
 
 __all__ = [
     "CompressedCSR",
+    "ExecutionPlan",
+    "ShardedGraph",
+    "make_plan",
+    "sharded_edgemap_reduce",
+    "sharded_graph_spec",
     "GraphBackend",
     "GraphLike",
     "compress",

@@ -53,6 +53,11 @@ class GraphBackend(Protocol):
     @property
     def edge_valid(self) -> jnp.ndarray: ...  # bool[NB*FB]
 
+    def shard(self, num_shards: int) -> list["GraphBackend"]: ...
+    # block-range partition: each shard is a valid backend over the global
+    # vertex space (n, degrees replicated; blocks split; non-dividing counts
+    # pad with empty blocks).  Consumed by the planner (repro.core.plan).
+
 
 GraphLike = Union[CSRGraph, CompressedCSR]
 

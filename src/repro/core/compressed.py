@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import CSRGraph
+from .csr import CSRGraph, sharded_block_counts
 
 ESCAPE = np.uint16(0xFFFF)
 
@@ -51,7 +51,15 @@ ESCAPE = np.uint16(0xFFFF)
         "degrees",
         "block_weights",
     ],
-    meta_fields=["n", "m", "num_blocks", "block_size", "n_exceptions", "weighted"],
+    meta_fields=[
+        "n",
+        "m",
+        "num_blocks",
+        "block_size",
+        "n_exceptions",
+        "weighted",
+        "exception_dense_hint",
+    ],
 )
 @dataclasses.dataclass(frozen=True)
 class CompressedCSR:
@@ -72,6 +80,10 @@ class CompressedCSR:
     n_exceptions: int
     block_weights: jnp.ndarray | None = None  # float32[NB, FB] when weighted
     weighted: bool = False
+    # set by shard(): the whole-graph exception-density verdict, so every
+    # shard keeps the original decode-strategy choice (a shard's padded
+    # exception list and shrunken block count would skew the ratio test)
+    exception_dense_hint: bool | None = None
 
     @property
     def compressed_bytes(self) -> int:
@@ -142,6 +154,74 @@ class CompressedCSR:
         lane = jnp.arange(self.block_size, dtype=jnp.int32)
         vc = self.valid_count.astype(jnp.int32)
         return (lane[None, :] < vc[:, None]).reshape(-1)
+
+    def shard(self, num_shards: int) -> list["CompressedCSR"]:
+        """Partition the compressed block set into ``num_shards`` ranges.
+
+        Compressed blocks are independently decodable (per-block first target
+        + deltas + valid count), so sharding is a block-range split of the
+        delta stream plus a *per-shard exception list*: each COO exception is
+        routed to the shard owning its block, with the block coordinate
+        rebased to the shard-local range.  Exception lists are padded to the
+        max count across shards (padding rows use the out-of-range block id
+        ``per``, which every decoder drops) so shards stack into one pytree
+        with identical meta.  Block counts that don't divide pad with empty
+        blocks (valid_count 0, owner = sentinel n) — the tail shard is never
+        truncated.  Vertex metadata (``degrees``) stays replicated per shard.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        NB, FB = self.num_blocks, self.block_size
+        per, padded_total = sharded_block_counts(NB, num_shards)
+        pad = padded_total - NB
+        first = np.asarray(self.block_first)
+        deltas = np.asarray(self.deltas)
+        vc = np.asarray(self.valid_count)
+        bsrc = np.asarray(self.block_src)
+        bw = None if self.block_weights is None else np.asarray(self.block_weights)
+        if pad:
+            first = np.concatenate([first, np.zeros(pad, np.int32)])
+            deltas = np.concatenate([deltas, np.zeros((pad, FB), np.uint16)])
+            vc = np.concatenate([vc, np.zeros(pad, np.uint16)])
+            bsrc = np.concatenate([bsrc, np.full(pad, self.n, np.int32)])
+            if bw is not None:
+                bw = np.concatenate([bw, np.zeros((pad, FB), np.float32)])
+        eb = np.asarray(self.exc_block)
+        es = np.asarray(self.exc_slot)
+        ev = np.asarray(self.exc_value)
+        sel = [(eb >= s * per) & (eb < (s + 1) * per) for s in range(num_shards)]
+        ne_max = max((int(m.sum()) for m in sel), default=0)
+        shards = []
+        for s in range(num_shards):
+            lo, hi = s * per, (s + 1) * per
+            m = sel[s]
+            k = int(m.sum())
+            # pad rows target block id ``per`` (out of the shard's range):
+            # decode_blocks scatter-drops them, decode_block_tile patches a
+            # delta of 0 into lane 0 of the fill row, which is zeroed anyway
+            leb = np.full(ne_max, per, np.int32)
+            les = np.zeros(ne_max, np.int32)
+            lev = np.zeros(ne_max, np.int32)
+            leb[:k] = eb[m] - lo
+            les[:k] = es[m]
+            lev[:k] = ev[m]
+            shards.append(
+                dataclasses.replace(
+                    self,
+                    block_first=jnp.asarray(first[lo:hi]),
+                    deltas=jnp.asarray(deltas[lo:hi]),
+                    valid_count=jnp.asarray(vc[lo:hi]),
+                    exc_block=jnp.asarray(leb),
+                    exc_slot=jnp.asarray(les),
+                    exc_value=jnp.asarray(lev),
+                    block_src=jnp.asarray(bsrc[lo:hi]),
+                    num_blocks=per,
+                    n_exceptions=ne_max,
+                    block_weights=None if bw is None else jnp.asarray(bw[lo:hi]),
+                    exception_dense_hint=exception_dense(self),
+                )
+            )
+        return shards
 
 
 def compress(g: CSRGraph) -> CompressedCSR:
@@ -230,7 +310,11 @@ def exception_dense(c: CompressedCSR) -> bool:
     """Static (metadata-only) test: is the exception list too dense for the
     per-tile COO patch to stay a rare path?  Past this point consumers
     should decode exactly instead (the compression is doing little on such
-    id-locality-free graphs anyway)."""
+    id-locality-free graphs anyway).  Shards carry the whole-graph verdict
+    as a hint — their padded exception lists and shrunken block counts
+    would otherwise inflate the ratio."""
+    if c.exception_dense_hint is not None:
+        return c.exception_dense_hint
     return c.n_exceptions > max(16, min(c.num_blocks // 4, 4096))
 
 

@@ -28,6 +28,18 @@ import numpy as np
 DEFAULT_BLOCK_SIZE = 128  # lanes; multiple of 32 so the filter bitset packs into words
 
 
+def sharded_block_counts(num_blocks: int, num_shards: int) -> tuple[int, int]:
+    """(blocks per shard, total blocks incl. padding) for a planner split.
+
+    The single source of truth for the shard partitioning arithmetic:
+    ``GraphBackend.shard``, the cost model, the dry-run specs and
+    ``shard_blocks_for_mesh`` all derive from it.  Non-dividing counts
+    round *up* — the tail shard pads with empty sentinel blocks, it is
+    never truncated."""
+    per = -(-num_blocks // max(num_shards, 1))
+    return per, per * num_shards
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
@@ -80,6 +92,49 @@ class CSRGraph:
 
     def out_degree(self, v):
         return self.degrees[v]
+
+    def shard(self, num_shards: int) -> list["CSRGraph"]:
+        """Partition the block set into ``num_shards`` contiguous ranges.
+
+        Block counts that don't divide ``num_shards`` are padded with *empty*
+        blocks (owner = sentinel n, all targets = n, zero weights) so every
+        shard carries the same ``ceil(NB / num_shards)`` blocks and the tail
+        shard is never truncated.  Each shard keeps the full O(n) vertex
+        metadata (``degrees``, ``offsets``) replicated — only the O(m) edge
+        blocks split — so a shard is itself a valid ``GraphBackend`` over the
+        *global* vertex space: same ``n``, same sentinel, same frontier
+        semantics.  The planner (``repro.core.plan``) stacks shards into one
+        pytree and runs the ordinary edgeMap bodies per shard inside
+        ``shard_map``.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        NB, FB = self.num_blocks, self.block_size
+        per, padded_total = sharded_block_counts(NB, num_shards)
+        pad = padded_total - NB
+        bsrc = np.asarray(self.block_src)
+        edst = np.asarray(self.edge_dst).reshape(NB, FB)
+        esrc = np.asarray(self.edge_src).reshape(NB, FB)
+        ew = np.asarray(self.edge_w).reshape(NB, FB)
+        if pad:
+            bsrc = np.concatenate([bsrc, np.full(pad, self.n, np.int32)])
+            edst = np.concatenate([edst, np.full((pad, FB), self.n, np.int32)])
+            esrc = np.concatenate([esrc, np.full((pad, FB), self.n, np.int32)])
+            ew = np.concatenate([ew, np.zeros((pad, FB), np.float32)])
+        shards = []
+        for s in range(num_shards):
+            lo, hi = s * per, (s + 1) * per
+            shards.append(
+                dataclasses.replace(
+                    self,
+                    block_src=jnp.asarray(bsrc[lo:hi]),
+                    edge_src=jnp.asarray(esrc[lo:hi].reshape(-1)),
+                    edge_dst=jnp.asarray(edst[lo:hi].reshape(-1)),
+                    edge_w=jnp.asarray(ew[lo:hi].reshape(-1)),
+                    num_blocks=per,
+                )
+            )
+        return shards
 
 
 def build_csr(

@@ -175,10 +175,41 @@ def edgemap_reduce(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
     mode: str = "auto",
-    dense_frac: int = 20,
-    chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
+    dense_frac: int | None = None,
+    chunk_blocks: int | None = None,
+    plan=None,
 ):
-    """Direction-optimized edgeMap (Beamer §4.1.1)."""
+    """Direction-optimized edgeMap (Beamer §4.1.1).
+
+    With ``plan`` (an ``ExecutionPlan``, see ``repro.core.plan``) the same
+    call runs wherever the plan says: a meshless plan resolves the mode /
+    chunking knobs and stays on this code path; a mesh plan routes to the
+    sharded executor, which runs these very bodies per shard under
+    ``shard_map`` (``g`` must then be the plan-prepared ``ShardedGraph``).
+    Explicit ``mode`` / ``dense_frac`` / ``chunk_blocks`` arguments win over
+    the plan's.
+    """
+    if plan is not None:
+        if plan.is_sharded:
+            from .plan import sharded_edgemap_reduce
+
+            return sharded_edgemap_reduce(
+                plan,
+                g,
+                frontier_mask,
+                x,
+                monoid=monoid,
+                map_fn=map_fn,
+                edge_active=edge_active,
+                mode=mode,
+                dense_frac=dense_frac,
+                chunk_blocks=chunk_blocks,
+            )
+        mode = plan.resolve_mode(mode)
+        dense_frac = plan.dense_frac if dense_frac is None else dense_frac
+        chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
+    dense_frac = 20 if dense_frac is None else dense_frac
+    chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
     if mode == "dense":
         return edgemap_dense(
             g, frontier_mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active
@@ -223,14 +254,17 @@ def edge_map(
     update: str = "min",
     edge_active: jnp.ndarray | None = None,
     mode: str = "auto",
+    plan=None,
 ):
     """Full Ligra-style EDGEMAP: returns (new_x, next_frontier).
 
     ``cond_mask[v]`` plays C(v); ``update`` decides how reduced contributions
-    merge into x ('min'|'max'|'sum'|'replace').
+    merge into x ('min'|'max'|'sum'|'replace').  ``plan`` routes execution
+    (single-device or sharded) exactly as in ``edgemap_reduce``.
     """
     out, touched = edgemap_reduce(
-        g, frontier.mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active, mode=mode
+        g, frontier.mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+        mode=mode, plan=plan,
     )
     ok = touched if cond_mask is None else (touched & cond_mask)
     if update == "min":

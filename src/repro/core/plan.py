@@ -1,0 +1,325 @@
+"""Unified execution planner — one edgeMap, any device count, any backend.
+
+Sage's central claim (§3) is that a single semi-asymmetric engine serves
+every graph kernel: edges are read-only "large memory", all mutation stays
+in O(n) words of "small memory".  This module is that claim at the
+execution layer.  An :class:`ExecutionPlan` names *where* and *how* an
+edgeMap runs — device mesh (or none), storage backend (raw or compressed
+CSR), dense/sparse/auto strategy, cross-shard reduce shape — and
+``edgemap_reduce`` / ``edge_map`` accept one via their ``plan=`` keyword,
+so algorithm code never picks an engine:
+
+        vertex state (O(n), replicated) ──┐
+                                          ▼
+    CSRGraph ────────┐          ┌── edgemap_dense ──┐
+                     ├─ shard ──┤                   ├─ psum/pmin/pmax ─► out
+    CompressedCSR ───┘  (plan)  └── edgemap_chunked ┘   (per round,
+                                                         O(n) words)
+
+Sharded execution reuses the *same* ``edgemap_dense`` / ``edgemap_chunked``
+bodies as the single-device path: each shard is a valid ``GraphBackend``
+over the global vertex space (``GraphBackend.shard`` splits the block set;
+compressed blocks are independently decodable, so sharding the delta stream
+is a block-range split plus per-shard exception lists), and ``shard_map``
+runs the local body with the frontier and vertex state replicated.  The
+only cross-shard traffic is the monoid combine of the O(n) output — never
+O(m) — which is the PSAM small-memory bound expressed as a communication
+bound (§5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .compressed import CompressedCSR
+from .csr import CSRGraph, graph_spec, sharded_block_counts
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["shards"],
+    meta_fields=["num_shards"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """A graph backend split into per-shard block sets, stacked leaf-wise.
+
+    ``shards`` is a single ``CSRGraph`` / ``CompressedCSR`` pytree whose
+    array leaves carry a leading ``num_shards`` dimension (shard s of leaf
+    ``a`` is ``a[s]``); its static meta describes one shard (``num_blocks``
+    is the per-shard block count; ``n``/``m`` stay global).  Produced by
+    :meth:`ExecutionPlan.prepare`; consumed by the sharded edgeMap executor,
+    which partitions the leading dimension across the mesh.
+    """
+
+    shards: Any
+    num_shards: int
+
+    @property
+    def n(self) -> int:
+        return self.shards.n
+
+    @property
+    def m(self) -> int:
+        return self.shards.m
+
+    @property
+    def block_size(self) -> int:
+        return self.shards.block_size
+
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.shards.num_blocks
+
+    @property
+    def degrees(self) -> jnp.ndarray:
+        """int32[n] — O(n) vertex state, replicated per shard (shard 0's copy)."""
+        return self.shards.degrees[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static description of how an edgeMap executes.
+
+    mesh        — jax Mesh, or None for plain single-device execution
+    shard_axes  — mesh axes the edge blocks shard over (() → all axes);
+                  vertex state is replicated over every axis either way
+    backend     — 'csr' | 'compressed' | 'auto' (informational; recorded by
+                  make_plan from the graph so cost models / benchmarks can
+                  report what actually ran)
+    strategy    — default edgeMap mode when the call site doesn't pass one:
+                  'dense' (pull over all blocks), 'sparse' (chunked over
+                  frontier-owned blocks), 'auto' (Beamer direction opt.)
+    reduce_mode — cross-shard combine for the sum monoid: 'flat' psums the
+                  O(n) vector over every shard axis; 'hierarchical'
+                  reduce-scatters along the fastest axis first (wire bytes
+                  on slow axes drop by the fast-axis width, §5.2)
+    state_dtype — reduce in a narrower dtype (e.g. bf16), the graph-engine
+                  analogue of gradient compression
+    chunk_blocks— chunk size for the sparse strategy
+    dense_frac  — Beamer threshold: dense when frontier degree > m/dense_frac
+    """
+
+    mesh: Any = None
+    shard_axes: tuple = ()
+    backend: str = "auto"
+    strategy: str = "auto"
+    reduce_mode: str = "flat"
+    state_dtype: Any = None
+    chunk_blocks: int = 256
+    dense_frac: int = 20
+
+    @property
+    def axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        return tuple(self.shard_axes) or tuple(self.mesh.axis_names)
+
+    @property
+    def num_shards(self) -> int:
+        k = 1
+        for ax in self.axes:
+            k *= self.mesh.shape[ax]
+        return k
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    def resolve_mode(self, mode: str | None) -> str:
+        """Explicit call-site mode wins; otherwise the plan's strategy."""
+        if mode is not None and mode != "auto":
+            return mode
+        return self.strategy
+
+    def prepare(self, g):
+        """Shard + stack + place a graph for this plan (identity off-mesh).
+
+        Host-side (concrete arrays only): call once per graph, outside jit,
+        like the paper's preprocessing step.  Idempotent on ShardedGraph.
+        """
+        if not self.is_sharded:
+            return g
+        if isinstance(g, ShardedGraph):
+            if g.num_shards != self.num_shards:
+                raise ValueError(
+                    f"graph prepared for {g.num_shards} shards, plan has "
+                    f"{self.num_shards}"
+                )
+            return g
+        shards = g.shard(self.num_shards)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *shards)
+        sharding = NamedSharding(self.mesh, P(self.axes))
+        stacked = jax.tree.map(lambda a: jax.device_put(a, sharding), stacked)
+        return ShardedGraph(shards=stacked, num_shards=self.num_shards)
+
+    def describe(self) -> str:
+        where = (
+            f"mesh{tuple(self.mesh.shape[a] for a in self.axes)}"
+            if self.is_sharded
+            else "single-device"
+        )
+        return (
+            f"plan[{where} backend={self.backend} strategy={self.strategy} "
+            f"reduce={self.reduce_mode} shards={self.num_shards}]"
+        )
+
+
+def make_plan(
+    g=None,
+    *,
+    mesh=None,
+    strategy: str = "auto",
+    shard_axes: tuple = (),
+    reduce_mode: str = "flat",
+    state_dtype=None,
+    chunk_blocks: int = 256,
+    dense_frac: int = 20,
+) -> ExecutionPlan:
+    """Build an :class:`ExecutionPlan`, recording the backend from ``g``."""
+    backend = "auto"
+    if isinstance(g, ShardedGraph):
+        g = g.shards
+    if isinstance(g, CompressedCSR):
+        backend = "compressed"
+    elif isinstance(g, CSRGraph):
+        backend = "csr"
+    return ExecutionPlan(
+        mesh=mesh,
+        shard_axes=tuple(shard_axes),
+        backend=backend,
+        strategy=strategy,
+        reduce_mode=reduce_mode,
+        state_dtype=state_dtype,
+        chunk_blocks=chunk_blocks,
+        dense_frac=dense_frac,
+    )
+
+
+def sharded_graph_spec(
+    n: int,
+    num_blocks: int,
+    block_size: int,
+    num_shards: int,
+    weighted: bool = False,
+) -> ShardedGraph:
+    """ShapeDtypeStruct stand-in for a prepared ShardedGraph (dry-run/AOT)."""
+    per, _ = sharded_block_counts(num_blocks, num_shards)
+    base = graph_spec(n, per, block_size, weighted)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((num_shards,) + s.shape, s.dtype), base
+    )
+    return ShardedGraph(shards=stacked, num_shards=num_shards)
+
+
+# ----------------------------------------------------------------------
+# Sharded executor — the same edgeMap bodies, inside shard_map
+# ----------------------------------------------------------------------
+def _combine_shards(plan: ExecutionPlan, out, touched, monoid: str, n: int, out_dtype):
+    """Monoid-combine per-shard edgeMap outputs: O(n) words per round."""
+    axes = plan.axes
+    if plan.state_dtype is not None and monoid == "sum":
+        out = out.astype(plan.state_dtype)
+    if monoid == "sum" and plan.reduce_mode == "hierarchical" and len(axes) > 1:
+        if out.ndim != 1:
+            raise NotImplementedError("hierarchical reduce is 1-D only")
+        fast, slow = axes[-1], axes[:-1]
+        k = plan.mesh.shape[fast]
+        pad = (-n) % k
+        shard = lax.psum_scatter(
+            jnp.pad(out, (0, pad)), fast, scatter_dimension=0, tiled=True
+        )
+        for ax in slow:
+            shard = lax.psum(shard, ax)
+        out = lax.all_gather(shard, fast, axis=0, tiled=True)[:n]
+    elif monoid == "sum":
+        for ax in axes:
+            out = lax.psum(out, ax)
+    elif monoid == "min":
+        for ax in axes:
+            out = lax.pmin(out, ax)
+    elif monoid == "max":
+        for ax in axes:
+            out = lax.pmax(out, ax)
+    elif monoid == "or":
+        o = out.astype(jnp.int32)
+        for ax in axes:
+            o = lax.psum(o, ax)
+        out = o > 0
+    else:
+        raise ValueError(monoid)
+    t = touched.astype(jnp.int32)
+    for ax in axes:
+        t = lax.psum(t, ax)
+    if monoid != "or":
+        out = out.astype(out_dtype)
+    return out, t > 0
+
+
+def sharded_edgemap_reduce(
+    plan: ExecutionPlan,
+    g,
+    frontier_mask: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn=None,
+    edge_active=None,
+    mode: str | None = None,
+    dense_frac: int | None = None,
+    chunk_blocks: int | None = None,
+):
+    """Direction-optimized edgeMap over a mesh: per-shard local pass through
+    the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
+    monoid combine of the O(n) output.  ``g`` must be a ShardedGraph
+    (``plan.prepare``); frontier and vertex state are replicated."""
+    # the executor reuses the single-device bodies; import here so edgemap.py
+    # can lazily import this module without a cycle
+    from .edgemap import edgemap_reduce
+
+    if edge_active is not None:
+        raise NotImplementedError(
+            "edge_active is not yet threaded through the sharded planner; "
+            "run filtered edgeMaps single-device or pre-apply the filter"
+        )
+    if not isinstance(g, ShardedGraph):
+        g = plan.prepare(g)
+    mode = plan.resolve_mode(mode)
+    dense_frac = plan.dense_frac if dense_frac is None else dense_frac
+    chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
+    n = g.n
+    out_dtype = x.dtype
+
+    def local(sg, fm, xv):
+        g_local = jax.tree.map(lambda a: a[0], sg.shards)
+        kwargs = {} if map_fn is None else {"map_fn": map_fn}
+        out, touched = edgemap_reduce(
+            g_local,
+            fm,
+            xv,
+            monoid=monoid,
+            mode=mode,
+            dense_frac=dense_frac,
+            chunk_blocks=chunk_blocks,
+            **kwargs,
+        )
+        return _combine_shards(plan, out, touched, monoid, n, out_dtype)
+
+    fn = shard_map(
+        local,
+        mesh=plan.mesh,
+        in_specs=(P(plan.axes), P(), P()),
+        out_specs=(P(), P()),
+        # the hierarchical all_gather(psum_scatter(...)) is replicated over
+        # the fast axis but the static replication check can't prove it
+        check_rep=False,
+    )
+    return fn(g, frontier_mask, x)

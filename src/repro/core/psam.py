@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from .csr import sharded_block_counts
+
 
 def _compressed_target_words(g, blocks: int) -> int:
     """Words read to stream ``blocks`` compressed target blocks: int32 first
@@ -53,6 +55,28 @@ class PSAMCost:
     def charge_edgemap_chunked(self, g, active_blocks: int):
         self.large_reads += _block_read_words(g, active_blocks)
         self.small_ops += 3 * g.n
+
+    def charge_edgemap_planned(self, g, num_shards: int = 1, active_blocks=None):
+        """One planner-dispatched edgeMap round over ``num_shards`` shards.
+
+        Large-memory reads are charged *per shard* — compressed backends at
+        their compressed byte footprint (amortized COO exceptions included),
+        raw CSR at the flat dst+w words — counting the empty blocks that pad
+        a non-dividing block count (they are streamed like any other, see
+        ``GraphBackend.shard``).  The cross-shard monoid combine
+        moves the O(n) output vector once per shard boundary: that traffic
+        lands in small_ops, which keeps the distributed path inside the
+        PSAM small-memory bound (communication is O(n), never O(m)).
+
+        ``active_blocks``: total active blocks across shards for the sparse
+        strategy; None charges the dense pass (every block, padding
+        included).
+        """
+        _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
+        blocks = padded_total if active_blocks is None else active_blocks
+        self.large_reads += _block_read_words(g, blocks)
+        # local O(n) state per shard + one O(n)-word combine per shard boundary
+        self.small_ops += 3 * g.n + (num_shards - 1) * g.n
 
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,

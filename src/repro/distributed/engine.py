@@ -1,4 +1,4 @@
-"""Edge-partitioned distributed graph engine (shard_map).
+"""Edge-partitioned distributed graph engine — thin planner specializations.
 
 The Sage NUMA insight at pod scale, inverted for HBM capacity: the immutable
 edge blocks are *sharded* as contiguous ranges across every chip; the O(n)
@@ -6,29 +6,41 @@ vertex state is *replicated* and combined with one psum/pmax/pmin per
 edgeMap round.  Cross-chip traffic per round is O(n) words — never O(m) —
 which is the PSAM small-memory bound expressed as a communication bound.
 
-The pod axis adds a second tier: each pod holds a full copy of its edge
-shard range assignment, so cross-pod traffic is also only the O(n) vertex
-reduction (the paper's "no cross-socket edge reads" rule, §5.2).
+Since the unified planner (``repro.core.plan``) this module owns **no**
+edge-iteration bodies: every function below builds an ``ExecutionPlan`` and
+delegates to the same ``edgemap_dense`` / ``edgemap_chunked`` code the
+single-device path runs — which is also how the compressed backend flows
+through ``shard_map`` for free (a ``CompressedCSR`` shards its delta stream
+block-range-wise, see ``CompressedCSR.shard``).  Callers prepare a graph
+once with ``prepare_sharded`` (or ``ExecutionPlan.prepare``) and pass the
+resulting ``ShardedGraph`` to the returned functions.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from ..core.csr import sharded_block_counts
+from ..core.edgemap import edgemap_reduce
+from ..core.plan import ExecutionPlan, make_plan
 
 
-def _all_axes(mesh):
-    return tuple(mesh.axis_names)
+def _weighted(xs, w):
+    return xs * w
+
+
+def prepare_sharded(mesh, g, *, shard_axes: tuple = ()):
+    """Shard + stack + place ``g`` (CSRGraph | CompressedCSR) for ``mesh``."""
+    return make_plan(g, mesh=mesh, shard_axes=shard_axes).prepare(g)
 
 
 def distributed_vertex_reduce(
     mesh, *, n: int, monoid: str = "sum", mode: str = "flat", state_dtype=None
 ):
-    """Build a shard_map'd function: (block_dst (NB,FB), block_w, block_src,
-    x (n,)) → out (n,) — out[v] = monoid over active slots with src-owner v.
+    """Build ``fn(gs, x) -> out``: one full-frontier weighted edgeMap round,
+    out[v] = monoid over active edges (u, v) of x[u] * w_uv.
 
-    Blocks are sharded over every mesh axis; x and the output are replicated.
+    ``gs`` is a plan-prepared ``ShardedGraph`` (blocks sharded over every
+    mesh axis); x and the output are replicated.
 
     ``mode``:
       flat         — psum the full O(n) vector over every axis (baseline)
@@ -39,44 +51,23 @@ def distributed_vertex_reduce(
     ``state_dtype``: reduce in a narrower dtype (e.g. bf16) — the graph-engine
     analogue of gradient compression.
     """
-    axes = _all_axes(mesh)
-    spec_blocks = P(axes)
-    spec_rep = P()
-    fast = axes[-1]
-    slow = axes[:-1]
+    plan = ExecutionPlan(
+        mesh=mesh, strategy="dense", reduce_mode=mode, state_dtype=state_dtype
+    )
 
-    def local(block_dst, block_w, block_src, x):
-        mask = block_dst < n
-        safe = jnp.where(mask, block_dst, 0)
-        xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(block_dst.shape)
-        contrib = jnp.where(mask, xv * block_w, 0.0)
-        per_block = jnp.sum(contrib, axis=1)
-        out = jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]
-        if state_dtype is not None:
-            out = out.astype(state_dtype)
-        if mode == "hierarchical" and len(axes) > 1:
-            k = mesh.shape[fast]
-            pad = (-n) % k
-            shard = jax.lax.psum_scatter(
-                jnp.pad(out, (0, pad)), fast, scatter_dimension=0, tiled=True
-            )
-            for ax in slow:
-                shard = jax.lax.psum(shard, ax)
-            out = jax.lax.all_gather(shard, fast, axis=0, tiled=True)[:n]
-        else:
-            for ax in axes:
-                out = jax.lax.psum(out, ax)
+    def fn(gs, x):
+        out, _ = edgemap_reduce(
+            gs,
+            jnp.ones(n, dtype=bool),
+            x,
+            monoid=monoid,
+            map_fn=_weighted,
+            mode="dense",
+            plan=plan,
+        )
         return out.astype(x.dtype)
 
-    return shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(spec_blocks, spec_blocks, spec_blocks, spec_rep),
-        out_specs=spec_rep,
-        # the hierarchical path's all_gather(psum_scatter(...)) is replicated
-        # over the fast axis but the static replication check can't prove it
-        check_rep=False,
-    )
+    return fn
 
 
 def distributed_pagerank_step(
@@ -85,9 +76,8 @@ def distributed_pagerank_step(
     """One PageRank iteration over pod-scale sharded edges."""
     reduce_fn = distributed_vertex_reduce(mesh, n=n, mode=mode, state_dtype=state_dtype)
 
-    def step(block_dst, block_w, block_src, pr, inv_deg):
-        contrib = pr * inv_deg
-        s = reduce_fn(block_dst, block_w, block_src, contrib)
+    def step(gs, pr, inv_deg):
+        s = reduce_fn(gs, pr * inv_deg)
         return (1.0 - damping) / n + damping * s
 
     return step
@@ -95,32 +85,29 @@ def distributed_pagerank_step(
 
 def distributed_frontier_min(mesh, *, n: int):
     """BFS/label-prop round: out[v] = min over incoming active edges of
-    x[src]; frontier-masked.  Blocks sharded, state replicated, pmin."""
-    axes = _all_axes(mesh)
+    x[src]; frontier-masked.  Blocks sharded, state replicated, pmin.
+    Untouched vertices come back as the min-monoid identity (int32 max)."""
+    plan = ExecutionPlan(mesh=mesh, strategy="dense")
 
-    def local(block_dst, block_src, x, frontier):
-        big = jnp.int32(2**31 - 1)
-        in_f = jnp.take(frontier, jnp.minimum(block_src, n - 1)) & (block_src < n)
-        xv = jnp.take(x, jnp.minimum(block_src, n - 1))
-        vals = jnp.where(in_f, xv, big)[:, None]
-        vals = jnp.broadcast_to(vals, block_dst.shape)
-        ids = jnp.where(block_dst < n, block_dst, n).reshape(-1)
-        out = jax.ops.segment_min(
-            jnp.where(block_dst < n, vals, big).reshape(-1), ids, num_segments=n + 1
-        )[:n]
-        for ax in axes:
-            out = jax.lax.pmin(out, ax)
+    def fn(gs, x, frontier):
+        out, _ = edgemap_reduce(
+            gs, frontier, x, monoid="min", mode="dense", plan=plan
+        )
         return out
 
-    return shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(_all_axes(mesh)), P(_all_axes(mesh)), P(), P()),
-        out_specs=P(),
-    )
+    return fn
 
 
-def shard_blocks_for_mesh(mesh, num_blocks: int) -> int:
-    """Blocks must divide the total mesh size; returns padded block count."""
-    total = mesh.devices.size
-    return -(-num_blocks // total) * total
+def shard_blocks_for_mesh(mesh, num_blocks: int, shard_axes: tuple = ()) -> int:
+    """Padded per-mesh block count: the least multiple of the sharded-axis
+    product ≥ ``num_blocks``.
+
+    Non-dividing block counts round *up* — the remainder pads with empty
+    sentinel blocks (``GraphBackend.shard`` emits them) — so the tail shard
+    is never silently truncated.  ``shard_axes`` selects the mesh axes the
+    blocks split over (default: all of them).
+    """
+    total = 1
+    for ax in tuple(shard_axes) or tuple(mesh.axis_names):
+        total *= mesh.shape[ax]
+    return sharded_block_counts(num_blocks, total)[1]

@@ -32,7 +32,8 @@ from ...core.graph_filter import unpack_word_bits
 DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
 
 
-def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, out_ref, *, n: int):
+def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, *rest, n: int):
+    *w_refs, out_ref = rest       # optional weights ref rides between bits/out
     first = first_ref[...]        # (TB,)   int32 — first target per block
     deltas = deltas_ref[...]      # (TB, FB) uint16 — streamed compressed tile
     vc = vc_ref[...]              # (TB,)   int32 — valid (front-packed) slots
@@ -50,6 +51,10 @@ def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, out_ref, *, n: int):
     mask = (lane < vc[:, None]) & act  # structural padding mask ∧ filter bits
     safe = jnp.where(mask & (dst < jnp.int32(n)), dst, 0)
     xv = x[safe]                  # gather from VMEM-resident vertex state
+    if w_refs:
+        # weights don't delta-compress (§5.1.3): they stream uncompressed as
+        # a (TB, FB) tile aligned slot-for-slot with the decoded targets
+        xv = xv * w_refs[0][...]
     contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
     out_ref[...] = jnp.sum(contrib, axis=1)
 
@@ -61,16 +66,20 @@ def compressed_block_spmv_pallas(
     deltas: jnp.ndarray,       # (NB, FB) uint16
     valid_count: jnp.ndarray,  # (NB,) uint16/int32 — real slots per block
     bits: jnp.ndarray,         # (NB, FB//32) uint32
+    block_weights: jnp.ndarray | None = None,  # (NB, FB) f32, uncompressed
     *,
     n: int,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Per-block partial sums off the compressed stream:
-    out[b] = Σ_slot active(b,slot)·x[decode(b)[slot]].
+    out[b] = Σ_slot active(b,slot)·w(b,slot)·x[decode(b)[slot]].
 
-    Blocks containing ESCAPE deltas decode wrong here and must be patched by
-    the caller (ops.compressed_spmv_vertex does this).
+    ``block_weights`` (optional) is the parallel *uncompressed* weight
+    stream: weights don't difference-encode, so they ride as a plain
+    (TB, FB) VMEM tile per program, aligned slot-for-slot with the decoded
+    targets.  Blocks containing ESCAPE deltas decode wrong here and must be
+    patched by the caller (ops.compressed_spmv_vertex does this).
     """
     NB, FB = deltas.shape
     vc = valid_count.astype(jnp.int32)
@@ -81,22 +90,30 @@ def compressed_block_spmv_pallas(
         deltas = jnp.pad(deltas, ((0, pad), (0, 0)))
         vc = jnp.pad(vc, (0, pad))
         bits = jnp.pad(bits, ((0, pad), (0, 0)))
+        if block_weights is not None:
+            block_weights = jnp.pad(block_weights, ((0, pad), (0, 0)))
     nb_pad = NB + pad
     grid = (nb_pad // TB,)
     W = FB // 32
 
+    in_specs = [
+        pl.BlockSpec((x.shape[0],), lambda i: (0,)),  # x stays resident
+        pl.BlockSpec((TB,), lambda i: (i,)),          # compressed stream:
+        pl.BlockSpec((TB, FB), lambda i: (i, 0)),     #   first + deltas
+        pl.BlockSpec((TB,), lambda i: (i,)),          #   + valid counts
+        pl.BlockSpec((TB, W), lambda i: (i, 0)),
+    ]
+    operands = [x, block_first, deltas, vc, bits]
+    if block_weights is not None:
+        in_specs.append(pl.BlockSpec((TB, FB), lambda i: (i, 0)))
+        operands.append(block_weights)
+
     out = pl.pallas_call(
         functools.partial(_kernel, n=n),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((x.shape[0],), lambda i: (0,)),  # x stays resident
-            pl.BlockSpec((TB,), lambda i: (i,)),          # compressed stream:
-            pl.BlockSpec((TB, FB), lambda i: (i, 0)),     #   first + deltas
-            pl.BlockSpec((TB,), lambda i: (i,)),          #   + valid counts
-            pl.BlockSpec((TB, W), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((TB,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((nb_pad,), x.dtype),
         interpret=interpret,
-    )(x, block_first, deltas, vc, bits)
+    )(*operands)
     return out[:NB]

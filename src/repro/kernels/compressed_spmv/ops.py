@@ -16,6 +16,7 @@ def compressed_block_spmv(
     deltas,
     valid_count,
     bits,
+    block_weights=None,
     *,
     n: int,
     interpret: bool = True,
@@ -27,13 +28,14 @@ def compressed_block_spmv(
         deltas,
         valid_count,
         bits,
+        block_weights,
         n=n,
         interpret=interpret,
         tile_blocks=tile_blocks,
     )
 
 
-def _exception_block_sums(c: CompressedCSR, x, bits):
+def _exception_block_sums(c: CompressedCSR, x, bits, weights=None):
     """Exact per-block partial sums for the blocks on the exception list.
 
     ``exc_block`` may repeat a block (several wide gaps in one block), so
@@ -41,6 +43,8 @@ def _exception_block_sums(c: CompressedCSR, x, bits):
     exception matching its block id — O(NE² ) integer compares plus
     O(NE · F_B) decode work, no NE×NE×F_B intermediates (App. D.1's rare
     path; the ops-level fallback caps NE before this could dominate).
+    ``weights`` rides along as the uncompressed (NB, FB) stream: the
+    exception rows gather their aligned weight tiles by block id.
     """
     ebids = c.exc_block
     dst = jax.vmap(lambda b: decode_block(c, b))(ebids)    # exact decode
@@ -48,6 +52,8 @@ def _exception_block_sums(c: CompressedCSR, x, bits):
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
+    if weights is not None:
+        xv = xv * jnp.take(weights, ebids, axis=0)
     contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
     return jnp.sum(contrib, axis=1)                        # (NE,)
 
@@ -60,29 +66,30 @@ def compressed_spmv_vertex(
     interpret: bool = True,
     tile_blocks: int = 8,
 ) -> jnp.ndarray:
-    """out[v] = Σ_{(v,u) active} x[u], straight off the compressed stream.
+    """out[v] = Σ_{(v,u) active} w_vu · x[u], straight off the compressed
+    stream.
 
     The Pallas kernel fuses the uint16-delta decode with the masked SpMV; the
     rare ESCAPE blocks are then recomputed exactly and patched into the
     per-block sums before the cheap O(#blocks) owner reduction.
 
+    Weighted graphs keep their weights as a parallel *uncompressed* stream
+    (weights don't difference-encode, §5.1.3): the kernel streams the
+    aligned (TB, FB) weight tile next to the delta tile and applies it after
+    the in-VMEM decode, so the target stream still moves at compressed
+    width.  (A fused weight-compression scheme is future work; this is the
+    minimal correct fast path.)
+
     Graphs whose neighbor lists lack id-locality (many true ≥2¹⁶ gaps) make
     the exception list dense; past num_blocks/4 exceptions — or past the
     absolute cap where the O(NE²) tile fixup would dominate — the fused
     stream saves nothing and the exact jnp decode is used instead, a static
-    (trace-time) choice since n_exceptions is metadata.  Weighted graphs
-    keep w uncompressed, so their hot loop stays on the uncompressed
-    ``edge_block_spmv`` kernel; this wrapper is the unweighted
-    (web-graph-shaped) fast path.
+    (trace-time) choice since n_exceptions is metadata.
     """
-    if c.weighted:
-        raise ValueError(
-            "compressed_spmv_vertex is the unweighted fast path; "
-            "use kernels.edge_block_spmv.spmv_vertex on the uncompressed view"
-        )
     bits = f.bits if f is not None else make_filter(c).bits
+    w = c.block_weights if c.weighted else None
     if exception_dense(c):
-        per_block = compressed_block_spmv_ref(c, x, bits)
+        per_block = compressed_block_spmv_ref(c, x, bits, w)
     else:
         per_block = compressed_block_spmv_pallas(
             x,
@@ -90,11 +97,12 @@ def compressed_spmv_vertex(
             c.deltas,
             c.valid_count,
             bits,
+            w,
             n=c.n,
             interpret=interpret,
             tile_blocks=tile_blocks,
         )
         if c.n_exceptions:
-            fixed = _exception_block_sums(c, x, bits)
+            fixed = _exception_block_sums(c, x, bits, w)
             per_block = per_block.at[c.exc_block].set(fixed)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

@@ -12,17 +12,22 @@ from ...core.compressed import CompressedCSR, decode_blocks
 from ...core.graph_filter import unpack_word_bits
 
 
-def compressed_block_spmv_ref(c: CompressedCSR, x, bits):
-    """Per-block partial sums, computed with plain jnp ops (exact decode)."""
+def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None):
+    """Per-block partial sums, computed with plain jnp ops (exact decode).
+
+    ``weights``: optional (NB, FB) uncompressed stream aligned slot-for-slot
+    with the decoded block tiles (``CompressedCSR.block_weights``)."""
     dst = decode_blocks(c)
     act = unpack_word_bits(bits)
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
+    if weights is not None:
+        xv = xv * weights
     contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
     return jnp.sum(contrib, axis=1)
 
 
-def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits):
-    per_block = compressed_block_spmv_ref(c, x, bits)
+def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits, weights=None):
+    per_block = compressed_block_spmv_ref(c, x, bits, weights)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

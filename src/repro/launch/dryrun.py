@@ -47,6 +47,15 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions (some
+    return the per-computation dict, 0.4.x returns a one-element list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(shape_str):
@@ -166,7 +175,7 @@ def _compile_cost_variant(cell, mesh, n_layers: int):
         compiled = jax.jit(
             fn, in_shardings=shardings, out_shardings=out_shardings
         ).lower(*specs).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     xla_flops = float(cost.get("flops", 0))
     parsed = dot_flops_from_hlo(compiled.as_text())
     return max(xla_flops, parsed), float(cost.get("bytes accessed", 0))
@@ -205,7 +214,7 @@ def run_cell(cell, mesh, mesh_name: str, out_dir: str):
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes_from_hlo(hlo, scan_trips_for(cell))
         flops_raw = float(cost.get("flops", -1)) if cost else -1
@@ -253,6 +262,7 @@ def run_graph_engine(mesh, mesh_name: str, out_dir: str, *, rules_name: str = "b
     """
     import jax.numpy as jnp
 
+    from ..core.plan import sharded_graph_spec
     from ..distributed.engine import (
         distributed_frontier_min,
         distributed_pagerank_step,
@@ -260,16 +270,14 @@ def run_graph_engine(mesh, mesh_name: str, out_dir: str, *, rules_name: str = "b
 
     n, NB, FB = 1 << 20, 1 << 18, 128
     S = jax.ShapeDtypeStruct
-    bd = S((NB, FB), jnp.int32)
-    bw = S((NB, FB), jnp.float32)
-    bs = S((NB,), jnp.int32)
+    gs = sharded_graph_spec(n, NB, FB, int(mesh.devices.size))
     x = S((n,), jnp.float32)
     xi = S((n,), jnp.int32)
     fr = S((n,), jnp.bool_)
 
     for name, build, specs in [
-        ("pagerank_round", lambda: distributed_pagerank_step(mesh, n=n), (bd, bw, bs, x, x)),
-        ("frontier_min", lambda: distributed_frontier_min(mesh, n=n), (bd, bs, xi, fr)),
+        ("pagerank_round", lambda: distributed_pagerank_step(mesh, n=n), (gs, x, x)),
+        ("frontier_min", lambda: distributed_frontier_min(mesh, n=n), (gs, xi, fr)),
     ]:
         key = f"sage-graph__{name}_{rules_name}__{mesh_name}"
         out_path = os.path.join(out_dir, key + ".json")
@@ -284,7 +292,7 @@ def run_graph_engine(mesh, mesh_name: str, out_dir: str, *, rules_name: str = "b
             fn = build()
             with use_mesh(mesh):
                 compiled = jax.jit(fn).lower(*specs).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             mem = compiled.memory_analysis()
             coll = collective_bytes_from_hlo(compiled.as_text(), 1)
             rec.update(

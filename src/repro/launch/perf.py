@@ -128,15 +128,14 @@ def _run_engine_variants(mesh, mesh_name, out_dir):
 
     import jax.numpy as jnp
 
+    from ..core.plan import sharded_graph_spec
     from ..distributed.engine import distributed_pagerank_step
-    from .dryrun import collective_bytes_from_hlo
+    from .dryrun import collective_bytes_from_hlo, cost_dict
 
     n, NB, FB = 1 << 20, 1 << 18, 128
     S = jax.ShapeDtypeStruct
     specs = (
-        S((NB, FB), jnp.int32),
-        S((NB, FB), jnp.float32),
-        S((NB,), jnp.int32),
+        sharded_graph_spec(n, NB, FB, int(mesh.devices.size)),
         S((n,), jnp.float32),
         S((n,), jnp.float32),
     )
@@ -157,7 +156,7 @@ def _run_engine_variants(mesh, mesh_name, out_dir):
             fn = distributed_pagerank_step(mesh, n=n, **kwargs)
             with use_mesh(mesh):
                 compiled = jax.jit(fn).lower(*specs).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             mem = compiled.memory_analysis()
             coll = collective_bytes_from_hlo(compiled.as_text(), 1)
             rec.update(

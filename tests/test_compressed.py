@@ -40,12 +40,13 @@ def c(g):
     return compress(g)
 
 
-def wide_delta_graph():
+def wide_delta_graph(weighted: bool = False):
     """Graph whose encoding needs the ≥2¹⁶-delta COO exception path."""
     n = 70000
     src = np.array([0, 0, 0, 0, 0, 0, 1, 1], np.int64)
     dst = np.array([1, 2, 66000, 66001, 69998, 69999, 3, 69000], np.int64)
-    return build_csr(n, src, dst, block_size=32)
+    w = np.arange(1, 9, dtype=np.float32) if weighted else None
+    return build_csr(n, src, dst, w, block_size=32)
 
 
 # ----------------------------------------------------------------------
@@ -289,11 +290,34 @@ def test_edge_src_padding_contract(g, c):
     np.testing.assert_array_equal(np.asarray(c.edge_src), np.asarray(g.edge_src))
 
 
-def test_compressed_spmv_rejects_weighted():
-    gw = rmat_graph(32, 96, weighted=True, seed=1, block_size=32)
+@pytest.mark.parametrize("n,m,bs,tile", [(32, 96, 32, 2), (64, 256, 32, 8)])
+def test_compressed_spmv_weighted_fast_path(n, m, bs, tile):
+    """Weighted graphs run the fused kernel with weights riding as a parallel
+    uncompressed stream aligned to the decoded block tiles — same answers as
+    the weighted uncompressed kernel and the exact-decode oracle."""
+    gw = rmat_graph(n, m, weighted=True, seed=n + 1, block_size=bs)
     cw = compress(gw)
-    with pytest.raises(ValueError, match="unweighted"):
-        compressed_spmv_vertex(cw, jnp.ones(gw.n, jnp.float32))
+    assert cw.weighted and cw.block_weights is not None
+    f = make_filter(gw)
+    x = jax.random.normal(jax.random.PRNGKey(4), (gw.n,), jnp.float32)
+    got = compressed_spmv_vertex(cw, x, f, tile_blocks=tile)
+    want = compressed_spmv_vertex_ref(cw, x, f.bits, cw.block_weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    unc = spmv_vertex(gw, x, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(unc), rtol=1e-5, atol=1e-5)
+
+
+def test_compressed_spmv_weighted_exception_fixup():
+    """Exception blocks on weighted graphs get their weights applied in the
+    exact recompute path too."""
+    gw = wide_delta_graph(weighted=True)
+    cw = compress(gw)
+    assert cw.n_exceptions > 0 and cw.weighted
+    f = make_filter(gw)
+    x = jax.random.normal(jax.random.PRNGKey(5), (gw.n,), jnp.float32)
+    got = compressed_spmv_vertex(cw, x, f)
+    want = compressed_spmv_vertex_ref(cw, x, f.bits, cw.block_weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
 # ----------------------------------------------------------------------
