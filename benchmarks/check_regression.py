@@ -1,12 +1,18 @@
 """Gate a bench CSV against the committed baseline JSON.
 
     PYTHONPATH=src python -m benchmarks.check_regression bench_full.csv \
-        benchmarks/baseline_full.json [--threshold 1.25]
+        benchmarks/baseline_full.json [--threshold 1.25] [--trend trend.csv]
 
 Fails (exit 1) when any benchmark present in both files regressed in
 ``us_per_call`` by more than the threshold factor, or when any row errored.
 Rows below ``--floor`` microseconds in the baseline are skipped — timer
 noise dominates there — as are derived-only rows (us_per_call <= 0).
+
+``--trend PATH`` appends this run's rows to a rolling CSV
+(``timestamp,sha,name,us_per_call``) *before* gating, so regressed runs
+leave a trace too.  The nightly workflow carries the file across runs via
+the actions cache and uploads it as an artifact — per-PR trend lines for
+every benchmark, the filtered-edgeMap rows included.
 
 ``BENCH_REGRESSION_FACTOR`` (env) scales the threshold for known-slower
 runners without editing the workflow.
@@ -19,6 +25,7 @@ Regenerate the baseline on a quiet machine with:
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import sys
@@ -46,6 +53,21 @@ def read_csv(path: str) -> tuple[dict[str, float], list[str]]:
     return rows, errors
 
 
+def append_trend(path: str, rows: dict[str, float]) -> None:
+    """Append one line per benchmark to the rolling trend CSV (header on
+    first write).  ``GITHUB_SHA`` tags the rows with the commit when run in
+    CI, so the artifact reads as a per-PR time series."""
+    fresh = not os.path.exists(path) or os.path.getsize(path) == 0
+    ts = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
+    sha = os.environ.get("GITHUB_SHA", "local")[:12]
+    with open(path, "a") as fh:
+        if fresh:
+            fh.write("timestamp,sha,name,us_per_call\n")
+        for name, us in sorted(rows.items()):
+            fh.write(f"{ts},{sha},{name},{us:.0f}\n")
+    print(f"trend: appended {len(rows)} rows to {path}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("csv")
@@ -56,9 +78,13 @@ def main() -> int:
                     help="skip rows whose baseline is below this (us)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="overwrite the baseline JSON from the CSV and exit")
+    ap.add_argument("--trend", default=None, metavar="PATH",
+                    help="append this run's us_per_call rows to a rolling CSV")
     args = ap.parse_args()
 
     rows, errors = read_csv(args.csv)
+    if args.trend:
+        append_trend(args.trend, rows)
     if args.write_baseline:
         if errors:
             # an errored row silently vanishing from the baseline would

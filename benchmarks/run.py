@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
 
   fig1_suite    — Fig. 1 / Fig. 6: the 18-algorithm suite + PSAM work model
   table4_filter — Table 4: filter block size F_B ↔ triangle-count work
+  table4_filter_planned — filtered edgeMap via the kernel edge_active
+                  operand (raw + compressed) and a 4-shard mesh
   table5_edgemap— Table 5: edgeMap variant ↔ peak intermediate memory
   table_compression — §5.1.3: compression ratio + compressed edgeMap throughput
   table_distributed — planner: per-shard PageRank throughput, compressed vs raw
@@ -31,6 +33,11 @@ def main() -> None:
             n=4096 if args.full else 1024, m=32768 if args.full else 8192
         ),
         "table4_filter": lambda: table4_filter.run(
+            n=2048 if args.full else 512, m=16384 if args.full else 4096
+        ),
+        # planner-native filter columns: Pallas edge_active operand (raw +
+        # compressed) and the 4-shard sharded-filter path
+        "table4_filter_planned": lambda: table4_filter.run_planned(
             n=2048 if args.full else 512, m=16384 if args.full else 4096
         ),
         "table5_edgemap": lambda: table5_edgemap.run(

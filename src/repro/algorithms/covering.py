@@ -151,17 +151,34 @@ def coloring(g: CSRGraph, *, num_colors: int = 256):
 
 
 # ----------------------------------------------------------------------
-def set_cover(g: CSRGraph, sets_mask: jnp.ndarray, key: jax.Array, *, eps: float = 0.5):
+def set_cover(
+    g: CSRGraph,
+    sets_mask: jnp.ndarray,
+    key: jax.Array,
+    *,
+    eps: float = 0.5,
+    plan=None,
+):
     """(1+ε)-style parallel greedy set cover over a bipartite graph.
 
     ``sets_mask[v]`` marks set-vertices; their neighbors are elements.
     Returns in_cover bool[n].  Bucketing by ⌈log_{1+ε} coverage⌉ (App. B);
     winners are resolved MaNIS-style with random priorities; covered
     elements are packed out of the graphFilter.
+
+    The two filtered edgeMaps per round — elements awarding themselves to
+    their min-priority candidate neighbor, and chosen sets touching their
+    still-active elements — go through the planner dispatch with the
+    graphFilter's packed bits as ``edge_active``, so they run single-device
+    or sharded (``plan=``), compressed or raw; the per-round filter words
+    shard in-trace (``shard_edge_active``).  ``g`` stays the *unsharded*
+    backend — the O(m/32)-word filter mutation (``pack_vertices``) and the
+    win counting are global small-memory passes.
     """
     n = g.n
     elems = ~sets_mask
     src, dst = g.edge_src, g.edge_dst
+    gs = g if plan is None else plan.prepare(g)
     f0 = make_filter(g)
     # only set↔element edges participate: pack the rest out up front
     bip = jnp.take(sets_mask, src, mode="fill", fill_value=False) ^ jnp.take(
@@ -182,16 +199,21 @@ def set_cover(g: CSRGraph, sets_mask: jnp.ndarray, key: jax.Array, *, eps: float
         b = bucket_of(cov_deg)
         top = jnp.max(b)
         cand = sets_mask & (b == top) & (cov_deg > 0) & ~in_cover
-        # elements award themselves to their min-priority candidate neighbor
+        # elements award themselves to their min-priority candidate neighbor:
+        # a filtered edgeMap (min monoid) over the live bits — the planner
+        # runs it sharded when a mesh plan is given, the filter words riding
+        # packed; dst vertices with no live candidate edge come back at the
+        # min identity (INF), which never wins below
+        win_pri, _ = edgemap_reduce(
+            gs, cand, pri, monoid="min", edge_active=f.bits, mode="dense",
+            plan=plan,
+        )
         active = unpack_bits(f).reshape(-1)
         cand_s = jnp.take(cand, src, mode="fill", fill_value=False)
         award_e = active & cand_s & jnp.take(
             ~covered, dst, mode="fill", fill_value=False
         )
         pri_s = jnp.take(pri, src, mode="fill", fill_value=2**31 - 1)
-        win_pri = jax.ops.segment_min(
-            jnp.where(award_e, pri_s, INF_I32), jnp.where(award_e, dst, n), num_segments=n + 1
-        )[:n]
         # edge is a win for the set if it holds the element's min priority
         won_e = award_e & (pri_s == jnp.take(win_pri, dst, mode="fill", fill_value=-1))
         wins = jax.ops.segment_sum(
@@ -202,16 +224,11 @@ def set_cover(g: CSRGraph, sets_mask: jnp.ndarray, key: jax.Array, *, eps: float
         ).astype(jnp.int32)
         chosen = cand & (wins >= jnp.minimum(thresh, cov_deg))
         in_cover = in_cover | chosen
-        # chosen sets cover all their currently-active elements
-        chosen_s = jnp.take(chosen, src, mode="fill", fill_value=False)
-        newly_cov_e = active & chosen_s
-        cov_hit = (
-            jax.ops.segment_max(
-                newly_cov_e.astype(jnp.int32),
-                jnp.where(newly_cov_e, dst, n),
-                num_segments=n + 1,
-            )[:n]
-            > 0
+        # chosen sets cover all their currently-active elements: the
+        # edgeMap's touched mask *is* "received ≥1 live contribution"
+        _, cov_hit = edgemap_reduce(
+            gs, chosen, jnp.ones(n, jnp.int32), monoid="max",
+            edge_active=f.bits, mode="dense", plan=plan,
         )
         covered = covered | (elems & cov_hit)
         keep = ~jnp.take(covered, src, mode="fill", fill_value=False) & ~jnp.take(

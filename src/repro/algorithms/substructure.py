@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..core.bucketing import NULL_BUCKET, make_buckets
 from ..core.csr import CSRGraph
 from ..core.edgemap import edgemap_reduce
 from ..core.graph_filter import GraphFilter, make_filter, pack_bits
@@ -22,19 +23,30 @@ INF_I32 = jnp.int32(2**31 - 1)
 
 
 # ----------------------------------------------------------------------
-def kcore(g: CSRGraph):
-    """Coreness of every vertex (peeling with dense histograms).
-    Returns core int32[n]."""
+def kcore(g: CSRGraph, *, plan=None):
+    """Coreness of every vertex — Julienne-style bucketed peeling (App. B).
+
+    ``bucket_of[v]`` is v's current induced degree (retired once peeled);
+    each round extracts the minimum non-empty bucket, peels every vertex at
+    or below the running core number k, and subtracts the removed-neighbor
+    histogram (an edgeMap with the sum monoid).  Returns core int32[n].
+    ``plan`` routes the histogram edgeMaps through the planner dispatch —
+    single-device or sharded mesh, compressed or raw.
+    """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
 
     def body(state):
         deg, alive, core, k = state
-        mn = jnp.min(jnp.where(alive, deg, INF_I32))
+        mn, _, _ = make_buckets(
+            jnp.where(alive, deg, NULL_BUCKET)
+        ).next_bucket()
         k = jnp.maximum(k, mn)
         peel = alive & (deg <= k)
         core = jnp.where(peel, k, core)
         cnt, _ = edgemap_reduce(
-            g, peel, jnp.ones(n, jnp.int32), monoid="sum", mode="auto"
+            g, peel, jnp.ones(n, jnp.int32), monoid="sum", mode="auto", plan=plan
         )
         deg = jnp.maximum(deg - cnt, 0)
         return deg, alive & ~peel, core, k

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.backend import GraphLike
+from ..core.bucketing import NULL_BUCKET, make_buckets
 from ..core.edgemap import edgemap_reduce
 
 INF_I32 = jnp.int32(2**31 - 1)
@@ -56,14 +57,27 @@ def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     return parents, levels
 
 
-def wbfs(g: GraphLike, src: int, *, mode: str = "auto"):
+def wbfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """Integral-weight SSSP via bucketed Dijkstra (Julienne-style, App. B).
 
     Weights are read from ``g.edge_w`` and truncated to int32.  Returns
-    dist int32[n] (INF for unreachable).  The bucket structure is the dense
-    O(n) semi-eager variant: extracting the next bucket is a min-reduce.
+    dist int32[n] (INF for unreachable).  The bucket structure is
+    ``repro.core.bucketing.Buckets`` — the dense O(n) semi-eager variant:
+    each round rebuilds ``bucket_of`` from the tentative distances (one
+    O(n) write), and extracting the next bucket is a min-reduce.  Bucket
+    ids clamp at ``NULL_BUCKET - 1`` (the retired marker is 2³⁰), so the
+    extracted bucket may span several true distances past 2³⁰; the body
+    settles only the exact minimum among its members, keeping Dijkstra's
+    invariant over the full int32 range.
+
+    ``plan`` (``repro.core.plan``) picks the execution target: the weighted
+    relaxations stream the uncompressed weight tiles per shard while the
+    targets move compressed — the same loop runs single-device or sharded,
+    either backend.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     src = jnp.asarray(src, jnp.int32)
     dist0 = jnp.full(n, INF_I32).at[src].set(0)
     settled0 = jnp.zeros(n, dtype=bool)
@@ -72,13 +86,24 @@ def wbfs(g: GraphLike, src: int, *, mode: str = "auto"):
         wi = w.astype(jnp.int32)
         return jnp.where(xs >= INF_I32 - jnp.int32(1 << 24), INF_I32, xs + wi)
 
+    def buckets(dist, settled):
+        return make_buckets(
+            jnp.where(
+                settled | (dist == INF_I32),
+                NULL_BUCKET,
+                jnp.minimum(dist, NULL_BUCKET - 1),
+            )
+        )
+
     def body(state):
         dist, settled = state
-        d = jnp.min(jnp.where(settled, INF_I32, dist))
-        frontier = ~settled & (dist == d)
+        _, members, _ = buckets(dist, settled).next_bucket()
+        members = members & ~settled
+        d = jnp.min(jnp.where(members, dist, INF_I32))
+        frontier = members & (dist == d)
         settled = settled | frontier
         cand, touched = edgemap_reduce(
-            g, frontier, dist, monoid="min", map_fn=relax, mode=mode
+            g, frontier, dist, monoid="min", map_fn=relax, mode=mode, plan=plan
         )
         improve = touched & ~settled & (cand < dist)
         dist = jnp.where(improve, cand, dist)
@@ -86,18 +111,22 @@ def wbfs(g: GraphLike, src: int, *, mode: str = "auto"):
 
     def cond(state):
         dist, settled = state
-        return jnp.any(~settled & (dist < INF_I32))
+        return buckets(dist, settled).next_bucket()[2]
 
     dist, _ = lax.while_loop(cond, body, (dist0, settled0))
     return dist
 
 
-def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto"):
+def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """General-weight SSSP.  Returns (dist float32[n], has_neg_cycle bool).
 
     Vertices reachable from a negative cycle get -inf (App. C.1 spec).
+    ``plan`` routes the weighted relaxation rounds through the planner
+    dispatch — single-device or sharded mesh, compressed or raw.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     src = jnp.asarray(src, jnp.int32)
     dist0 = jnp.full(n, jnp.inf, jnp.float32).at[src].set(0.0)
     frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
@@ -108,7 +137,7 @@ def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto"):
     def body(state):
         rnd, dist, frontier = state
         cand, touched = edgemap_reduce(
-            g, frontier, dist, monoid="min", map_fn=relax, mode=mode
+            g, frontier, dist, monoid="min", map_fn=relax, mode=mode, plan=plan
         )
         improve = touched & (cand < dist)
         dist = jnp.where(improve, cand, dist)
@@ -126,7 +155,7 @@ def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto"):
     # propagate -inf from the still-improving set (bounded BFS)
     def prop_body(state):
         i, dist, fr = state
-        _, touched = edgemap_reduce(g, fr, dist, monoid="min", mode=mode)
+        _, touched = edgemap_reduce(g, fr, dist, monoid="min", mode=mode, plan=plan)
         newly = touched & (dist > -jnp.inf)
         dist = jnp.where(fr | newly, -jnp.inf, dist)
         return i + 1, dist, newly

@@ -27,6 +27,7 @@ from .edgemap import edge_map, edgemap_chunked, edgemap_dense, edgemap_reduce
 from .graph_filter import (
     GraphFilter,
     edge_active_flat,
+    edge_active_words,
     filter_edges,
     filter_edges_pred,
     live_block_indices,
@@ -38,8 +39,10 @@ from .graph_filter import (
 )
 from .plan import (
     ExecutionPlan,
+    ShardedEdgeActive,
     ShardedGraph,
     make_plan,
+    shard_edge_active,
     sharded_edgemap_reduce,
     sharded_graph_spec,
 )
@@ -49,8 +52,10 @@ from .vertex_subset import VertexSubset, empty, from_indices, from_mask, full
 __all__ = [
     "CompressedCSR",
     "ExecutionPlan",
+    "ShardedEdgeActive",
     "ShardedGraph",
     "make_plan",
+    "shard_edge_active",
     "sharded_edgemap_reduce",
     "sharded_graph_spec",
     "GraphBackend",
@@ -84,6 +89,7 @@ __all__ = [
     "unpack_word_bits",
     "pack_bits",
     "edge_active_flat",
+    "edge_active_words",
     "live_block_indices",
     "Buckets",
     "make_buckets",

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .backend import GraphLike, dense_block_view, tile_block_view
+from .graph_filter import GraphFilter, edge_active_words, unpack_word_bits
 from .primitives import compact_mask, monoid_identity, segment_reduce
 from .vertex_subset import VertexSubset
 
@@ -44,6 +45,22 @@ DEFAULT_CHUNK_BLOCKS = 256
 def _identity_map(x_src, w):
     del w
     return x_src
+
+
+def _edge_active_view(g: GraphLike, edge_active) -> jnp.ndarray | None:
+    """Normalize any edge-activity form to a bool (NB, F_B) block view.
+
+    ``edge_active`` is planner-native: a ``GraphFilter``, packed uint32
+    (NB, F_B/32) words, or a bool slot mask all mean the same thing at every
+    layer (see ``repro.core.graph_filter.edge_active_words``).  Bool masks
+    short-circuit (no pack/unpack round trip)."""
+    if edge_active is None:
+        return None
+    if isinstance(edge_active, GraphFilter) or (
+        hasattr(edge_active, "dtype") and edge_active.dtype == jnp.uint32
+    ):
+        return unpack_word_bits(edge_active_words(edge_active, g.block_size))
+    return jnp.asarray(edge_active).reshape(g.num_blocks, g.block_size)
 
 
 def _gather_rows(arr, idx, fill):
@@ -82,8 +99,9 @@ def edgemap_dense(
     edge_dst = block_dst.reshape(-1)
     frontier_blk = _gather_rows(frontier_mask, g.block_src, False)
     act = (frontier_blk[:, None] & (block_dst < jnp.int32(n))).reshape(-1)
-    if edge_active is not None:
-        act = act & edge_active.reshape(-1)
+    ea = _edge_active_view(g, edge_active)
+    if ea is not None:
+        act = act & ea.reshape(-1)
     xs_blk = _gather_rows(x, g.block_src, ident)
     xs = jnp.broadcast_to(
         xs_blk[:, None], (g.num_blocks, FB) + x.shape[1:]
@@ -130,9 +148,7 @@ def edgemap_chunked(
         out0 = jnp.zeros((n + 1,) + feat_shape, dtype=bool)
     touched0 = jnp.zeros(n + 1, dtype=jnp.int32)
 
-    bits = None
-    if edge_active is not None:
-        bits = edge_active.reshape(NB, FB)
+    bits = _edge_active_view(g, edge_active)
 
     def body(state):
         i, out, touched = state
@@ -188,6 +204,12 @@ def edgemap_reduce(
     ``shard_map`` (``g`` must then be the plan-prepared ``ShardedGraph``).
     Explicit ``mode`` / ``dense_frac`` / ``chunk_blocks`` arguments win over
     the plan's.
+
+    ``edge_active`` (GraphFilter | packed uint32 words | bool slot mask) is
+    plan-native too: on a mesh plan the packed words shard block-range-wise
+    alongside the edge blocks and unpack inside each shard's local body; a
+    ``ShardedEdgeActive`` from ``plan.prepare(g, edge_active=...)`` skips
+    the in-trace split.
     """
     if plan is not None:
         if plan.is_sharded:

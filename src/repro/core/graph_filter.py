@@ -58,6 +58,34 @@ class GraphFilter:
     def block_live(self) -> jnp.ndarray:
         return jnp.any(self.bits != 0, axis=-1)
 
+    def shard(self, num_shards: int) -> list["GraphFilter"]:
+        """Partition the filter words alongside the edge blocks.
+
+        The bit words are block-aligned (one row per block), so filter ∘
+        shard composes exactly like ``GraphBackend.shard``: the same
+        ``ceil(NB / num_shards)`` block-range split, with the padded tail
+        rows all-zero (padding blocks carry no active edges).  The O(n)
+        vertex state (``active_deg``, ``dirty``) stays replicated per shard,
+        mirroring the graph's replicated ``degrees``.  Shard s's bits line
+        up 1:1 with shard s of the graph, so a shard-local edgeMap consumes
+        them unchanged.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        from .csr import sharded_block_counts
+
+        per, padded_total = sharded_block_counts(self.num_blocks, num_shards)
+        pad = padded_total - self.num_blocks
+        bits = self.bits
+        if pad:
+            bits = jnp.pad(bits, ((0, pad), (0, 0)))
+        return [
+            dataclasses.replace(
+                self, bits=bits[s * per : (s + 1) * per], num_blocks=per
+            )
+            for s in range(num_shards)
+        ]
+
 
 def make_filter(g: GraphLike) -> GraphFilter:
     """makeFilter (§4.2.2): all real edges start active."""
@@ -103,6 +131,38 @@ def pack_bits(mask: jnp.ndarray) -> jnp.ndarray:
 def edge_active_flat(f: GraphFilter) -> jnp.ndarray:
     """bool[NB*F_B] — flat edge-slot activity mask."""
     return unpack_bits(f).reshape(-1)
+
+
+def edge_active_words(edge_active, block_size: int) -> jnp.ndarray:
+    """Normalize any edge-activity form to packed uint32[NB, F_B/32] words.
+
+    The one canonical on-wire/in-kernel filter representation (one bit per
+    edge slot, block-aligned rows, little-endian within each word — see
+    ``unpack_word_bits``).  Accepts:
+
+    * a ``GraphFilter``              — its ``bits`` verbatim
+    * packed uint32 (NB, F_B/32)     — passed through
+    * a bool edge-slot mask          — flat [NB*F_B] or [NB, F_B], packed here
+
+    jit-traceable (pure reshape/pack), so per-round masks normalize inside
+    algorithm loops without leaving the trace.
+    """
+    if isinstance(edge_active, GraphFilter):
+        return edge_active.bits
+    a = jnp.asarray(edge_active)
+    if a.dtype == jnp.uint32:
+        if a.ndim != 2 or a.shape[-1] != block_size // WORD:
+            raise ValueError(
+                f"packed edge_active must be (NB, {block_size // WORD}) uint32, "
+                f"got {a.shape}"
+            )
+        return a
+    if a.dtype == jnp.bool_:
+        return pack_bits(a.reshape(-1, block_size))
+    raise TypeError(
+        f"edge_active must be a GraphFilter, packed uint32 words, or a bool "
+        f"slot mask, got dtype {a.dtype}"
+    )
 
 
 def _recount(g: GraphLike, bits: jnp.ndarray) -> jnp.ndarray:

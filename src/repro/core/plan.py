@@ -25,6 +25,15 @@ runs the local body with the frontier and vertex state replicated.  The
 only cross-shard traffic is the monoid combine of the O(n) output — never
 O(m) — which is the PSAM small-memory bound expressed as a communication
 bound (§5.2).
+
+GraphFilter bits and per-call traversal masks (``edge_active``) are
+planner-native: the packed uint32 filter words are block-aligned, so they
+partition exactly like the edge blocks (``shard_edge_active`` — the same
+ceil(NB/k) block-range split, zero-padded tail) and travel the mesh at one
+bit per edge slot.  Each shard unpacks its own words locally inside the
+``shard_map`` body, so filtered edgeMaps run sharded with no fallback and
+no O(m)-word mask traffic.  ``filter ∘ shard == shard ∘ filter`` by
+construction (tested property).
 """
 from __future__ import annotations
 
@@ -41,12 +50,13 @@ from jax.sharding import PartitionSpec as P
 
 from .compressed import CompressedCSR
 from .csr import CSRGraph, graph_spec, sharded_block_counts
+from .graph_filter import edge_active_words, unpack_word_bits
 
 
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["shards"],
-    meta_fields=["num_shards"],
+    meta_fields=["num_shards", "orig_num_blocks"],
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedGraph:
@@ -55,13 +65,17 @@ class ShardedGraph:
     ``shards`` is a single ``CSRGraph`` / ``CompressedCSR`` pytree whose
     array leaves carry a leading ``num_shards`` dimension (shard s of leaf
     ``a`` is ``a[s]``); its static meta describes one shard (``num_blocks``
-    is the per-shard block count; ``n``/``m`` stay global).  Produced by
-    :meth:`ExecutionPlan.prepare`; consumed by the sharded edgeMap executor,
-    which partitions the leading dimension across the mesh.
+    is the per-shard block count; ``n``/``m`` stay global).
+    ``orig_num_blocks`` records the pre-split global block count so filter
+    words can be validated exactly against the graph they were built for.
+    Produced by :meth:`ExecutionPlan.prepare`; consumed by the sharded
+    edgeMap executor, which partitions the leading dimension across the
+    mesh.
     """
 
     shards: Any
     num_shards: int
+    orig_num_blocks: int | None = None
 
     @property
     def n(self) -> int:
@@ -83,6 +97,76 @@ class ShardedGraph:
     def degrees(self) -> jnp.ndarray:
         """int32[n] — O(n) vertex state, replicated per shard (shard 0's copy)."""
         return self.shards.degrees[0]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["words"],
+    meta_fields=["num_shards"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedEdgeActive:
+    """Shard-local filter state: packed uint32 words, stacked leaf-wise.
+
+    ``words`` is uint32[num_shards, blocks_per_shard, F_B/32] — shard s's
+    rows line up 1:1 with shard s of the matching ``ShardedGraph`` (same
+    block-range split, zero-padded tail).  Produced by
+    :func:`shard_edge_active` / :meth:`ExecutionPlan.prepare`; consumed by
+    the sharded edgeMap executor, which partitions the leading dimension
+    across the mesh and unpacks locally in each ``shard_map`` body.
+    """
+
+    words: jnp.ndarray
+    num_shards: int
+
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.words.shape[1]
+
+
+def shard_edge_active(
+    edge_active,
+    *,
+    block_size: int,
+    blocks_per_shard: int,
+    num_shards: int,
+    num_blocks: int | None = None,
+) -> ShardedEdgeActive:
+    """Partition filter words alongside the edge blocks (block-range split).
+
+    ``edge_active`` is any form ``edge_active_words`` accepts (GraphFilter,
+    packed uint32 words, bool slot mask) over the *global* block set; the
+    result stacks per-shard word tiles whose rows align with
+    ``GraphBackend.shard``'s block ranges.  The zero-padded tail rows mask
+    the empty sentinel blocks that pad a non-dividing block count (an
+    all-zero word deactivates nothing real).  Pure pad+reshape — traceable,
+    so per-round filter snapshots shard inside jit'd algorithm loops.
+
+    ``num_blocks``: the graph's true (pre-split) block count, when the
+    caller knows it (``ShardedGraph.orig_num_blocks``) — validated exactly.
+    Without it, a pad of a whole shard's worth or more is still rejected
+    (a filter for this graph pads < num_shards rows).  Zero-filling a
+    too-short filter would silently deactivate real blocks, so both checks
+    fail as loudly as the single-device reshape does.
+    """
+    words = edge_active_words(edge_active, block_size)
+    total = blocks_per_shard * num_shards
+    pad = total - words.shape[0]
+    if (
+        num_blocks is not None and words.shape[0] != num_blocks
+    ) or pad < 0 or pad >= num_shards:
+        raise ValueError(
+            f"edge_active covers {words.shape[0]} blocks but the plan "
+            f"carries {total} ({num_shards} shards x {blocks_per_shard}"
+            + (f", graph has {num_blocks}" if num_blocks is not None else "")
+            + ") — was the filter built for a different graph?"
+        )
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    return ShardedEdgeActive(
+        words=words.reshape(num_shards, blocks_per_shard, words.shape[-1]),
+        num_shards=num_shards,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,26 +224,56 @@ class ExecutionPlan:
             return mode
         return self.strategy
 
-    def prepare(self, g):
+    def prepare(self, g, edge_active=None):
         """Shard + stack + place a graph for this plan (identity off-mesh).
 
         Host-side (concrete arrays only): call once per graph, outside jit,
         like the paper's preprocessing step.  Idempotent on ShardedGraph.
+
+        ``edge_active`` (optional) carries a filter along: any form
+        ``edge_active_words`` accepts (GraphFilter, packed words, bool slot
+        mask).  When given, returns ``(graph, active)`` with the filter
+        words partitioned block-range-wise (``shard_edge_active``) and
+        placed next to the edge blocks — off-mesh the pair comes back
+        unchanged.  Filters that mutate per round don't need this: the
+        sharded executor normalizes raw masks in-trace; ``prepare`` is the
+        ahead-of-time placement path for long-lived filters.
         """
         if not self.is_sharded:
-            return g
+            return g if edge_active is None else (g, edge_active)
         if isinstance(g, ShardedGraph):
             if g.num_shards != self.num_shards:
                 raise ValueError(
                     f"graph prepared for {g.num_shards} shards, plan has "
                     f"{self.num_shards}"
                 )
-            return g
-        shards = g.shard(self.num_shards)
-        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *shards)
+            gs = g
+        else:
+            shards = g.shard(self.num_shards)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *shards)
+            sharding = NamedSharding(self.mesh, P(self.axes))
+            stacked = jax.tree.map(lambda a: jax.device_put(a, sharding), stacked)
+            gs = ShardedGraph(
+                shards=stacked,
+                num_shards=self.num_shards,
+                orig_num_blocks=g.num_blocks,
+            )
+        if edge_active is None:
+            return gs
+        if not isinstance(edge_active, ShardedEdgeActive):
+            edge_active = shard_edge_active(
+                edge_active,
+                block_size=gs.block_size,
+                blocks_per_shard=gs.blocks_per_shard,
+                num_shards=self.num_shards,
+                num_blocks=gs.orig_num_blocks,
+            )
         sharding = NamedSharding(self.mesh, P(self.axes))
-        stacked = jax.tree.map(lambda a: jax.device_put(a, sharding), stacked)
-        return ShardedGraph(shards=stacked, num_shards=self.num_shards)
+        edge_active = ShardedEdgeActive(
+            words=jax.device_put(edge_active.words, sharding),
+            num_shards=edge_active.num_shards,
+        )
+        return gs, edge_active
 
     def describe(self) -> str:
         where = (
@@ -217,7 +331,9 @@ def sharded_graph_spec(
     stacked = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((num_shards,) + s.shape, s.dtype), base
     )
-    return ShardedGraph(shards=stacked, num_shards=num_shards)
+    return ShardedGraph(
+        shards=stacked, num_shards=num_shards, orig_num_blocks=num_blocks
+    )
 
 
 # ----------------------------------------------------------------------
@@ -280,16 +396,19 @@ def sharded_edgemap_reduce(
     """Direction-optimized edgeMap over a mesh: per-shard local pass through
     the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
     monoid combine of the O(n) output.  ``g`` must be a ShardedGraph
-    (``plan.prepare``); frontier and vertex state are replicated."""
+    (``plan.prepare``); frontier and vertex state are replicated.
+
+    ``edge_active`` runs plan-native: a ``ShardedEdgeActive`` (from
+    ``plan.prepare(g, edge_active=...)``) is consumed as-is; any raw form
+    (GraphFilter, packed uint32 words, bool slot mask over the global block
+    set) is partitioned in-trace by ``shard_edge_active``.  Each shard's
+    packed words ride the mesh at one bit per edge slot and unpack locally
+    inside the ``shard_map`` body, so the filtered path shares every line of
+    the unfiltered executor."""
     # the executor reuses the single-device bodies; import here so edgemap.py
     # can lazily import this module without a cycle
     from .edgemap import edgemap_reduce
 
-    if edge_active is not None:
-        raise NotImplementedError(
-            "edge_active is not yet threaded through the sharded planner; "
-            "run filtered edgeMaps single-device or pre-apply the filter"
-        )
     if not isinstance(g, ShardedGraph):
         g = plan.prepare(g)
     mode = plan.resolve_mode(mode)
@@ -298,9 +417,30 @@ def sharded_edgemap_reduce(
     n = g.n
     out_dtype = x.dtype
 
-    def local(sg, fm, xv):
+    active = None
+    if edge_active is not None:
+        if isinstance(edge_active, ShardedEdgeActive):
+            if edge_active.num_shards != plan.num_shards:
+                raise ValueError(
+                    f"edge_active prepared for {edge_active.num_shards} "
+                    f"shards, plan has {plan.num_shards}"
+                )
+            active = edge_active
+        else:
+            active = shard_edge_active(
+                edge_active,
+                block_size=g.block_size,
+                blocks_per_shard=g.blocks_per_shard,
+                num_shards=plan.num_shards,
+                num_blocks=g.orig_num_blocks,
+            )
+
+    def local(sg, fm, xv, *rest):
         g_local = jax.tree.map(lambda a: a[0], sg.shards)
         kwargs = {} if map_fn is None else {"map_fn": map_fn}
+        if rest:
+            # shard-local filter words → bool (blocks_per_shard, F_B) view
+            kwargs["edge_active"] = unpack_word_bits(rest[0].words[0])
         out, touched = edgemap_reduce(
             g_local,
             fm,
@@ -313,13 +453,18 @@ def sharded_edgemap_reduce(
         )
         return _combine_shards(plan, out, touched, monoid, n, out_dtype)
 
+    in_specs = [P(plan.axes), P(), P()]
+    operands = [g, frontier_mask, x]
+    if active is not None:
+        in_specs.append(P(plan.axes))
+        operands.append(active)
     fn = shard_map(
         local,
         mesh=plan.mesh,
-        in_specs=(P(plan.axes), P(), P()),
+        in_specs=tuple(in_specs),
         out_specs=(P(), P()),
         # the hierarchical all_gather(psum_scatter(...)) is replicated over
         # the fast axis but the static replication check can't prove it
         check_rep=False,
     )
-    return fn(g, frontier_mask, x)
+    return fn(*operands)

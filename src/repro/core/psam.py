@@ -56,7 +56,9 @@ class PSAMCost:
         self.large_reads += _block_read_words(g, active_blocks)
         self.small_ops += 3 * g.n
 
-    def charge_edgemap_planned(self, g, num_shards: int = 1, active_blocks=None):
+    def charge_edgemap_planned(
+        self, g, num_shards: int = 1, active_blocks=None, filter_live_blocks=None
+    ):
         """One planner-dispatched edgeMap round over ``num_shards`` shards.
 
         Large-memory reads are charged *per shard* — compressed backends at
@@ -71,9 +73,29 @@ class PSAMCost:
         ``active_blocks``: total active blocks across shards for the sparse
         strategy; None charges the dense pass (every block, padding
         included).
+
+        ``filter_live_blocks``: present when the round ran with a
+        graphFilter / ``edge_active`` mask — either the live-block count
+        (int) or the ``GraphFilter`` itself (its ``block_live`` popcount is
+        taken).  Filtered rounds charge only the live blocks (dead blocks
+        are skipped — the paper's empty-block compaction, §4.2.2), rounded
+        up to whole shards so a shard with any live block still streams one,
+        plus the packed filter words themselves: one uint32 word per 32 edge
+        slots, the relaxed-PSAM O(n + m/64)-words filter state read once
+        per round.
         """
         _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
         blocks = padded_total if active_blocks is None else active_blocks
+        if filter_live_blocks is not None:
+            live = filter_live_blocks
+            if hasattr(live, "block_live"):  # a GraphFilter
+                live = int(live.block_live.sum())
+            else:
+                live = int(live)  # python/numpy integer count
+            per = -(-live // max(num_shards, 1))  # live blocks, whole shards
+            blocks = min(blocks, per * num_shards)
+            # the filter words stream alongside the blocks they mask
+            self.large_reads += padded_total * (g.block_size // 32)
         self.large_reads += _block_read_words(g, blocks)
         # local O(n) state per shard + one O(n)-word combine per shard boundary
         self.small_ops += 3 * g.n + (num_shards - 1) * g.n

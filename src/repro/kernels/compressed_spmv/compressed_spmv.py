@@ -11,11 +11,19 @@ the TPU analogue of the paper's "decode the whole block to fetch one edge"
 filter-iterator discipline.  The graphFilter bits ride along as one uint32
 word per 32 edges, exactly as in ``edge_block_spmv``.
 
+Filtered traversals stream a *second* packed bitmask, ``edge_active`` — the
+per-call traversal mask (spanner's intra-cluster edges, biconnectivity's
+non-tree edges, a graphFilter snapshot) — as its own aligned (TB, F_B/32)
+uint32 tile per program.  Both masks are unpacked with vector shifts and
+ANDed into the validity mask *in-kernel*, so a filtered edgeMap never
+round-trips a combined mask (or worse, decoded targets) through HBM.
+
 Exception handling: deltas ≥ 2¹⁶ are stored as the ESCAPE sentinel and the
 kernel decodes those blocks *incorrectly on purpose* — patching a COO
 exception list inside a tiled kernel would serialize the pipeline.  The
-(rare) exception blocks are recomputed exactly by the wrapper in ops.py and
-overwritten in the per-block output; see ``compressed_spmv_vertex``.
+(rare) exception blocks are recomputed exactly by the wrapper in ops.py
+(with the same edge_active masking) and overwritten in the per-block
+output; see ``compressed_spmv_vertex``.
 
 Grid: one program per tile of TB edge-blocks, mirroring edge_block_spmv.
 """
@@ -32,8 +40,21 @@ from ...core.graph_filter import unpack_word_bits
 DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
 
 
-def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, *rest, n: int):
-    *w_refs, out_ref = rest       # optional weights ref rides between bits/out
+def _kernel(
+    x_ref,
+    first_ref,
+    deltas_ref,
+    vc_ref,
+    bits_ref,
+    *rest,
+    n: int,
+    has_active: bool,
+    has_weights: bool,
+):
+    refs = list(rest)
+    out_ref = refs.pop()
+    act_ref = refs.pop(0) if has_active else None  # rides right after bits
+    w_ref = refs.pop(0) if has_weights else None
     first = first_ref[...]        # (TB,)   int32 — first target per block
     deltas = deltas_ref[...]      # (TB, FB) uint16 — streamed compressed tile
     vc = vc_ref[...]              # (TB,)   int32 — valid (front-packed) slots
@@ -47,14 +68,17 @@ def _kernel(x_ref, first_ref, deltas_ref, vc_ref, bits_ref, *rest, n: int):
     dst = first[:, None] + jnp.cumsum(d, axis=1)
 
     act = unpack_word_bits(bits)  # (TB, FB) bool, canonical graphFilter order
+    if act_ref is not None:
+        # per-call traversal mask: same packed layout, ANDed in VMEM
+        act = act & unpack_word_bits(act_ref[...])
 
     mask = (lane < vc[:, None]) & act  # structural padding mask ∧ filter bits
     safe = jnp.where(mask & (dst < jnp.int32(n)), dst, 0)
     xv = x[safe]                  # gather from VMEM-resident vertex state
-    if w_refs:
+    if w_ref is not None:
         # weights don't delta-compress (§5.1.3): they stream uncompressed as
         # a (TB, FB) tile aligned slot-for-slot with the decoded targets
-        xv = xv * w_refs[0][...]
+        xv = xv * w_ref[...]
     contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
     out_ref[...] = jnp.sum(contrib, axis=1)
 
@@ -66,6 +90,7 @@ def compressed_block_spmv_pallas(
     deltas: jnp.ndarray,       # (NB, FB) uint16
     valid_count: jnp.ndarray,  # (NB,) uint16/int32 — real slots per block
     bits: jnp.ndarray,         # (NB, FB//32) uint32
+    edge_active: jnp.ndarray | None = None,    # (NB, FB//32) uint32, packed
     block_weights: jnp.ndarray | None = None,  # (NB, FB) f32, uncompressed
     *,
     n: int,
@@ -75,11 +100,15 @@ def compressed_block_spmv_pallas(
     """Per-block partial sums off the compressed stream:
     out[b] = Σ_slot active(b,slot)·w(b,slot)·x[decode(b)[slot]].
 
-    ``block_weights`` (optional) is the parallel *uncompressed* weight
-    stream: weights don't difference-encode, so they ride as a plain
-    (TB, FB) VMEM tile per program, aligned slot-for-slot with the decoded
-    targets.  Blocks containing ESCAPE deltas decode wrong here and must be
-    patched by the caller (ops.compressed_spmv_vertex does this).
+    ``edge_active`` (optional) is the packed per-call traversal mask, one
+    uint32 word per 32 edge slots in the same block-aligned layout as the
+    graphFilter ``bits``; it streams as its own (TB, F_B/32) tile and is
+    ANDed into the validity mask in-kernel.  ``block_weights`` (optional) is
+    the parallel *uncompressed* weight stream: weights don't
+    difference-encode, so they ride as a plain (TB, FB) VMEM tile per
+    program, aligned slot-for-slot with the decoded targets.  Blocks
+    containing ESCAPE deltas decode wrong here and must be patched by the
+    caller (ops.compressed_spmv_vertex does this).
     """
     NB, FB = deltas.shape
     vc = valid_count.astype(jnp.int32)
@@ -90,6 +119,8 @@ def compressed_block_spmv_pallas(
         deltas = jnp.pad(deltas, ((0, pad), (0, 0)))
         vc = jnp.pad(vc, (0, pad))
         bits = jnp.pad(bits, ((0, pad), (0, 0)))
+        if edge_active is not None:
+            edge_active = jnp.pad(edge_active, ((0, pad), (0, 0)))
         if block_weights is not None:
             block_weights = jnp.pad(block_weights, ((0, pad), (0, 0)))
     nb_pad = NB + pad
@@ -104,12 +135,20 @@ def compressed_block_spmv_pallas(
         pl.BlockSpec((TB, W), lambda i: (i, 0)),
     ]
     operands = [x, block_first, deltas, vc, bits]
+    if edge_active is not None:
+        in_specs.append(pl.BlockSpec((TB, W), lambda i: (i, 0)))
+        operands.append(edge_active)
     if block_weights is not None:
         in_specs.append(pl.BlockSpec((TB, FB), lambda i: (i, 0)))
         operands.append(block_weights)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n=n),
+        functools.partial(
+            _kernel,
+            n=n,
+            has_active=edge_active is not None,
+            has_weights=block_weights is not None,
+        ),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((TB,), lambda i: (i,)),

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 
 from ...core.compressed import CompressedCSR, decode_block, exception_dense
-from ...core.graph_filter import GraphFilter, make_filter, unpack_word_bits
+from ...core.graph_filter import (
+    GraphFilter,
+    edge_active_words,
+    make_filter,
+    unpack_word_bits,
+)
 from .compressed_spmv import compressed_block_spmv_pallas
 from .ref import compressed_block_spmv_ref
 
@@ -16,6 +21,7 @@ def compressed_block_spmv(
     deltas,
     valid_count,
     bits,
+    edge_active=None,
     block_weights=None,
     *,
     n: int,
@@ -28,6 +34,7 @@ def compressed_block_spmv(
         deltas,
         valid_count,
         bits,
+        edge_active,
         block_weights,
         n=n,
         interpret=interpret,
@@ -35,7 +42,7 @@ def compressed_block_spmv(
     )
 
 
-def _exception_block_sums(c: CompressedCSR, x, bits, weights=None):
+def _exception_block_sums(c: CompressedCSR, x, bits, weights=None, active=None):
     """Exact per-block partial sums for the blocks on the exception list.
 
     ``exc_block`` may repeat a block (several wide gaps in one block), so
@@ -43,12 +50,16 @@ def _exception_block_sums(c: CompressedCSR, x, bits, weights=None):
     exception matching its block id — O(NE² ) integer compares plus
     O(NE · F_B) decode work, no NE×NE×F_B intermediates (App. D.1's rare
     path; the ops-level fallback caps NE before this could dominate).
-    ``weights`` rides along as the uncompressed (NB, FB) stream: the
-    exception rows gather their aligned weight tiles by block id.
+    ``weights`` rides along as the uncompressed (NB, FB) stream and
+    ``active`` as the packed (NB, F_B/32) traversal mask: the exception rows
+    gather their aligned weight/mask tiles by block id, so the fixup masks
+    exactly what the kernel masked.
     """
     ebids = c.exc_block
     dst = jax.vmap(lambda b: decode_block(c, b))(ebids)    # exact decode
     act = unpack_word_bits(jnp.take(bits, ebids, axis=0))
+    if active is not None:
+        act = act & unpack_word_bits(jnp.take(active, ebids, axis=0))
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
@@ -63,6 +74,7 @@ def compressed_spmv_vertex(
     x: jnp.ndarray,
     f: GraphFilter | None = None,
     *,
+    edge_active=None,
     interpret: bool = True,
     tile_blocks: int = 8,
 ) -> jnp.ndarray:
@@ -72,6 +84,13 @@ def compressed_spmv_vertex(
     The Pallas kernel fuses the uint16-delta decode with the masked SpMV; the
     rare ESCAPE blocks are then recomputed exactly and patched into the
     per-block sums before the cheap O(#blocks) owner reduction.
+
+    ``edge_active`` is the per-call traversal mask (a GraphFilter, a packed
+    uint32 (NB, F_B/32) word array, or a bool edge-slot mask — see
+    ``repro.core.graph_filter.edge_active_words``).  It streams into the
+    kernel as a second packed bitmask tile and is ANDed with the filter bits
+    in VMEM — the filtered fast path never falls back to a full decode, and
+    the exception fixup applies the identical mask.
 
     Weighted graphs keep their weights as a parallel *uncompressed* stream
     (weights don't difference-encode, §5.1.3): the kernel streams the
@@ -84,12 +103,18 @@ def compressed_spmv_vertex(
     the exception list dense; past num_blocks/4 exceptions — or past the
     absolute cap where the O(NE²) tile fixup would dominate — the fused
     stream saves nothing and the exact jnp decode is used instead, a static
-    (trace-time) choice since n_exceptions is metadata.
+    (trace-time) choice since n_exceptions is metadata.  That choice depends
+    only on the exception density, never on whether a filter is present.
     """
     bits = f.bits if f is not None else make_filter(c).bits
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, c.block_size)
+    )
     w = c.block_weights if c.weighted else None
     if exception_dense(c):
-        per_block = compressed_block_spmv_ref(c, x, bits, w)
+        per_block = compressed_block_spmv_ref(c, x, bits, w, active)
     else:
         per_block = compressed_block_spmv_pallas(
             x,
@@ -97,12 +122,13 @@ def compressed_spmv_vertex(
             c.deltas,
             c.valid_count,
             bits,
+            active,
             w,
             n=c.n,
             interpret=interpret,
             tile_blocks=tile_blocks,
         )
         if c.n_exceptions:
-            fixed = _exception_block_sums(c, x, bits, w)
+            fixed = _exception_block_sums(c, x, bits, w, active)
             per_block = per_block.at[c.exc_block].set(fixed)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

@@ -12,13 +12,17 @@ from ...core.compressed import CompressedCSR, decode_blocks
 from ...core.graph_filter import unpack_word_bits
 
 
-def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None):
+def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None, active=None):
     """Per-block partial sums, computed with plain jnp ops (exact decode).
 
     ``weights``: optional (NB, FB) uncompressed stream aligned slot-for-slot
-    with the decoded block tiles (``CompressedCSR.block_weights``)."""
+    with the decoded block tiles (``CompressedCSR.block_weights``).
+    ``active``: optional packed uint32 (NB, F_B/32) traversal mask, ANDed
+    with the graphFilter ``bits`` exactly as the kernel does."""
     dst = decode_blocks(c)
     act = unpack_word_bits(bits)
+    if active is not None:
+        act = act & unpack_word_bits(active)
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
@@ -28,6 +32,6 @@ def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None):
     return jnp.sum(contrib, axis=1)
 
 
-def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits, weights=None):
-    per_block = compressed_block_spmv_ref(c, x, bits, weights)
+def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits, weights=None, active=None):
+    per_block = compressed_block_spmv_ref(c, x, bits, weights, active)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]

@@ -5,6 +5,10 @@ across the whole grid; the edge blocks (large memory) are streamed
 HBM→VMEM tile by tile and *never written*.  The graphFilter bits ride along
 as one uint32 word per 32 edges and are unpacked with vector shifts —
 the TPU-idiomatic equivalent of the paper's TZCNT/BLSR word loop (§4.2.3).
+Filtered traversals stream a second packed bitmask (``edge_active``, the
+per-call traversal mask) as its own aligned (TB, F_B/32) tile; both masks
+are ANDed into the validity mask in-kernel, so no combined mask is ever
+materialized in HBM.
 
 Grid: one program per tile of TB edge-blocks.  Each program produces the
 per-block partial sums; the (cheap, O(#blocks)) reduction onto vertices by
@@ -19,18 +23,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.graph_filter import unpack_word_bits
+
 DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
 
 
-def _kernel(x_ref, dst_ref, w_ref, bits_ref, out_ref, *, n: int):
+def _kernel(x_ref, dst_ref, w_ref, bits_ref, *rest, n: int, has_active: bool):
+    refs = list(rest)
+    out_ref = refs.pop()
     dst = dst_ref[...]            # (TB, FB) int32 — streamed edge block tile
     w = w_ref[...]                # (TB, FB)
     x = x_ref[...]                # (n_pad,)  — PSAM small memory, VMEM-resident
     bits = bits_ref[...]          # (TB, FB//32) uint32 — graphFilter view
 
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    act = ((bits[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
-    act = act.reshape(dst.shape)  # (TB, FB) bool
+    act = unpack_word_bits(bits)  # (TB, FB) bool, canonical graphFilter order
+    if has_active:
+        act = act & unpack_word_bits(refs[0][...])  # traversal mask, in VMEM
 
     mask = (dst < jnp.int32(n)) & act
     safe = jnp.where(mask, dst, 0)
@@ -47,12 +55,17 @@ def edge_block_spmv_pallas(
     block_dst: jnp.ndarray,  # (NB, FB) int32
     block_w: jnp.ndarray,    # (NB, FB)
     bits: jnp.ndarray,       # (NB, FB//32) uint32
+    edge_active: jnp.ndarray | None = None,  # (NB, FB//32) uint32, packed
     *,
     n: int,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Per-block partial sums: out[b] = Σ_slot active(b,slot)·w·x[dst]."""
+    """Per-block partial sums: out[b] = Σ_slot active(b,slot)·w·x[dst].
+
+    ``edge_active`` (optional) is the packed per-call traversal mask in the
+    same block-aligned uint32 layout as the graphFilter ``bits``; it streams
+    as its own (TB, F_B/32) tile and is ANDed in-kernel."""
     NB, FB = block_dst.shape
     TB = min(tile_blocks, NB)
     pad = (-NB) % TB
@@ -60,21 +73,29 @@ def edge_block_spmv_pallas(
         block_dst = jnp.pad(block_dst, ((0, pad), (0, 0)), constant_values=n)
         block_w = jnp.pad(block_w, ((0, pad), (0, 0)))
         bits = jnp.pad(bits, ((0, pad), (0, 0)))
+        if edge_active is not None:
+            edge_active = jnp.pad(edge_active, ((0, pad), (0, 0)))
     nb_pad = NB + pad
     grid = (nb_pad // TB,)
     W = FB // 32
 
+    in_specs = [
+        pl.BlockSpec((x.shape[0],), lambda i: (0,)),       # x stays resident
+        pl.BlockSpec((TB, FB), lambda i: (i, 0)),           # edge tile stream
+        pl.BlockSpec((TB, FB), lambda i: (i, 0)),
+        pl.BlockSpec((TB, W), lambda i: (i, 0)),
+    ]
+    operands = [x, block_dst, block_w, bits]
+    if edge_active is not None:
+        in_specs.append(pl.BlockSpec((TB, W), lambda i: (i, 0)))
+        operands.append(edge_active)
+
     out = pl.pallas_call(
-        functools.partial(_kernel, n=n),
+        functools.partial(_kernel, n=n, has_active=edge_active is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((x.shape[0],), lambda i: (0,)),       # x stays resident
-            pl.BlockSpec((TB, FB), lambda i: (i, 0)),           # edge tile stream
-            pl.BlockSpec((TB, FB), lambda i: (i, 0)),
-            pl.BlockSpec((TB, W), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((TB,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((nb_pad,), x.dtype),
         interpret=interpret,
-    )(x, block_dst, block_w, bits)
+    )(*operands)
     return out[:NB]

@@ -5,15 +5,30 @@ import jax
 import jax.numpy as jnp
 
 from ...core.csr import CSRGraph
-from ...core.graph_filter import GraphFilter
+from ...core.graph_filter import GraphFilter, edge_active_words
 from .edge_block_spmv import edge_block_spmv_pallas
 
 
 def edge_block_spmv(
-    x, block_dst, block_w, bits, *, n: int, interpret: bool = True, tile_blocks: int = 8
+    x,
+    block_dst,
+    block_w,
+    bits,
+    edge_active=None,
+    *,
+    n: int,
+    interpret: bool = True,
+    tile_blocks: int = 8,
 ):
     return edge_block_spmv_pallas(
-        x, block_dst, block_w, bits, n=n, interpret=interpret, tile_blocks=tile_blocks
+        x,
+        block_dst,
+        block_w,
+        bits,
+        edge_active,
+        n=n,
+        interpret=interpret,
+        tile_blocks=tile_blocks,
     )
 
 
@@ -22,13 +37,16 @@ def spmv_vertex(
     x: jnp.ndarray,
     f: GraphFilter | None = None,
     *,
+    edge_active=None,
     interpret: bool = True,
     tile_blocks: int = 8,
 ) -> jnp.ndarray:
     """out[v] = Σ_{(v,u) active} w_vu · x[u] — PageRank/GNN aggregation step.
 
     Uses the Pallas kernel for the gather-heavy per-block sums, then a cheap
-    O(#blocks) segment reduction by block owner.
+    O(#blocks) segment reduction by block owner.  ``edge_active`` is the
+    per-call traversal mask (GraphFilter | packed uint32 words | bool slot
+    mask); it streams into the kernel as a second packed bitmask tile.
     """
     if f is not None:
         bits = f.bits
@@ -37,11 +55,17 @@ def spmv_vertex(
         from ...core.graph_filter import make_filter
 
         bits = make_filter(g).bits
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, g.block_size)
+    )
     per_block = edge_block_spmv_pallas(
         x,
         g.block_dst,
         g.block_w,
         bits,
+        active,
         n=g.n,
         interpret=interpret,
         tile_blocks=tile_blocks,

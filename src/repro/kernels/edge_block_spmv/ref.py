@@ -4,13 +4,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.graph_filter import unpack_word_bits
 
-def edge_block_spmv_ref(x, block_dst, block_w, bits, *, n: int):
-    """Per-block partial sums, computed with plain jnp ops."""
+
+def edge_block_spmv_ref(x, block_dst, block_w, bits, edge_active=None, *, n: int):
+    """Per-block partial sums, computed with plain jnp ops.
+
+    ``edge_active``: optional packed uint32 (NB, F_B/32) traversal mask,
+    ANDed with the graphFilter ``bits`` exactly as the kernel does."""
     NB, FB = block_dst.shape
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    act = ((bits[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)) != 0
-    act = act.reshape(NB, FB)
+    act = unpack_word_bits(bits)
+    if edge_active is not None:
+        act = act & unpack_word_bits(edge_active)
     mask = (block_dst < jnp.int32(n)) & act
     safe = jnp.where(mask, block_dst, 0)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(NB, FB)
@@ -18,6 +23,6 @@ def edge_block_spmv_ref(x, block_dst, block_w, bits, *, n: int):
     return jnp.sum(contrib, axis=1)
 
 
-def spmv_vertex_ref(x, block_dst, block_w, bits, block_src, *, n: int):
-    per_block = edge_block_spmv_ref(x, block_dst, block_w, bits, n=n)
+def spmv_vertex_ref(x, block_dst, block_w, bits, block_src, edge_active=None, *, n: int):
+    per_block = edge_block_spmv_ref(x, block_dst, block_w, bits, edge_active, n=n)
     return jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]

@@ -157,6 +157,28 @@ def test_pagerank(name, g):
     )
 
 
+def test_wbfs_distances_past_bucket_clamp():
+    """Bucket ids clamp at NULL_BUCKET-1 (2^30), but distances keep exact
+    Dijkstra semantics past that: the body settles only the true minimum
+    among the clamped bucket's members."""
+    import numpy as np
+
+    from repro.core import build_csr
+
+    n = 10  # path graph, weights 2^27: dist crosses 2^30 at hop 8
+    g = build_csr(
+        n,
+        np.arange(n - 1),
+        np.arange(1, n),
+        np.full(n - 1, float(1 << 27), np.float32),
+        block_size=32,
+    )
+    d = np.asarray(wbfs(g, 0)).astype(np.int64)
+    want = np.arange(n, dtype=np.int64) * (1 << 27)
+    assert want[-1] > 2**30
+    np.testing.assert_array_equal(d, want)
+
+
 def test_bellman_ford_negative_cycle():
     import numpy as np
 

@@ -5,9 +5,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import make_filter, pack_vertices
+from repro.core import compress, edge_active_words, make_filter, pack_vertices
 from repro.data import rmat_graph
-from repro.kernels import embedding_bag, filter_pack, spmv_vertex
+from repro.kernels import (
+    compressed_spmv_vertex,
+    embedding_bag,
+    filter_pack,
+    spmv_vertex,
+)
+from repro.kernels.compressed_spmv.compressed_spmv import compressed_block_spmv_pallas
+from repro.kernels.compressed_spmv.ref import (
+    compressed_block_spmv_ref,
+    compressed_spmv_vertex_ref,
+)
 from repro.kernels.edge_block_spmv.edge_block_spmv import edge_block_spmv_pallas
 from repro.kernels.edge_block_spmv.ref import edge_block_spmv_ref, spmv_vertex_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
@@ -29,6 +39,99 @@ def test_edge_block_spmv_sweep(n, m, bs, dtype, tile):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
     )
+
+
+@pytest.mark.parametrize("n,m,bs,tile", [(32, 96, 32, 2), (64, 256, 32, 8)])
+def test_edge_block_spmv_edge_active_operand(n, m, bs, tile):
+    """The packed edge_active operand is ANDed into the validity mask
+    in-kernel — parity with the oracle and with pre-ANDed filter bits."""
+    g = rmat_graph(n, m, weighted=True, seed=m, block_size=bs)
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(2), (g.n,), jnp.float32)
+    keep = jax.random.bernoulli(jax.random.PRNGKey(3), 0.6, (g.num_blocks * bs,))
+    aw = edge_active_words(keep, bs)
+    got = edge_block_spmv_pallas(
+        x, g.block_dst, g.block_w, f.bits, aw, n=g.n, tile_blocks=tile
+    )
+    want = edge_block_spmv_ref(x, g.block_dst, g.block_w, f.bits, aw, n=g.n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # streaming two masks ≡ one pre-ANDed mask (the HBM-round-trip variant)
+    pre = edge_block_spmv_pallas(
+        x, g.block_dst, g.block_w, f.bits & aw, n=g.n, tile_blocks=tile
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pre), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,m,bs,tile", [(32, 96, 32, 2), (64, 256, 32, 8)])
+def test_compressed_spmv_edge_active_operand(n, m, bs, tile):
+    """The compressed kernel consumes the packed bitmask in-kernel, fused
+    with the delta decode — parity with the exact-decode oracle, weighted
+    and unweighted."""
+    for weighted in [False, True]:
+        g = rmat_graph(n, m, weighted=weighted, seed=n + m, block_size=bs)
+        c = compress(g)
+        f = make_filter(g)
+        x = jax.random.normal(jax.random.PRNGKey(4), (g.n,), jnp.float32)
+        keep = jax.random.bernoulli(jax.random.PRNGKey(5), 0.5, (c.num_blocks * bs,))
+        aw = edge_active_words(keep, bs)
+        got = compressed_block_spmv_pallas(
+            x, c.block_first, c.deltas, c.valid_count, f.bits, aw,
+            c.block_weights, n=c.n, tile_blocks=tile,
+        )
+        want = compressed_block_spmv_ref(c, x, f.bits, c.block_weights, aw)
+        if c.n_exceptions:  # escaped blocks decode wrong pre-fixup by design
+            rows = np.setdiff1d(np.arange(c.num_blocks), np.asarray(c.exc_block))
+        else:
+            rows = np.arange(c.num_blocks)
+        np.testing.assert_allclose(
+            np.asarray(got)[rows], np.asarray(want)[rows], rtol=1e-5, atol=1e-5
+        )
+
+
+def test_compressed_filtered_fast_path_no_full_decode(monkeypatch):
+    """A filtered edgeMap on a compressed graph with a sparse exception list
+    must stay on the fused kernel path: the exact-decode fallback is a
+    function of exception density only, never of the filter.  The oracle is
+    stubbed to fail, so any full-decode fallback would raise."""
+    import test_compressed as tc
+
+    import repro.kernels.compressed_spmv.ops as ops
+    from repro.core.compressed import exception_dense
+
+    g = tc.wide_delta_graph(weighted=True)
+    c = compress(g)
+    assert c.n_exceptions > 0 and not exception_dense(c)
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(6), (g.n,), jnp.float32)
+    keep = jax.random.bernoulli(
+        jax.random.PRNGKey(7), 0.7, (c.num_blocks * c.block_size,)
+    )
+    want = compressed_spmv_vertex_ref(
+        c, x, f.bits, c.block_weights, edge_active_words(keep, c.block_size)
+    )
+
+    def boom(*a, **k):
+        raise AssertionError("filtered fast path fell back to full decode")
+
+    monkeypatch.setattr(ops, "compressed_block_spmv_ref", boom)
+    got = compressed_spmv_vertex(c, x, f, edge_active=keep)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_vertex_edge_active_forms_agree():
+    """GraphFilter | packed words | bool slot mask are one representation:
+    spmv_vertex accepts each and returns identical sums."""
+    g = rmat_graph(64, 256, weighted=True, seed=13, block_size=32)
+    f = make_filter(g)
+    x = jax.random.normal(jax.random.PRNGKey(8), (g.n,), jnp.float32)
+    keep = g.edge_valid & (g.edge_dst % 3 != 0)
+    aw = edge_active_words(keep, g.block_size)
+    f2 = pack_vertices(g, f, jnp.ones(g.n, bool), keep)
+    a = spmv_vertex(g, x, f, edge_active=keep)
+    b = spmv_vertex(g, x, f, edge_active=aw)
+    d = spmv_vertex(g, x, f, edge_active=f2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(d), rtol=1e-6)
 
 
 def test_spmv_vertex_matches_ref_and_filter():
