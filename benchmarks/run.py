@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
   table5_edgemap— Table 5: edgeMap variant ↔ peak intermediate memory
   table_compression — §5.1.3: compression ratio + compressed edgeMap throughput
   table_distributed — planner: per-shard PageRank throughput, compressed vs raw
+  table_serving — QueryEngine: queries/sec vs batch size B, both backends,
+                  + PSAM edge-read amortization at B=8
   fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
   kernels_micro — Pallas kernels vs jnp oracles
   roofline      — §Roofline terms from the dry-run artifacts (if present)
@@ -26,7 +28,7 @@ def main() -> None:
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
                    table4_filter, table5_edgemap, table_compression,
-                   table_distributed)
+                   table_distributed, table_serving)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -50,6 +52,10 @@ def main() -> None:
         "table_distributed": lambda: table_distributed.run(
             n=(1 << 20) if args.full else 4096,
             m=(1 << 22) if args.full else 16384,
+        ),
+        # queries/sec vs batch size through the QueryEngine (both backends)
+        "table_serving": lambda: table_serving.run(
+            n=4096 if args.full else 1024, m=32768 if args.full else 8192
         ),
         "kernels_micro": kernels_micro.run,
         "fig_layout": fig_layout.run,

@@ -8,10 +8,18 @@ from .decomposition import (
     spanner,
     spanning_forest,
 )
-from .eigen import pagerank, pagerank_iteration
-from .local import personalized_pagerank
+from .eigen import pagerank, pagerank_iteration, pagerank_iteration_batched
+from .local import personalized_pagerank, personalized_pagerank_batched
 from .substructure import densest_subgraph, kcore, orientation_filter, triangle_count
-from .traversal import bellman_ford, betweenness, bfs, wbfs, widest_path
+from .traversal import (
+    bellman_ford,
+    betweenness,
+    bfs,
+    bfs_batched,
+    wbfs,
+    wbfs_batched,
+    widest_path,
+)
 
 ALL_PROBLEMS = [
     "bfs",
@@ -36,7 +44,11 @@ ALL_PROBLEMS = [
 
 __all__ = ALL_PROBLEMS + [
     "personalized_pagerank",
+    "personalized_pagerank_batched",
     "pagerank_iteration",
+    "pagerank_iteration_batched",
+    "bfs_batched",
+    "wbfs_batched",
     "multi_source_bfs",
     "orientation_filter",
     "ALL_PROBLEMS",

@@ -136,33 +136,18 @@ def multi_source_bfs(
     g: GraphLike, roots_mask: jnp.ndarray, *, mode: str = "auto", plan=None
 ):
     """BFS forest from all roots at once.  Returns (parents, levels);
-    parents[root]=root."""
-    n = g.n
-    if plan is not None:
-        g = plan.prepare(g)
-    ids = jnp.arange(n, dtype=jnp.int32)
-    parents0 = jnp.where(roots_mask, ids, UNVISITED)
-    levels0 = jnp.where(roots_mask, 0, UNVISITED)
-    frontier0 = roots_mask
+    parents[root]=root.
 
-    def body(state):
-        rnd, parents, levels, frontier = state
-        cand, touched = edgemap_reduce(
-            g, frontier, ids, monoid="min", mode=mode, plan=plan
-        )
-        newly = touched & (parents == UNVISITED)
-        parents = jnp.where(newly, cand, parents)
-        levels = jnp.where(newly, rnd + 1, levels)
-        return rnd + 1, parents, levels, newly
+    This is the B=1 row of the batched BFS: one root *mask* is one query of
+    ``bfs_batched`` (``repro.algorithms.traversal``), which runs the shared
+    lockstep loop over the batched edgeMap — the bespoke loop this function
+    used to carry is gone, so the forest case and the serving path exercise
+    the same machinery.
+    """
+    from .traversal import bfs_batched
 
-    def cond(state):
-        rnd, _, _, frontier = state
-        return jnp.any(frontier) & (rnd < n)
-
-    _, parents, levels, _ = lax.while_loop(
-        cond, body, (jnp.int32(0), parents0, levels0, frontier0)
-    )
-    return parents, levels
+    parents, levels = bfs_batched(g, roots_mask[None, :], mode=mode, plan=plan)
+    return parents[0], levels[0]
 
 
 def spanning_forest(g: GraphLike, key: jax.Array | None = None):

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.backend import GraphLike
-from ..core.edgemap import edgemap_reduce
+from ..core.edgemap import edgemap_reduce, edgemap_reduce_batched
 
 
 def pagerank(
@@ -72,3 +72,32 @@ def pagerank_iteration(g: GraphLike, pr: jnp.ndarray, *, damping: float = 0.85, 
     )
     dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
     return (1.0 - damping) / n + damping * (s + dangling_mass / n)
+
+
+def pagerank_iteration_batched(
+    g: GraphLike, prs: jnp.ndarray, *, damping: float = 0.85, plan=None
+):
+    """B PageRank iterations over B score vectors in one dense edge sweep.
+
+    ``prs`` is float32[B, n] (one tentative PageRank vector per query);
+    returns float32[B, n].  The batch shares a single dense sum-monoid
+    edgeMap — the whole-graph block stream is read once — and each row is
+    bit-identical to ``pagerank_iteration`` on that row alone (same plan).
+    """
+    n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
+    B = prs.shape[0]
+    deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
+    dangling = g.degrees == 0
+    contrib = jnp.where(dangling[None, :], 0.0, prs / deg[None, :])
+    s, _ = edgemap_reduce_batched(
+        g,
+        jnp.ones((B, n), dtype=bool),
+        contrib,
+        monoid="sum",
+        mode="dense",
+        plan=plan,
+    )
+    dangling_mass = jnp.sum(jnp.where(dangling[None, :], prs, 0.0), axis=1)
+    return (1.0 - damping) / n + damping * (s + dangling_mass[:, None] / n)

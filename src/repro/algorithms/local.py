@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.backend import GraphLike
-from ..core.edgemap import edgemap_reduce
+from ..core.edgemap import edgemap_reduce, edgemap_reduce_batched
 
 
 def personalized_pagerank(
@@ -27,12 +27,17 @@ def personalized_pagerank(
     eps: float = 1e-6,
     max_rounds: int = 200,
     mode: str = "auto",
+    plan=None,
 ):
     """Returns (p float32[n], residual float32[n], rounds int32).
 
     Guarantee (ACL): |p[v] − π(v)| ≤ ε·deg(v) at termination.
+    ``plan`` routes each push round through the planner dispatch — the same
+    loop runs single-device or sharded over a mesh, compressed or raw.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
     p0 = jnp.zeros(n, jnp.float32)
     r0 = jnp.zeros(n, jnp.float32).at[src].set(1.0)
@@ -44,7 +49,7 @@ def personalized_pagerank(
         p = p + alpha * pushed
         # spread (1-α)·pushed/deg along out-edges
         contrib = jnp.where(active, (1.0 - alpha) * pushed / deg, 0.0)
-        s, _ = edgemap_reduce(g, active, contrib, monoid="sum", mode=mode)
+        s, _ = edgemap_reduce(g, active, contrib, monoid="sum", mode=mode, plan=plan)
         r = jnp.where(active, 0.0, r) + s
         return p, r, rounds + 1
 
@@ -53,6 +58,62 @@ def personalized_pagerank(
         return jnp.any(r >= eps * deg) & (rounds < max_rounds)
 
     p, r, rounds = lax.while_loop(cond, body, (p0, r0, jnp.int32(0)))
+    return p, r, rounds
+
+
+def personalized_pagerank_batched(
+    g: GraphLike,
+    sources,
+    *,
+    alpha: float = 0.15,
+    eps: float = 1e-6,
+    max_rounds: int = 200,
+    mode: str = "auto",
+    plan=None,
+):
+    """B concurrent PPR queries through one shared push sweep per round.
+
+    ``sources`` is int[B]; returns (p float32[B, n], residual float32[B, n],
+    rounds int32[B]).  Each round pushes every query's above-threshold
+    residual mass through ONE batched edgeMap — the edge-block stream is
+    read once for the whole batch.  A query that has converged (or hit
+    ``max_rounds``) is gated out of the frontier, so its rows freeze and
+    its per-query ``rounds`` counter stops: every row is bit-identical to
+    the corresponding single-query ``personalized_pagerank`` run on the
+    same plan.
+    """
+    n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
+    srcs = jnp.asarray(sources, jnp.int32)
+    B = srcs.shape[0]
+    deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    p0 = jnp.zeros((B, n), jnp.float32)
+    r0 = jnp.where(ids[None, :] == srcs[:, None], 1.0, 0.0).astype(jnp.float32)
+
+    def body(state):
+        p, r, rounds = state
+        # per-query run gate: mirrors the single-query loop condition, so a
+        # converged or capped query executes "no body" from here on
+        run = jnp.any(r >= eps * deg[None, :], axis=1) & (rounds < max_rounds)
+        active = (r >= eps * deg[None, :]) & run[:, None]
+        pushed = jnp.where(active, r, 0.0)
+        p = p + alpha * pushed
+        contrib = jnp.where(active, (1.0 - alpha) * pushed / deg[None, :], 0.0)
+        s, _ = edgemap_reduce_batched(
+            g, active, contrib, monoid="sum", mode=mode, plan=plan
+        )
+        r = jnp.where(active, 0.0, r) + s
+        return p, r, rounds + run.astype(jnp.int32)
+
+    def cond(state):
+        _, r, rounds = state
+        return jnp.any(
+            jnp.any(r >= eps * deg[None, :], axis=1) & (rounds < max_rounds)
+        )
+
+    p, r, rounds = lax.while_loop(cond, body, (p0, r0, jnp.zeros(B, jnp.int32)))
     return p, r, rounds
 
 

@@ -6,6 +6,14 @@ state is strictly O(n) words.  CAS-based ``updateAtomic`` from the paper's
 BFS (Fig. 4) becomes an idempotent min-reduction over candidate parents —
 any in-frontier parent is a valid BFS-tree parent, so priority-min is a
 legal determinization.
+
+``bfs_batched`` / ``wbfs_batched`` are the serving-path entry points: B
+concurrent queries advance in lockstep through ONE batched edgeMap per
+round (``edgemap_reduce_batched``), so the NVRAM edge sweep is shared by
+the whole batch.  Finished queries' state is inert in later rounds (empty
+frontiers touch nothing; capped/settled rows are gated), which makes every
+query's result bit-identical to its own single-query run — the parity
+contract the serving test suite locks in.  Mutable state is O(B·n) words.
 """
 from __future__ import annotations
 
@@ -14,10 +22,33 @@ from jax import lax
 
 from ..core.backend import GraphLike
 from ..core.bucketing import NULL_BUCKET, make_buckets
-from ..core.edgemap import edgemap_reduce
+from ..core.edgemap import edgemap_reduce, edgemap_reduce_batched
 
 INF_I32 = jnp.int32(2**31 - 1)
 UNVISITED = jnp.int32(-1)
+
+
+def _root_masks(n: int, sources) -> jnp.ndarray:
+    """Normalize (B,) int sources or (B, n) root masks to bool[B, n].
+
+    Dispatch is by RANK, never dtype: a 2-D array is always per-query root
+    masks (any truthy dtype, like the old multi_source_bfs accepted), a 1-D
+    non-bool array is always source ids — so an int 0/1 mask can never be
+    misread as vertex ids."""
+    roots = jnp.asarray(sources)
+    if roots.ndim == 2:
+        if roots.shape[1] != n:
+            raise ValueError(f"root masks must be (B, {n}), got {roots.shape}")
+        return roots.astype(bool)
+    if roots.ndim == 1 and roots.dtype != jnp.bool_:
+        return (
+            jnp.arange(n, dtype=jnp.int32)[None, :]
+            == roots.astype(jnp.int32)[:, None]
+        )
+    raise ValueError(
+        f"sources must be int[B] vertex ids or (B, {n}) root masks, got "
+        f"{roots.dtype}{list(roots.shape)}"
+    )
 
 
 def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
@@ -53,6 +84,52 @@ def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
 
     _, parents, levels, _ = lax.while_loop(
         cond, body, (jnp.int32(0), parents0, levels0, frontier0)
+    )
+    return parents, levels
+
+
+def bfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
+    """B concurrent BFS queries through one shared edge sweep per round.
+
+    ``sources`` is either int[B] source vertices or bool[B, n] per-query
+    root masks (a row with several roots runs that query as a BFS forest —
+    ``multi_source_bfs`` is the B=1 case).  Returns (parents int32[B, n],
+    levels int32[B, n]), each row bit-identical to the corresponding
+    single-query ``bfs`` / ``multi_source_bfs`` run on the same plan: the
+    lockstep loop runs until the last query's frontier drains, and a
+    drained query's empty frontier touches nothing, so its rows are frozen.
+
+    PSAM: the per-round edge-block reads are paid once for the whole batch
+    (``PSAMCost.charge_edgemap_batched``); mutable state is O(B·n) words.
+    ``plan`` routes every round through the planner dispatch — the same
+    loop serves single-device or sharded, compressed or raw.
+    """
+    n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
+    roots = _root_masks(n, sources)
+    B = roots.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    idsb = jnp.broadcast_to(ids, (B, n))
+    parents0 = jnp.where(roots, idsb, UNVISITED)
+    levels0 = jnp.where(roots, 0, UNVISITED)
+
+    def body(state):
+        rnd, parents, levels, frontier = state
+        cand, touched = edgemap_reduce_batched(
+            g, frontier, idsb, monoid="min", mode=mode, plan=plan
+        )
+        newly = touched & (parents == UNVISITED)
+        parents = jnp.where(newly, cand, parents)
+        levels = jnp.where(newly, rnd + 1, levels)
+        return rnd + 1, parents, levels, newly
+
+    def cond(state):
+        rnd, _, _, frontier = state
+        return jnp.any(frontier) & (rnd < n)
+
+    _, parents, levels, _ = lax.while_loop(
+        cond, body, (jnp.int32(0), parents0, levels0, roots)
     )
     return parents, levels
 
@@ -117,6 +194,63 @@ def wbfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     return dist
 
 
+def wbfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
+    """B concurrent wBFS (bucketed Dijkstra) queries, one edge sweep each
+    round.  ``sources`` is int[B]; returns dist int32[B, n].
+
+    Each row runs the exact single-query ``wbfs`` recurrence — per-row
+    bucket extraction is a row-wise min — gated by a per-query ``run`` flag
+    so a query whose buckets have drained stops mutating its row while the
+    rest of the batch finishes (the bucket-of-the-done-row degenerates to
+    NULL for every vertex, which ungated would re-frontier its unreachable
+    vertices).  Bit-identical per query to ``wbfs`` on the same plan; the
+    weighted relaxations stream one weight tile per round for the whole
+    batch.
+    """
+    n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
+    srcs = jnp.asarray(sources, jnp.int32)
+    B = srcs.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    dist0 = jnp.where(ids[None, :] == srcs[:, None], 0, INF_I32)
+    settled0 = jnp.zeros((B, n), dtype=bool)
+
+    def relax(xs, w):
+        wi = w.astype(jnp.int32)
+        return jnp.where(xs >= INF_I32 - jnp.int32(1 << 24), INF_I32, xs + wi)
+
+    def bucket_of(dist, settled):
+        return jnp.where(
+            settled | (dist == INF_I32),
+            NULL_BUCKET,
+            jnp.minimum(dist, NULL_BUCKET - 1),
+        )
+
+    def body(state):
+        dist, settled = state
+        bo = bucket_of(dist, settled)
+        bid = jnp.min(bo, axis=1)              # per-query next bucket
+        run = bid < NULL_BUCKET                # queries with work left
+        members = (bo == bid[:, None]) & ~settled & run[:, None]
+        d = jnp.min(jnp.where(members, dist, INF_I32), axis=1)
+        frontier = members & (dist == d[:, None])
+        settled = settled | frontier
+        cand, touched = edgemap_reduce_batched(
+            g, frontier, dist, monoid="min", map_fn=relax, mode=mode, plan=plan
+        )
+        improve = touched & ~settled & (cand < dist)
+        dist = jnp.where(improve, cand, dist)
+        return dist, settled
+
+    def cond(state):
+        dist, settled = state
+        return jnp.any(bucket_of(dist, settled) < NULL_BUCKET)
+
+    dist, _ = lax.while_loop(cond, body, (dist0, settled0))
+    return dist
+
+
 def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """General-weight SSSP.  Returns (dist float32[n], has_neg_cycle bool).
 
@@ -172,12 +306,16 @@ def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     return dist, has_neg_cycle
 
 
-def widest_path(g: GraphLike, src: int, *, mode: str = "auto"):
+def widest_path(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """Single-source widest path (max-min path semiring), Bellman-Ford style.
 
     Returns width float32[n]; -inf for unreachable, +inf for the source.
+    ``plan`` routes the max-monoid relaxations through the planner dispatch
+    — single-device or sharded mesh, compressed or raw.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     src = jnp.asarray(src, jnp.int32)
     width0 = jnp.full(n, -jnp.inf, jnp.float32).at[src].set(jnp.inf)
     frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
@@ -188,7 +326,7 @@ def widest_path(g: GraphLike, src: int, *, mode: str = "auto"):
     def body(state):
         rnd, width, frontier = state
         cand, touched = edgemap_reduce(
-            g, frontier, width, monoid="max", map_fn=bottleneck, mode=mode
+            g, frontier, width, monoid="max", map_fn=bottleneck, mode=mode, plan=plan
         )
         improve = touched & (cand > width)
         width = jnp.where(improve, cand, width)
@@ -202,15 +340,18 @@ def widest_path(g: GraphLike, src: int, *, mode: str = "auto"):
     return width
 
 
-def betweenness(g: GraphLike, src: int, *, mode: str = "auto"):
+def betweenness(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """Single-source betweenness centrality (Brandes forward/backward).
 
     Returns delta float32[n] — the dependency scores from src.
     Forward: level-synchronous sigma accumulation (edgeMapChunked, sum
     monoid).  Backward: levels replayed in reverse.  O(n) words of state:
-    levels, sigma, delta.
+    levels, sigma, delta.  ``plan`` routes both passes' sum-monoid edgeMaps
+    through the planner dispatch — single-device or sharded, either backend.
     """
     n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
     src = jnp.asarray(src, jnp.int32)
     level0 = jnp.full(n, UNVISITED).at[src].set(0)
     sigma0 = jnp.zeros(n, jnp.float32).at[src].set(1.0)
@@ -218,7 +359,9 @@ def betweenness(g: GraphLike, src: int, *, mode: str = "auto"):
 
     def fwd_body(state):
         lvl, level, sigma, frontier = state
-        cand, touched = edgemap_reduce(g, frontier, sigma, monoid="sum", mode=mode)
+        cand, touched = edgemap_reduce(
+            g, frontier, sigma, monoid="sum", mode=mode, plan=plan
+        )
         newly = touched & (level == UNVISITED)
         sigma = jnp.where(newly, cand, sigma)
         level = jnp.where(newly, lvl + 1, level)
@@ -239,7 +382,7 @@ def betweenness(g: GraphLike, src: int, *, mode: str = "auto"):
         upper = level == lvl  # vertices one level deeper
         y = jnp.where(sigma > 0, (1.0 + delta) / jnp.maximum(sigma, 1e-30), 0.0)
         y = jnp.where(upper, y, 0.0)
-        s, _ = edgemap_reduce(g, upper, y, monoid="sum", mode=mode)
+        s, _ = edgemap_reduce(g, upper, y, monoid="sum", mode=mode, plan=plan)
         delta = jnp.where(level == lvl - 1, sigma * s, delta)
         return lvl - 1, delta
 

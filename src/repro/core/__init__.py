@@ -23,7 +23,15 @@ from .compressed import (
     edgemap_sum_compressed,
 )
 from .csr import DEFAULT_BLOCK_SIZE, CSRGraph, build_csr, graph_spec
-from .edgemap import edge_map, edgemap_chunked, edgemap_dense, edgemap_reduce
+from .edgemap import (
+    edge_map,
+    edge_map_batched,
+    edgemap_chunked,
+    edgemap_dense,
+    edgemap_dense_batched,
+    edgemap_reduce,
+    edgemap_reduce_batched,
+)
 from .graph_filter import (
     GraphFilter,
     edge_active_flat,
@@ -44,6 +52,7 @@ from .plan import (
     make_plan,
     shard_edge_active,
     sharded_edgemap_reduce,
+    sharded_edgemap_reduce_batched,
     sharded_graph_spec,
 )
 from .psam import PSAMCost
@@ -77,9 +86,13 @@ __all__ = [
     "full",
     "empty",
     "edge_map",
+    "edge_map_batched",
     "edgemap_reduce",
+    "edgemap_reduce_batched",
     "edgemap_dense",
+    "edgemap_dense_batched",
     "edgemap_chunked",
+    "sharded_edgemap_reduce_batched",
     "GraphFilter",
     "make_filter",
     "pack_vertices",

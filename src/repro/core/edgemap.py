@@ -25,6 +25,11 @@ see ``repro.core.backend``): the dense pass reads the backend's block view
 (a lazy, fused cumsum decode for compressed graphs) and the chunked pass
 decodes block tiles *inside* the chunk loop, so the peak intermediate stays
 ``chunk_blocks × F_B`` words regardless of storage format.
+
+``edgemap_reduce_batched`` / ``edge_map_batched`` run B concurrent queries
+through ONE sweep of the same bodies: the edge stream is read once per
+round and fanned across the B frontier/state columns, the throughput lever
+the serving subsystem (``repro.serving``) is built on.
 """
 from __future__ import annotations
 
@@ -263,6 +268,205 @@ def edgemap_reduce(
             chunk_blocks=chunk_blocks,
         ),
     )
+
+
+def edgemap_dense_batched(
+    g: GraphLike,
+    frontier_masks: jnp.ndarray,
+    xb: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn: Callable = _identity_map,
+    edge_active: jnp.ndarray | None = None,
+):
+    """Dense pull pass, B queries per sweep.  Returns (out[B,n], touched[B,n]).
+
+    The jnp analogue of the kernels' query-batch dimension: the edge-side
+    work — block view (the compressed backend's fused cumsum decode
+    included), validity/filter masks, and the scatter routing ``ids`` — is
+    computed ONCE, and the monoid reduction runs as a single
+    segment-reduce over m edge rows of B-wide value vectors, not B
+    separate scatters.  Per-lane inactive slots contribute the monoid
+    identity at their real target row (instead of the single-query path's
+    sentinel reroute), which reduces to the same value: every lane is
+    bit-identical to its own ``edgemap_dense`` run.
+    """
+    n, NB, FB = g.n, g.num_blocks, g.block_size
+    B = xb.shape[0]
+    ident = monoid_identity(monoid, xb.dtype)
+    block_dst, block_w = dense_block_view(g)        # shared: decoded once
+    edge_dst = block_dst.reshape(-1)
+    valid = edge_dst < jnp.int32(n)
+    ids = jnp.where(valid, edge_dst, jnp.int32(n))  # shared scatter routing
+    ea = _edge_active_view(g, edge_active)
+    if ea is not None:
+        valid = valid & ea.reshape(-1)
+    frontier_blk = jnp.take(
+        frontier_masks, g.block_src, axis=1, mode="fill", fill_value=False
+    )                                               # (B, NB)
+    act = (frontier_blk[:, :, None] & valid.reshape(NB, FB)[None]).reshape(B, -1)
+    xs_blk = jnp.take(xb, g.block_src, axis=1, mode="fill", fill_value=ident)
+    xs = jnp.broadcast_to(xs_blk[:, :, None], (B, NB, FB)).reshape(B, -1)
+    vals = map_fn(xs, block_w.reshape(-1)[None, :])
+    vals = jnp.where(act, vals, ident)
+    out = segment_reduce(vals.T, ids, n + 1, monoid)[:n]          # (n, B)
+    touched = (
+        jax.ops.segment_max(act.T.astype(jnp.int32), ids, num_segments=n + 1)[:n]
+        > 0
+    )
+    return out.T, touched.T
+
+
+def edgemap_reduce_batched(
+    g: GraphLike,
+    frontier_masks: jnp.ndarray,
+    xb: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn: Callable = _identity_map,
+    edge_active: jnp.ndarray | None = None,
+    mode: str = "auto",
+    dense_frac: int | None = None,
+    chunk_blocks: int | None = None,
+    plan=None,
+):
+    """Batched edgeMap: B concurrent queries share ONE edge sweep.
+
+    ``frontier_masks`` is bool[B, n], ``xb`` is [B, n] (per-query vertex
+    state); returns ``(out[B, n], touched[B, n])``.  The edge blocks — the
+    scarce read-only NVRAM resource in the PSAM — are streamed once per
+    round and applied against all B state columns, so the edge-byte reads
+    amortize ÷B (``PSAMCost.charge_edgemap_batched``) while the mutable
+    state stays O(B·n) words of small memory.
+
+    Execution: the dense strategy runs ``edgemap_dense_batched`` — one
+    shared edge sweep, one m-row × B-column segment reduction.  The sparse
+    strategy vmaps ``edgemap_chunked`` (per-lane active-block lists differ;
+    the chunk loop masks finished lanes' carries).  ``auto`` evaluates the
+    per-lane Beamer predicate and selects per lane between the two
+    shared-sweep branches — exactly what a vmapped ``lax.cond`` lowers to.
+    Every query's result is bit-identical to its own single-query
+    ``edgemap_reduce`` run — the property the serving parity suite locks
+    in.
+
+    ``plan`` routes the batch exactly like ``edgemap_reduce``: a meshless
+    plan resolves the mode/chunking knobs here; a mesh plan runs the
+    batched local body per shard and monoid-combines the O(B·n) output
+    (``g`` must then be the plan-prepared ``ShardedGraph``).
+    """
+    if plan is not None:
+        if plan.is_sharded:
+            from .plan import sharded_edgemap_reduce_batched
+
+            return sharded_edgemap_reduce_batched(
+                plan,
+                g,
+                frontier_masks,
+                xb,
+                monoid=monoid,
+                map_fn=map_fn,
+                edge_active=edge_active,
+                mode=mode,
+                dense_frac=dense_frac,
+                chunk_blocks=chunk_blocks,
+            )
+        mode = plan.resolve_mode(mode)
+        dense_frac = plan.dense_frac if dense_frac is None else dense_frac
+        chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
+    dense_frac = 20 if dense_frac is None else dense_frac
+    chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
+    if xb.ndim != 2:
+        # feature-dim vertex state: fall back to the vmapped bodies
+        return jax.vmap(
+            lambda fm, xv: edgemap_reduce(
+                g, fm, xv, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+                mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+            )
+        )(frontier_masks, xb)
+    if mode == "dense":
+        return edgemap_dense_batched(
+            g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
+            edge_active=edge_active,
+        )
+
+    def sparse_one(fm, xv):
+        return edgemap_chunked(
+            g, fm, xv, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+            chunk_blocks=chunk_blocks,
+        )
+
+    if mode == "sparse":
+        return jax.vmap(sparse_one)(frontier_masks, xb)
+    # auto: per-lane Beamer predicate.  When the whole batch agrees (always
+    # true at B=1 — multi_source_bfs and the forest algorithms live there)
+    # run ONLY the agreed branch, like the single-query lax.cond; only a
+    # genuinely split batch pays both shared-sweep branches and selects per
+    # lane (what vmap(lax.cond) lowers to anyway).
+    sum_deg = jnp.sum(jnp.where(frontier_masks, g.degrees[None, :], 0), axis=1)
+    use_dense = sum_deg * dense_frac > g.m                         # (B,)
+
+    def dense_all():
+        return edgemap_dense_batched(
+            g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
+            edge_active=edge_active,
+        )
+
+    def sparse_all():
+        return jax.vmap(sparse_one)(frontier_masks, xb)
+
+    def split():
+        d_out, d_t = dense_all()
+        s_out, s_t = sparse_all()
+        out = jnp.where(use_dense[:, None], d_out, s_out)
+        touched = jnp.where(use_dense[:, None], d_t, s_t)
+        return out, touched
+
+    return lax.cond(
+        jnp.all(use_dense),
+        dense_all,
+        lambda: lax.cond(~jnp.any(use_dense), sparse_all, split),
+    )
+
+
+def edge_map_batched(
+    g: GraphLike,
+    frontier_masks: jnp.ndarray,
+    xb: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn: Callable = _identity_map,
+    cond_masks: jnp.ndarray | None = None,
+    update: str = "min",
+    edge_active: jnp.ndarray | None = None,
+    mode: str = "auto",
+    plan=None,
+):
+    """Batched Ligra-style EDGEMAP: returns (new_x[B, n], next_masks[B, n]).
+
+    The batched analogue of ``edge_map``, with bool masks in place of
+    ``VertexSubset`` (frontiers are per-query rows).  ``cond_masks[q, v]``
+    plays C(v) for query q; ``update`` merges per-query contributions
+    exactly as in ``edge_map``."""
+    out, touched = edgemap_reduce_batched(
+        g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
+        edge_active=edge_active, mode=mode, plan=plan,
+    )
+    ok = touched if cond_masks is None else (touched & cond_masks)
+    if update == "min":
+        new_x = jnp.where(ok, jnp.minimum(xb, out), xb)
+        changed = ok & (out < xb)
+    elif update == "max":
+        new_x = jnp.where(ok, jnp.maximum(xb, out), xb)
+        changed = ok & (out > xb)
+    elif update == "sum":
+        new_x = jnp.where(ok, xb + out, xb)
+        changed = ok
+    elif update == "replace":
+        new_x = jnp.where(ok, out, xb)
+        changed = ok
+    else:
+        raise ValueError(update)
+    return new_x, changed
 
 
 def edge_map(

@@ -26,6 +26,11 @@ only cross-shard traffic is the monoid combine of the O(n) output — never
 O(m) — which is the PSAM small-memory bound expressed as a communication
 bound (§5.2).
 
+Batched serving rides the same dispatch: ``sharded_edgemap_reduce_batched``
+runs B queries through each shard's one local edge sweep and combines the
+O(B·n) output — the ``QueryEngine`` (``repro.serving``) drains its batch
+buckets through this path unchanged, single-device or sharded.
+
 GraphFilter bits and per-call traversal masks (``edge_active``) are
 planner-native: the packed uint32 filter words are block-aligned, so they
 partition exactly like the edge blocks (``shard_edge_active`` — the same
@@ -345,17 +350,22 @@ def _combine_shards(plan: ExecutionPlan, out, touched, monoid: str, n: int, out_
     if plan.state_dtype is not None and monoid == "sum":
         out = out.astype(plan.state_dtype)
     if monoid == "sum" and plan.reduce_mode == "hierarchical" and len(axes) > 1:
-        if out.ndim != 1:
-            raise NotImplementedError("hierarchical reduce is 1-D only")
+        if out.ndim > 2:
+            raise NotImplementedError("hierarchical reduce: 1-D or (B, n) only")
+        # scatter/gather along the VERTEX dim (last axis) — a batched (B, n)
+        # output reduce-scatters each lane's row exactly like the 1-D path,
+        # so per-lane sums keep the single-query combine order bit for bit
+        dim = out.ndim - 1
         fast, slow = axes[-1], axes[:-1]
         k = plan.mesh.shape[fast]
-        pad = (-n) % k
+        pad = [(0, 0)] * out.ndim
+        pad[dim] = (0, (-n) % k)
         shard = lax.psum_scatter(
-            jnp.pad(out, (0, pad)), fast, scatter_dimension=0, tiled=True
+            jnp.pad(out, pad), fast, scatter_dimension=dim, tiled=True
         )
         for ax in slow:
             shard = lax.psum(shard, ax)
-        out = lax.all_gather(shard, fast, axis=0, tiled=True)[:n]
+        out = lax.all_gather(shard, fast, axis=dim, tiled=True)[..., :n]
     elif monoid == "sum":
         for ax in axes:
             out = lax.psum(out, ax)
@@ -380,35 +390,27 @@ def _combine_shards(plan: ExecutionPlan, out, touched, monoid: str, n: int, out_
     return out, t > 0
 
 
-def sharded_edgemap_reduce(
+def _sharded_edgemap_call(
     plan: ExecutionPlan,
     g,
-    frontier_mask: jnp.ndarray,
-    x: jnp.ndarray,
+    frontier,
+    x,
     *,
-    monoid: str = "min",
-    map_fn=None,
-    edge_active=None,
-    mode: str | None = None,
-    dense_frac: int | None = None,
-    chunk_blocks: int | None = None,
+    local_reduce,
+    monoid,
+    map_fn,
+    edge_active,
+    mode,
+    dense_frac,
+    chunk_blocks,
 ):
-    """Direction-optimized edgeMap over a mesh: per-shard local pass through
-    the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
-    monoid combine of the O(n) output.  ``g`` must be a ShardedGraph
-    (``plan.prepare``); frontier and vertex state are replicated.
+    """Shared shard/filter plumbing for both sharded executors.
 
-    ``edge_active`` runs plan-native: a ``ShardedEdgeActive`` (from
-    ``plan.prepare(g, edge_active=...)``) is consumed as-is; any raw form
-    (GraphFilter, packed uint32 words, bool slot mask over the global block
-    set) is partitioned in-trace by ``shard_edge_active``.  Each shard's
-    packed words ride the mesh at one bit per edge slot and unpack locally
-    inside the ``shard_map`` body, so the filtered path shares every line of
-    the unfiltered executor."""
-    # the executor reuses the single-device bodies; import here so edgemap.py
-    # can lazily import this module without a cycle
-    from .edgemap import edgemap_reduce
-
+    ``local_reduce`` is the per-shard body — ``edgemap_reduce`` for the
+    single-query executor, ``edgemap_reduce_batched`` for the serving path;
+    everything else (ShardedEdgeActive validation, in-trace filter-word
+    partitioning, shard_map wiring, the monoid combine) is identical and
+    lives here exactly once."""
     if not isinstance(g, ShardedGraph):
         g = plan.prepare(g)
     mode = plan.resolve_mode(mode)
@@ -441,7 +443,7 @@ def sharded_edgemap_reduce(
         if rest:
             # shard-local filter words → bool (blocks_per_shard, F_B) view
             kwargs["edge_active"] = unpack_word_bits(rest[0].words[0])
-        out, touched = edgemap_reduce(
+        out, touched = local_reduce(
             g_local,
             fm,
             xv,
@@ -454,7 +456,7 @@ def sharded_edgemap_reduce(
         return _combine_shards(plan, out, touched, monoid, n, out_dtype)
 
     in_specs = [P(plan.axes), P(), P()]
-    operands = [g, frontier_mask, x]
+    operands = [g, frontier, x]
     if active is not None:
         in_specs.append(P(plan.axes))
         operands.append(active)
@@ -468,3 +470,73 @@ def sharded_edgemap_reduce(
         check_rep=False,
     )
     return fn(*operands)
+
+
+def sharded_edgemap_reduce(
+    plan: ExecutionPlan,
+    g,
+    frontier_mask: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn=None,
+    edge_active=None,
+    mode: str | None = None,
+    dense_frac: int | None = None,
+    chunk_blocks: int | None = None,
+):
+    """Direction-optimized edgeMap over a mesh: per-shard local pass through
+    the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
+    monoid combine of the O(n) output.  ``g`` must be a ShardedGraph
+    (``plan.prepare``); frontier and vertex state are replicated.
+
+    ``edge_active`` runs plan-native: a ``ShardedEdgeActive`` (from
+    ``plan.prepare(g, edge_active=...)``) is consumed as-is; any raw form
+    (GraphFilter, packed uint32 words, bool slot mask over the global block
+    set) is partitioned in-trace by ``shard_edge_active``.  Each shard's
+    packed words ride the mesh at one bit per edge slot and unpack locally
+    inside the ``shard_map`` body, so the filtered path shares every line of
+    the unfiltered executor."""
+    # the executor reuses the single-device bodies; import here so edgemap.py
+    # can lazily import this module without a cycle
+    from .edgemap import edgemap_reduce
+
+    return _sharded_edgemap_call(
+        plan, g, frontier_mask, x,
+        local_reduce=edgemap_reduce,
+        monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+        mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+    )
+
+
+def sharded_edgemap_reduce_batched(
+    plan: ExecutionPlan,
+    g,
+    frontier_masks: jnp.ndarray,
+    xb: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn=None,
+    edge_active=None,
+    mode: str | None = None,
+    dense_frac: int | None = None,
+    chunk_blocks: int | None = None,
+):
+    """Batched edgeMap over a mesh: B queries share each shard's one local
+    edge sweep, then a single monoid combine moves the O(B·n) output.
+
+    The local body is the single-device ``edgemap_reduce_batched`` run on
+    the shard's block set (dense: one shared sweep, one m-row × B-column
+    segment reduce; sparse: vmapped chunk loops); frontier rows and vertex
+    state are replicated, only the edge blocks (and their packed filter
+    words) are partitioned — the same plumbing as the single-query executor
+    (``_sharded_edgemap_call``), so cross-shard traffic is O(B·n) words per
+    round, never O(m)."""
+    from .edgemap import edgemap_reduce_batched
+
+    return _sharded_edgemap_call(
+        plan, g, frontier_masks, xb,
+        local_reduce=edgemap_reduce_batched,
+        monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+        mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+    )

@@ -84,6 +84,37 @@ class PSAMCost:
         slots, the relaxed-PSAM O(n + m/64)-words filter state read once
         per round.
         """
+        self.charge_edgemap_batched(
+            g,
+            1,
+            num_shards=num_shards,
+            active_blocks=active_blocks,
+            filter_live_blocks=filter_live_blocks,
+        )
+
+    def charge_edgemap_batched(
+        self,
+        g,
+        batch: int,
+        num_shards: int = 1,
+        active_blocks=None,
+        filter_live_blocks=None,
+    ):
+        """One BATCHED edgeMap round serving ``batch`` concurrent queries.
+
+        This is the serving subsystem's amortization expressed in the PSAM:
+        the read-only edge blocks (large memory) are streamed exactly once
+        per round — the same charge as a single-query
+        ``charge_edgemap_planned`` round, independent of ``batch`` — while
+        the mutable vertex state costs O(batch·n) small-memory words (B
+        frontier/value columns per shard, plus the O(batch·n) cross-shard
+        combine).  Relative to ``batch`` sequential rounds the edge-byte
+        reads divide by ``batch``, which is the whole throughput lever of
+        ``repro.serving`` (cf. Graphyti/FlashGraph's shared sequential
+        scans).  ``active_blocks`` / ``filter_live_blocks`` behave exactly
+        as in ``charge_edgemap_planned`` (the batch shares one traversal
+        mask per round).
+        """
         _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
         blocks = padded_total if active_blocks is None else active_blocks
         if filter_live_blocks is not None:
@@ -97,8 +128,10 @@ class PSAMCost:
             # the filter words stream alongside the blocks they mask
             self.large_reads += padded_total * (g.block_size // 32)
         self.large_reads += _block_read_words(g, blocks)
-        # local O(n) state per shard + one O(n)-word combine per shard boundary
-        self.small_ops += 3 * g.n + (num_shards - 1) * g.n
+        # O(batch·n) local state per shard + one O(batch·n)-word combine per
+        # shard boundary — the DRAM side scales with the batch, the NVRAM
+        # side does not
+        self.small_ops += batch * (3 * g.n + (num_shards - 1) * g.n)
 
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,

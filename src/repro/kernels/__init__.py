@@ -5,17 +5,23 @@ Each kernel directory contains:
   ops.py    — jit'd public wrapper
   ref.py    — pure-jnp oracle (tests assert allclose against it)
 """
-from .compressed_spmv import compressed_block_spmv, compressed_spmv_vertex
+from .compressed_spmv import (
+    compressed_block_spmv,
+    compressed_spmv_vertex,
+    compressed_spmv_vertex_batched,
+)
 from .decode_attention import decode_attention
-from .edge_block_spmv import edge_block_spmv, spmv_vertex
+from .edge_block_spmv import edge_block_spmv, spmv_vertex, spmv_vertex_batched
 from .embedding_bag import embedding_bag
 from .filter_pack import filter_pack
 
 __all__ = [
     "edge_block_spmv",
     "spmv_vertex",
+    "spmv_vertex_batched",
     "compressed_block_spmv",
     "compressed_spmv_vertex",
+    "compressed_spmv_vertex_batched",
     "embedding_bag",
     "filter_pack",
     "decode_attention",

@@ -1,9 +1,14 @@
-from .ops import compressed_block_spmv, compressed_spmv_vertex
+from .ops import (
+    compressed_block_spmv,
+    compressed_spmv_vertex,
+    compressed_spmv_vertex_batched,
+)
 from .ref import compressed_block_spmv_ref, compressed_spmv_vertex_ref
 
 __all__ = [
     "compressed_block_spmv",
     "compressed_spmv_vertex",
+    "compressed_spmv_vertex_batched",
     "compressed_block_spmv_ref",
     "compressed_spmv_vertex_ref",
 ]

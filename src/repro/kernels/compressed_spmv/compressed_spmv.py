@@ -26,6 +26,15 @@ exception list inside a tiled kernel would serialize the pipeline.  The
 output; see ``compressed_spmv_vertex``.
 
 Grid: one program per tile of TB edge-blocks, mirroring edge_block_spmv.
+
+Query batching (the serving subsystem's amortization lever): ``x`` may carry
+a leading query dimension, ``(B, n_pad)``.  The compressed tile — first
+targets, uint16 deltas, valid counts, both packed bitmasks and the optional
+weight tile — is streamed into VMEM **once per grid step** and the fused
+delta decode runs once; only the gather and masked reduction fan out across
+the B vertex-state columns.  The compressed edge-byte reads (the scarce
+NVRAM resource) are thus paid once per sweep instead of once per query.
+Output grows a trailing query axis: ``(NB, B)``.
 """
 from __future__ import annotations
 
@@ -50,6 +59,7 @@ def _kernel(
     n: int,
     has_active: bool,
     has_weights: bool,
+    batched: bool,
 ):
     refs = list(rest)
     out_ref = refs.pop()
@@ -58,10 +68,11 @@ def _kernel(
     first = first_ref[...]        # (TB,)   int32 — first target per block
     deltas = deltas_ref[...]      # (TB, FB) uint16 — streamed compressed tile
     vc = vc_ref[...]              # (TB,)   int32 — valid (front-packed) slots
-    x = x_ref[...]                # (n_pad,) — PSAM small memory, VMEM-resident
+    x = x_ref[...]                # (n_pad,) or (B, n_pad) — PSAM small memory
     bits = bits_ref[...]          # (TB, FB//32) uint32 — graphFilter view
 
-    # fused decode: zero the unused lane-0 delta, cumsum along lanes
+    # fused decode: zero the unused lane-0 delta, cumsum along lanes.
+    # Decoded ONCE per tile regardless of the query-batch width.
     d = deltas.astype(jnp.int32)
     lane = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     d = jnp.where(lane == 0, 0, d)
@@ -74,6 +85,17 @@ def _kernel(
 
     mask = (lane < vc[:, None]) & act  # structural padding mask ∧ filter bits
     safe = jnp.where(mask & (dst < jnp.int32(n)), dst, 0)
+    if batched:
+        # one compressed tile, B query columns: gather fans the decoded
+        # targets across the batch; the delta stream was read exactly once
+        xv = jnp.take(x, safe.reshape(-1), axis=1).reshape(
+            x.shape[0], *safe.shape
+        )                         # (B, TB, FB)
+        if w_ref is not None:
+            xv = xv * w_ref[...][None]
+        contrib = jnp.where(mask[None], xv, jnp.zeros((), x.dtype))
+        out_ref[...] = jnp.sum(contrib, axis=2).T  # (TB, B)
+        return
     xv = x[safe]                  # gather from VMEM-resident vertex state
     if w_ref is not None:
         # weights don't delta-compress (§5.1.3): they stream uncompressed as
@@ -85,7 +107,7 @@ def _kernel(
 
 @functools.partial(jax.jit, static_argnames=("n", "tile_blocks", "interpret"))
 def compressed_block_spmv_pallas(
-    x: jnp.ndarray,            # (n_pad,) vertex values (padded to n+1 at least)
+    x: jnp.ndarray,            # (n_pad,) vertex values, or (B, n_pad) batch
     block_first: jnp.ndarray,  # (NB,) int32
     deltas: jnp.ndarray,       # (NB, FB) uint16
     valid_count: jnp.ndarray,  # (NB,) uint16/int32 — real slots per block
@@ -109,7 +131,12 @@ def compressed_block_spmv_pallas(
     program, aligned slot-for-slot with the decoded targets.  Blocks
     containing ESCAPE deltas decode wrong here and must be patched by the
     caller (ops.compressed_spmv_vertex does this).
+
+    Batched queries: ``x`` of shape (B, n_pad) returns (NB, B) — each grid
+    step streams the compressed tile and decodes it once, then applies it
+    to all B columns.
     """
+    batched = x.ndim == 2
     NB, FB = deltas.shape
     vc = valid_count.astype(jnp.int32)
     TB = min(tile_blocks, NB)
@@ -127,8 +154,13 @@ def compressed_block_spmv_pallas(
     grid = (nb_pad // TB,)
     W = FB // 32
 
+    x_spec = (
+        pl.BlockSpec(x.shape, lambda i: (0, 0))       # (B, n_pad) resident
+        if batched
+        else pl.BlockSpec((x.shape[0],), lambda i: (0,))  # x stays resident
+    )
     in_specs = [
-        pl.BlockSpec((x.shape[0],), lambda i: (0,)),  # x stays resident
+        x_spec,
         pl.BlockSpec((TB,), lambda i: (i,)),          # compressed stream:
         pl.BlockSpec((TB, FB), lambda i: (i, 0)),     #   first + deltas
         pl.BlockSpec((TB,), lambda i: (i,)),          #   + valid counts
@@ -142,17 +174,25 @@ def compressed_block_spmv_pallas(
         in_specs.append(pl.BlockSpec((TB, FB), lambda i: (i, 0)))
         operands.append(block_weights)
 
+    if batched:
+        out_specs = pl.BlockSpec((TB, x.shape[0]), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((nb_pad, x.shape[0]), x.dtype)
+    else:
+        out_specs = pl.BlockSpec((TB,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((nb_pad,), x.dtype)
+
     out = pl.pallas_call(
         functools.partial(
             _kernel,
             n=n,
             has_active=edge_active is not None,
             has_weights=block_weights is not None,
+            batched=batched,
         ),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((TB,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((nb_pad,), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
     return out[:NB]

@@ -54,6 +54,10 @@ def _exception_block_sums(c: CompressedCSR, x, bits, weights=None, active=None):
     ``active`` as the packed (NB, F_B/32) traversal mask: the exception rows
     gather their aligned weight/mask tiles by block id, so the fixup masks
     exactly what the kernel masked.
+
+    Batched queries (x of shape (B, n_pad)) return (NE, B): the exception
+    rows are decoded once and applied across the batch, matching the
+    kernel's amortization contract slot for slot.
     """
     ebids = c.exc_block
     dst = jax.vmap(lambda b: decode_block(c, b))(ebids)    # exact decode
@@ -62,6 +66,14 @@ def _exception_block_sums(c: CompressedCSR, x, bits, weights=None, active=None):
         act = act & unpack_word_bits(jnp.take(active, ebids, axis=0))
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
+    if x.ndim == 2:
+        xv = jnp.take(x, safe.reshape(-1), axis=1).reshape(
+            x.shape[0], *dst.shape
+        )                                                  # (B, NE, FB)
+        if weights is not None:
+            xv = xv * jnp.take(weights, ebids, axis=0)[None]
+        contrib = jnp.where(mask[None], xv, jnp.zeros((), x.dtype))
+        return jnp.sum(contrib, axis=2).T                  # (NE, B)
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
     if weights is not None:
         xv = xv * jnp.take(weights, ebids, axis=0)
@@ -132,3 +144,48 @@ def compressed_spmv_vertex(
             fixed = _exception_block_sums(c, x, bits, w, active)
             per_block = per_block.at[c.exc_block].set(fixed)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
+
+
+def compressed_spmv_vertex_batched(
+    c: CompressedCSR,
+    xb: jnp.ndarray,
+    f: GraphFilter | None = None,
+    *,
+    edge_active=None,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+) -> jnp.ndarray:
+    """Batched ``compressed_spmv_vertex``: ``xb`` is (B, n); returns (B, n).
+
+    One sweep of the compressed stream serves all B queries: each grid step
+    streams the delta tile (plus masks/weights) into VMEM and runs the fused
+    cumsum decode once, fanning only the gather across the B columns — the
+    compressed edge-byte reads amortize ÷B.  The ESCAPE-block fixup and the
+    exact-decode fallback are vectorized to match, so every query's result
+    is bit-identical to its own single-query run."""
+    bits = f.bits if f is not None else make_filter(c).bits
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, c.block_size)
+    )
+    w = c.block_weights if c.weighted else None
+    if exception_dense(c):
+        per_block = compressed_block_spmv_ref(c, xb, bits, w, active)  # (NB, B)
+    else:
+        per_block = compressed_block_spmv_pallas(
+            xb,
+            c.block_first,
+            c.deltas,
+            c.valid_count,
+            bits,
+            active,
+            w,
+            n=c.n,
+            interpret=interpret,
+            tile_blocks=tile_blocks,
+        )  # (NB, B)
+        if c.n_exceptions:
+            fixed = _exception_block_sums(c, xb, bits, w, active)  # (NE, B)
+            per_block = per_block.at[c.exc_block].set(fixed)
+    return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n].T

@@ -18,13 +18,23 @@ def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None, active=No
     ``weights``: optional (NB, FB) uncompressed stream aligned slot-for-slot
     with the decoded block tiles (``CompressedCSR.block_weights``).
     ``active``: optional packed uint32 (NB, F_B/32) traversal mask, ANDed
-    with the graphFilter ``bits`` exactly as the kernel does."""
+    with the graphFilter ``bits`` exactly as the kernel does.
+    Batched queries (x of shape (B, n_pad)) return (NB, B), mirroring the
+    kernel's decode-once-apply-B-columns contract."""
     dst = decode_blocks(c)
     act = unpack_word_bits(bits)
     if active is not None:
         act = act & unpack_word_bits(active)
     mask = (dst < jnp.int32(c.n)) & act
     safe = jnp.where(mask, dst, 0)
+    if x.ndim == 2:
+        xv = jnp.take(x, safe.reshape(-1), axis=1).reshape(
+            x.shape[0], *dst.shape
+        )
+        if weights is not None:
+            xv = xv * weights[None]
+        contrib = jnp.where(mask[None], xv, jnp.zeros((), x.dtype))
+        return jnp.sum(contrib, axis=2).T
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(dst.shape)
     if weights is not None:
         xv = xv * weights
@@ -34,4 +44,5 @@ def compressed_block_spmv_ref(c: CompressedCSR, x, bits, weights=None, active=No
 
 def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits, weights=None, active=None):
     per_block = compressed_block_spmv_ref(c, x, bits, weights, active)
-    return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
+    out = jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
+    return out.T if x.ndim == 2 else out

@@ -1,4 +1,10 @@
-from .ops import edge_block_spmv, spmv_vertex
+from .ops import edge_block_spmv, spmv_vertex, spmv_vertex_batched
 from .ref import edge_block_spmv_ref, spmv_vertex_ref
 
-__all__ = ["edge_block_spmv", "spmv_vertex", "edge_block_spmv_ref", "spmv_vertex_ref"]
+__all__ = [
+    "edge_block_spmv",
+    "spmv_vertex",
+    "spmv_vertex_batched",
+    "edge_block_spmv_ref",
+    "spmv_vertex_ref",
+]

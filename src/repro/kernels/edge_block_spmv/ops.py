@@ -71,3 +71,42 @@ def spmv_vertex(
         tile_blocks=tile_blocks,
     )
     return jax.ops.segment_sum(per_block, g.block_src, num_segments=g.n + 1)[: g.n]
+
+
+def spmv_vertex_batched(
+    g: CSRGraph,
+    xb: jnp.ndarray,
+    f: GraphFilter | None = None,
+    *,
+    edge_active=None,
+    interpret: bool = True,
+    tile_blocks: int = 8,
+) -> jnp.ndarray:
+    """Batched ``spmv_vertex``: ``xb`` is (B, n); returns (B, n).
+
+    One edge sweep serves all B queries — the kernel streams each edge-block
+    tile (and its packed masks) into VMEM once and applies it against the B
+    vertex-state columns, so the NVRAM-modeled edge-byte reads amortize ÷B
+    (see ``PSAMCost.charge_edgemap_batched``)."""
+    if f is not None:
+        bits = f.bits
+    else:
+        from ...core.graph_filter import make_filter
+
+        bits = make_filter(g).bits
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, g.block_size)
+    )
+    per_block = edge_block_spmv_pallas(
+        xb,
+        g.block_dst,
+        g.block_w,
+        bits,
+        active,
+        n=g.n,
+        interpret=interpret,
+        tile_blocks=tile_blocks,
+    )  # (NB, B)
+    return jax.ops.segment_sum(per_block, g.block_src, num_segments=g.n + 1)[: g.n].T

@@ -11,13 +11,19 @@ def edge_block_spmv_ref(x, block_dst, block_w, bits, edge_active=None, *, n: int
     """Per-block partial sums, computed with plain jnp ops.
 
     ``edge_active``: optional packed uint32 (NB, F_B/32) traversal mask,
-    ANDed with the graphFilter ``bits`` exactly as the kernel does."""
+    ANDed with the graphFilter ``bits`` exactly as the kernel does.
+    Batched queries (x of shape (B, n_pad)) return (NB, B), mirroring the
+    kernel's one-tile-load-per-batch contract."""
     NB, FB = block_dst.shape
     act = unpack_word_bits(bits)
     if edge_active is not None:
         act = act & unpack_word_bits(edge_active)
     mask = (block_dst < jnp.int32(n)) & act
     safe = jnp.where(mask, block_dst, 0)
+    if x.ndim == 2:
+        xv = jnp.take(x, safe.reshape(-1), axis=1).reshape(x.shape[0], NB, FB)
+        contrib = jnp.where(mask[None], xv * block_w[None], jnp.zeros((), x.dtype))
+        return jnp.sum(contrib, axis=2).T
     xv = jnp.take(x, safe.reshape(-1), axis=0).reshape(NB, FB)
     contrib = jnp.where(mask, xv * block_w, jnp.zeros((), x.dtype))
     return jnp.sum(contrib, axis=1)
@@ -25,4 +31,5 @@ def edge_block_spmv_ref(x, block_dst, block_w, bits, edge_active=None, *, n: int
 
 def spmv_vertex_ref(x, block_dst, block_w, bits, block_src, edge_active=None, *, n: int):
     per_block = edge_block_spmv_ref(x, block_dst, block_w, bits, edge_active, n=n)
-    return jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]
+    out = jax.ops.segment_sum(per_block, block_src, num_segments=n + 1)[:n]
+    return out.T if x.ndim == 2 else out

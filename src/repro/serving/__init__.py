@@ -1,0 +1,14 @@
+"""repro.serving — the batched query-serving subsystem.
+
+Turns the planner stack from a one-shot algorithm runner into a serving
+system: a :class:`QueryEngine` coalesces concurrent BFS / wBFS / PPR /
+PageRank-iteration requests into per-op batch buckets, pads them to
+power-of-two widths, and drains each bucket through ONE batched edgeMap
+sweep per round — the NVRAM-modeled edge-byte reads are paid once per
+sweep instead of once per query (``PSAMCost.charge_edgemap_batched``),
+while compiled executables are cached per (backend, mesh, op, B) so
+steady-state serving never retraces.
+"""
+from .engine import QueryEngine, QueryHandle
+
+__all__ = ["QueryEngine", "QueryHandle"]

@@ -1,0 +1,258 @@
+"""Batched multi-query serving engine — one NVRAM edge sweep, many queries.
+
+Sage's PSAM makes edge reads the scarce resource: the edges live in
+read-only large memory, every query's mutable state is O(n) words.  Serving
+Q concurrent requests naively costs Q full sweeps of the edge-block array.
+The :class:`QueryEngine` is the throughput lever the semi-external systems
+(Graphyti/FlashGraph, the Optane study — PAPERS.md) all converge on:
+**share one sequential scan across many concurrent computations**.
+
+    submit() ──► per-(op, params) buckets ──► pad to power-of-two B
+                                                     │
+                 compiled-executable cache ◄── flush()│
+                 keyed (backend, mesh, op, B)        ▼
+                 ┌────────────────────────────────────────────┐
+                 │ batched algorithm (bfs_batched, …)         │
+                 │   └─ edgemap_reduce_batched: each round    │
+                 │      streams every edge-block tile ONCE    │
+                 │      and applies it to all B query columns │
+                 └────────────────────────────────────────────┘
+                                                     │
+                 per-handle results (padding dropped)◄┘
+
+Mechanics:
+
+* **Coalescing** — heterogeneous requests (BFS, wBFS, PPR, PageRank
+  iterations) bucket by ``(op, scalar params)``; each bucket drains as one
+  batched call whose per-round edge sweep is shared by the whole bucket
+  (``PSAMCost.charge_edgemap_batched``: edge bytes ÷ B, O(B·n) DRAM state).
+* **Padding** — buckets pad to the next power of two (capped at
+  ``max_batch``; larger buckets split) by repeating the last request, so
+  steady-state serving sees a handful of distinct batch shapes.  Padded
+  lanes are real-but-discarded queries; batched ops are bit-identical per
+  query, so padding never perturbs a real lane.
+* **Executable cache** — compiled callables are keyed by
+  ``(backend type, mesh, op, B)`` (+ the bucket's scalar params, which are
+  trace constants); a repeated ``(op, B)`` bucket re-enters the cached
+  executable with zero retraces (``trace_counts`` makes this testable).
+* **Planner-native** — the engine drains every bucket through the
+  ``ExecutionPlan`` dispatch, so the same engine serves single-device or
+  sharded meshes, raw or compressed storage; the mesh context is entered
+  per flush when the plan is sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..algorithms.eigen import pagerank_iteration_batched
+from ..algorithms.local import personalized_pagerank_batched
+from ..algorithms.traversal import bfs_batched, wbfs_batched
+from ..compat import use_mesh
+from ..core.psam import PSAMCost
+
+
+def _bfs_sweeps(res) -> int:
+    # rounds executed = deepest discovered level + 1 (the drain round)
+    _, levels = res
+    return int(jnp.max(levels)) + 1
+
+
+def _wbfs_sweeps(res) -> int:
+    # one relaxation sweep per extracted bucket ≈ distinct finite distances
+    # of the longest-running query (analytic estimate, like Table 1's)
+    finite = np.asarray(jnp.where(res < jnp.int32(2**31 - 1), res, -1))
+    per_q = [len(np.unique(r[r >= 0])) for r in finite]
+    return max(max(per_q, default=1), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class _OpSpec:
+    """How one query kind batches: stack requests → run → slice → account."""
+
+    stack: Callable[[list[dict]], tuple]        # requests → batched arrays
+    run: Callable                               # (g, plan, args, scalars) → res
+    unbatch: Callable[[Any, int], Any]          # batched res → query i's result
+    sweeps: Callable[[Any], int]                # res → edge sweeps (analytic)
+    scalar_keys: tuple = ()                     # params that are trace constants
+
+
+def _src_stack(reqs: list[dict]) -> tuple:
+    return (jnp.asarray([r["src"] for r in reqs], jnp.int32),)
+
+
+def _pr_stack(reqs: list[dict]) -> tuple:
+    return (jnp.stack([jnp.asarray(r["pr"], jnp.float32) for r in reqs]),)
+
+
+_OPS: dict[str, _OpSpec] = {
+    "bfs": _OpSpec(
+        stack=_src_stack,
+        run=lambda g, plan, args, sc: bfs_batched(g, *args, plan=plan, **sc),
+        unbatch=lambda res, i: (res[0][i], res[1][i]),
+        sweeps=_bfs_sweeps,
+        scalar_keys=("mode",),
+    ),
+    "wbfs": _OpSpec(
+        stack=_src_stack,
+        run=lambda g, plan, args, sc: wbfs_batched(g, *args, plan=plan, **sc),
+        unbatch=lambda res, i: res[i],
+        sweeps=_wbfs_sweeps,
+        scalar_keys=("mode",),
+    ),
+    "ppr": _OpSpec(
+        stack=_src_stack,
+        run=lambda g, plan, args, sc: personalized_pagerank_batched(
+            g, *args, plan=plan, **sc
+        ),
+        unbatch=lambda res, i: (res[0][i], res[1][i], res[2][i]),
+        sweeps=lambda res: max(int(jnp.max(res[2])), 1),
+        scalar_keys=("alpha", "eps", "max_rounds", "mode"),
+    ),
+    "pagerank_iteration": _OpSpec(
+        stack=_pr_stack,
+        run=lambda g, plan, args, sc: pagerank_iteration_batched(
+            g, *args, plan=plan, **sc
+        ),
+        unbatch=lambda res, i: res[i],
+        sweeps=lambda res: 1,
+        scalar_keys=("damping",),
+    ),
+}
+
+
+def _pow2_batch(k: int, max_batch: int) -> int:
+    b = 1
+    while b < k:
+        b *= 2
+    return min(b, max_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryHandle:
+    """Ticket for a submitted query; resolves in the flush that drains it."""
+
+    id: int
+    op: str
+
+
+class QueryEngine:
+    """Coalesce, batch and serve graph queries over one prepared backend.
+
+    Parameters
+    ----------
+    g         : CSRGraph | CompressedCSR — the read-only large memory
+    plan      : ExecutionPlan | None — where the batches run; the graph is
+                prepared (sharded + placed) once at construction
+    max_batch : cap on the padded batch width B (buckets larger than this
+                split into max_batch-wide chunks)
+
+    ``stats`` counts submitted/served queries, drained batches, and traces
+    per compiled-cache key; ``cost`` accumulates the PSAM model of every
+    drained batch (edge bytes once per sweep, O(B·n) small memory).
+    """
+
+    def __init__(self, g, *, plan=None, max_batch: int = 8):
+        self.graph = g
+        self.plan = plan
+        self.prepared = g if plan is None else plan.prepare(g)
+        self.max_batch = int(max_batch)
+        self.cost = PSAMCost()
+        self._pending: dict[tuple, list[tuple[int, dict]]] = {}
+        self._compiled: dict[tuple, Callable] = {}
+        self.trace_counts: dict[tuple, int] = {}
+        self.stats = {"submitted": 0, "served": 0, "batches": 0}
+        self._next_id = 0
+        if plan is not None and plan.is_sharded:
+            self._mesh_key = tuple(
+                (a, plan.mesh.shape[a]) for a in plan.mesh.axis_names
+            )
+        else:
+            self._mesh_key = None
+        self._backend_key = type(g).__name__
+
+    # ------------------------------------------------------------------
+    def submit(self, op: str, **params) -> QueryHandle:
+        """Enqueue one query; returns a handle resolved by ``flush()``."""
+        spec = _OPS.get(op)
+        if spec is None:
+            raise ValueError(f"unknown op {op!r}; serving ops: {sorted(_OPS)}")
+        scalars = tuple(
+            (k, params.pop(k)) for k in spec.scalar_keys if k in params
+        )
+        h = QueryHandle(self._next_id, op)
+        self._next_id += 1
+        self.stats["submitted"] += 1
+        self._pending.setdefault((op, scalars), []).append((h.id, params))
+        return h
+
+    def flush(self) -> dict[QueryHandle, Any]:
+        """Drain every bucket; returns {handle: result} for all pending."""
+        out: dict[QueryHandle, Any] = {}
+        pending, self._pending = self._pending, {}
+        ctx = (
+            use_mesh(self.plan.mesh)
+            if self.plan is not None and self.plan.is_sharded
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            for (op, scalars), reqs in pending.items():
+                for lo in range(0, len(reqs), self.max_batch):
+                    chunk = reqs[lo : lo + self.max_batch]
+                    out.update(self._run_bucket(op, scalars, chunk))
+        return out
+
+    def serve(self, requests: list[tuple[str, dict]]) -> list[Any]:
+        """Convenience: submit all, flush once, return results in order."""
+        handles = [self.submit(op, **params) for op, params in requests]
+        resolved = self.flush()
+        return [resolved[h] for h in handles]
+
+    # ------------------------------------------------------------------
+    def _run_bucket(self, op, scalars, chunk) -> dict[QueryHandle, Any]:
+        spec = _OPS[op]
+        k = len(chunk)
+        B = _pow2_batch(k, self.max_batch)
+        # pad by repeating the last request: padded lanes are real queries
+        # whose rows are computed and dropped — batched ops are per-query
+        # bit-identical, so they cannot perturb the lanes that matter
+        reqs = [r for _, r in chunk] + [chunk[-1][1]] * (B - k)
+        args = spec.stack(reqs)
+        fn = self._compiled_fn(op, scalars, B, spec)
+        res = fn(self.prepared, *args)
+        self.stats["batches"] += 1
+        self.stats["served"] += k
+        self._charge(B, spec.sweeps(res))
+        return {
+            QueryHandle(hid, op): spec.unbatch(res, i)
+            for i, (hid, _) in enumerate(chunk)
+        }
+
+    def _compiled_fn(self, op, scalars, B, spec):
+        key = (self._backend_key, self._mesh_key, op, B, scalars)
+        fn = self._compiled.get(key)
+        if fn is None:
+            sc = dict(scalars)
+            plan = self.plan
+
+            def traced(g, *args):
+                # executes only when jax traces: the counter IS the retrace
+                # count for this (backend, mesh, op, B) key
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                return spec.run(g, plan, args, sc)
+
+            fn = jax.jit(traced)
+            self._compiled[key] = fn
+        return fn
+
+    def _charge(self, B: int, sweeps: int):
+        """PSAM model of one drained batch: ``sweeps`` rounds, each reading
+        the edge blocks once for all B lanes (÷B vs sequential serving)."""
+        shards = self.plan.num_shards if self._mesh_key is not None else 1
+        for _ in range(max(sweeps, 1)):
+            self.cost.charge_edgemap_batched(self.graph, B, num_shards=shards)

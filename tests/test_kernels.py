@@ -9,9 +9,11 @@ from repro.core import compress, edge_active_words, make_filter, pack_vertices
 from repro.data import rmat_graph
 from repro.kernels import (
     compressed_spmv_vertex,
+    compressed_spmv_vertex_batched,
     embedding_bag,
     filter_pack,
     spmv_vertex,
+    spmv_vertex_batched,
 )
 from repro.kernels.compressed_spmv.compressed_spmv import compressed_block_spmv_pallas
 from repro.kernels.compressed_spmv.ref import (
@@ -132,6 +134,88 @@ def test_spmv_vertex_edge_active_forms_agree():
     d = spmv_vertex(g, x, f, edge_active=f2)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(a), np.asarray(d), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,tile", [(1, 2), (3, 8), (8, 4)])
+def test_edge_block_spmv_batched_sweep(B, tile):
+    """The query-batch dimension: one (TB, FB) tile load serves B columns.
+    The batched kernel must match the vectorized oracle AND be bit-identical
+    per query to B single-query kernel calls."""
+    g = rmat_graph(64, 256, weighted=True, seed=B + tile, block_size=32)
+    f = make_filter(g)
+    xb = jax.random.normal(jax.random.PRNGKey(B), (B, g.n), jnp.float32)
+    keep = jax.random.bernoulli(jax.random.PRNGKey(1), 0.6, (g.num_blocks * 32,))
+    aw = edge_active_words(keep, 32)
+    got = edge_block_spmv_pallas(
+        xb, g.block_dst, g.block_w, f.bits, aw, n=g.n, tile_blocks=tile
+    )
+    assert got.shape == (g.num_blocks, B)
+    want = edge_block_spmv_ref(xb, g.block_dst, g.block_w, f.bits, aw, n=g.n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    for i in range(B):
+        solo = edge_block_spmv_pallas(
+            xb[i], g.block_dst, g.block_w, f.bits, aw, n=g.n, tile_blocks=tile
+        )
+        np.testing.assert_array_equal(np.asarray(got[:, i]), np.asarray(solo))
+
+
+@pytest.mark.parametrize("B,tile", [(1, 2), (3, 8), (8, 4)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_compressed_spmv_batched_sweep(B, tile, weighted):
+    """Batched compressed kernel: the delta tile is decoded once per grid
+    step and fanned across B columns — parity with the exact-decode oracle
+    on non-exception rows, bit-identical per query to single calls."""
+    g = rmat_graph(64, 256, weighted=weighted, seed=B + tile, block_size=32)
+    c = compress(g)
+    f = make_filter(g)
+    xb = jax.random.normal(jax.random.PRNGKey(B + 7), (B, g.n), jnp.float32)
+    got = compressed_block_spmv_pallas(
+        xb, c.block_first, c.deltas, c.valid_count, f.bits, None,
+        c.block_weights, n=c.n, tile_blocks=tile,
+    )
+    assert got.shape == (c.num_blocks, B)
+    want = compressed_block_spmv_ref(c, xb, f.bits, c.block_weights)
+    if c.n_exceptions:
+        rows = np.setdiff1d(np.arange(c.num_blocks), np.asarray(c.exc_block))
+    else:
+        rows = np.arange(c.num_blocks)
+    np.testing.assert_allclose(
+        np.asarray(got)[rows], np.asarray(want)[rows], rtol=1e-5, atol=1e-5
+    )
+    for i in range(B):
+        solo = compressed_block_spmv_pallas(
+            xb[i], c.block_first, c.deltas, c.valid_count, f.bits, None,
+            c.block_weights, n=c.n, tile_blocks=tile,
+        )
+        np.testing.assert_array_equal(np.asarray(got[:, i]), np.asarray(solo))
+
+
+def test_spmv_vertex_batched_matches_singles():
+    """Wrapper-level parity, exception fixup included: the batched vertex
+    sums equal B stacked single-query calls on both kernel packages."""
+    import test_compressed as tc
+
+    g = rmat_graph(64, 256, weighted=True, seed=13, block_size=32)
+    c = compress(g)
+    f = make_filter(g)
+    keep = g.edge_valid & (g.edge_dst % 3 != 0)
+    xb = jax.random.normal(jax.random.PRNGKey(2), (3, g.n), jnp.float32)
+    got = spmv_vertex_batched(g, xb, f, edge_active=keep)
+    want = jnp.stack([spmv_vertex(g, xb[i], f, edge_active=keep) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    gotc = compressed_spmv_vertex_batched(c, xb, f, edge_active=keep)
+    wantc = jnp.stack(
+        [compressed_spmv_vertex(c, xb[i], f, edge_active=keep) for i in range(3)]
+    )
+    np.testing.assert_array_equal(np.asarray(gotc), np.asarray(wantc))
+    # the COO-exception fixup is vectorized to match (wide-delta graph)
+    gw = tc.wide_delta_graph(weighted=True)
+    cw = compress(gw)
+    assert cw.n_exceptions > 0
+    xw = jax.random.normal(jax.random.PRNGKey(3), (2, gw.n), jnp.float32)
+    got_e = compressed_spmv_vertex_batched(cw, xw)
+    want_e = jnp.stack([compressed_spmv_vertex(cw, xw[i]) for i in range(2)])
+    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want_e))
 
 
 def test_spmv_vertex_matches_ref_and_filter():

@@ -477,6 +477,47 @@ except ImportError:  # hypothesis not installed: fixed-seed sweep, no skip
         _check_filter_before_vs_after_shard(seed, num_shards, compressed, monoid)
 
 
+def test_planner_straggler_parity_algorithms():
+    """The last bypassers take plan=: personalized PageRank, widest path and
+    betweenness route their edgeMaps through ExecutionPlan dispatch — mesh
+    {(1,), (2,), (4,)} x {CSRGraph, CompressedCSR} reproduces the
+    single-device results (min/max monoids exactly; sum-monoid scores to
+    reduction tolerance, as in the PageRank parity suite)."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.data import rmat_graph
+from repro.core import compress, make_plan
+from repro.algorithms import betweenness, personalized_pagerank, widest_path
+
+g = rmat_graph(192, 768, weighted=True, seed=23, block_size=32)
+c = compress(g)
+want_p, want_r, want_ro = personalized_pagerank(g, 0, max_rounds=40)
+want_w = np.asarray(widest_path(g, 0))
+want_b = np.asarray(betweenness(g, 0))
+for shape in [(1,), (2,), (4,)]:
+    mesh = make_mesh(shape, ("data",))
+    for backend in [g, c]:
+        plan = make_plan(backend, mesh=mesh)
+        with use_mesh(mesh):
+            p, r, ro = personalized_pagerank(backend, 0, max_rounds=40, plan=plan)
+            w = widest_path(backend, 0, plan=plan)
+            b = betweenness(backend, 0, plan=plan)
+        name = (shape, type(backend).__name__)
+        assert np.allclose(np.asarray(p), np.asarray(want_p), atol=1e-5), (name, "ppr p")
+        assert np.allclose(np.asarray(r), np.asarray(want_r), atol=1e-5), (name, "ppr r")
+        assert int(ro) == int(want_ro), (name, "ppr rounds")
+        assert np.array_equal(np.asarray(w), want_w), (name, "widest_path")
+        assert np.allclose(np.asarray(b), want_b, atol=1e-4), (name, "betweenness")
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
 def test_sharded_modes_and_monoids():
     """dense/sparse/auto strategies and sum/min monoids all agree with the
     single-device engine on a 2D mesh, both backends, incl. hierarchical."""

@@ -1,0 +1,410 @@
+"""Serving subsystem: batched-vs-sequential parity + QueryEngine behavior.
+
+The parity contract (acceptance): every batched op is **bit-identical, per
+query**, to B independent single-query runs — across ragged batch widths
+B ∈ {1, 3, 8} (the engine pads 3 → 4), both storage backends, and mesh
+{1, 2, 4} (the mesh legs run in a subprocess over fake CPU devices, like
+test_plan's).  Comparisons are eager-vs-eager / same-plan-vs-same-plan:
+jit and eager execution fuse float arithmetic differently (≈1e-9), which
+is orthogonal to batching.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    bfs,
+    bfs_batched,
+    multi_source_bfs,
+    pagerank_iteration,
+    pagerank_iteration_batched,
+    personalized_pagerank,
+    personalized_pagerank_batched,
+    wbfs,
+    wbfs_batched,
+)
+from repro.core import PSAMCost, compress
+from repro.data import rmat_graph
+from repro.serving import QueryEngine
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=ROOT,
+        timeout=420,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def _graph(weighted=False):
+    return rmat_graph(128, 512, weighted=weighted, seed=7, block_size=32)
+
+
+def _sources(B, n, seed=11):
+    return np.random.default_rng(seed).integers(0, n, B).tolist()
+
+
+# ----------------------------------------------------------------------
+# Single-device batched-vs-sequential parity, B ∈ {1, 3, 8} x backends
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("compressed", [False, True])
+def test_bfs_batched_parity(B, compressed):
+    g = _graph()
+    backend = compress(g) if compressed else g
+    srcs = _sources(B, g.n)
+    pb, lb = bfs_batched(backend, jnp.asarray(srcs))
+    assert pb.shape == (B, g.n) and lb.shape == (B, g.n)
+    for i, s in enumerate(srcs):
+        wp, wl = bfs(backend, s)
+        np.testing.assert_array_equal(np.asarray(pb[i]), np.asarray(wp))
+        np.testing.assert_array_equal(np.asarray(lb[i]), np.asarray(wl))
+
+
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("compressed", [False, True])
+def test_wbfs_batched_parity(B, compressed):
+    g = _graph(weighted=True)
+    backend = compress(g) if compressed else g
+    srcs = _sources(B, g.n, seed=B)
+    db = wbfs_batched(backend, jnp.asarray(srcs))
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(np.asarray(db[i]), np.asarray(wbfs(backend, s)))
+
+
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("compressed", [False, True])
+def test_ppr_batched_parity(B, compressed):
+    g = _graph()
+    backend = compress(g) if compressed else g
+    srcs = _sources(B, g.n, seed=B + 50)
+    pB, rB, roB = personalized_pagerank_batched(
+        backend, jnp.asarray(srcs), max_rounds=40
+    )
+    for i, s in enumerate(srcs):
+        p1, r1, ro1 = personalized_pagerank(backend, s, max_rounds=40)
+        # bit-identical, floats included: the batch shares the sweep but
+        # every lane's arithmetic is the single-query arithmetic
+        np.testing.assert_array_equal(np.asarray(pB[i]), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(rB[i]), np.asarray(r1))
+        assert int(roB[i]) == int(ro1)
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_pagerank_iteration_batched_parity(compressed):
+    g = _graph()
+    backend = compress(g) if compressed else g
+    prs = jax.random.uniform(jax.random.PRNGKey(0), (3, g.n), jnp.float32)
+    ob = pagerank_iteration_batched(backend, prs)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(ob[i]), np.asarray(pagerank_iteration(backend, prs[i]))
+        )
+
+
+def test_multi_source_bfs_is_batched_row():
+    """The rebased multi_source_bfs (B=1 row of bfs_batched) keeps its
+    forest semantics: every root is its own parent at level 0."""
+    g = _graph()
+    roots = jnp.zeros(g.n, bool).at[jnp.asarray([0, 5, 17])].set(True)
+    parents, levels = multi_source_bfs(g, roots)
+    ids = np.arange(g.n)
+    rn = np.asarray(roots)
+    np.testing.assert_array_equal(np.asarray(parents)[rn], ids[rn])
+    np.testing.assert_array_equal(np.asarray(levels)[rn], 0)
+    # rows of a 2-query batch reproduce the per-mask forests
+    roots2 = jnp.zeros(g.n, bool).at[jnp.asarray([3, 40])].set(True)
+    pb, lb = bfs_batched(g, jnp.stack([roots, roots2]))
+    w0 = multi_source_bfs(g, roots)
+    w1 = multi_source_bfs(g, roots2)
+    np.testing.assert_array_equal(np.asarray(pb[0]), np.asarray(w0[0]))
+    np.testing.assert_array_equal(np.asarray(lb[1]), np.asarray(w1[1]))
+
+
+# ----------------------------------------------------------------------
+# Mesh parity: batched == per-query single runs ON THE SAME PLAN,
+# mesh {1, 2, 4} x both backends, ragged B=3
+# ----------------------------------------------------------------------
+def test_batched_sharded_parity():
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.data import rmat_graph
+from repro.core import compress, make_plan
+from repro.algorithms import (bfs, bfs_batched, wbfs, wbfs_batched,
+    personalized_pagerank, personalized_pagerank_batched,
+    pagerank_iteration, pagerank_iteration_batched)
+
+g = rmat_graph(128, 512, weighted=True, seed=7, block_size=32)
+c = compress(g)
+srcs = [0, 9, 33]
+prs = jax.random.uniform(jax.random.PRNGKey(1), (3, g.n), jnp.float32)
+for shape in [(1,), (2,), (4,)]:
+    mesh = make_mesh(shape, ("data",))
+    for backend in [g, c]:
+        plan = make_plan(backend, mesh=mesh)
+        name = (shape, type(backend).__name__)
+        with use_mesh(mesh):
+            pb, lb = bfs_batched(backend, jnp.asarray(srcs), plan=plan)
+            db = wbfs_batched(backend, jnp.asarray(srcs), plan=plan)
+            pB, rB, roB = personalized_pagerank_batched(
+                backend, jnp.asarray(srcs), max_rounds=30, plan=plan)
+            ob = pagerank_iteration_batched(backend, prs, plan=plan)
+            for i, s in enumerate(srcs):
+                wp, wl = bfs(backend, s, plan=plan)
+                assert np.array_equal(np.asarray(pb[i]), np.asarray(wp)), (name, "bfs p")
+                assert np.array_equal(np.asarray(lb[i]), np.asarray(wl)), (name, "bfs l")
+                wd = wbfs(backend, s, plan=plan)
+                assert np.array_equal(np.asarray(db[i]), np.asarray(wd)), (name, "wbfs")
+                p1, r1, ro1 = personalized_pagerank(backend, s, max_rounds=30, plan=plan)
+                assert np.array_equal(np.asarray(pB[i]), np.asarray(p1)), (name, "ppr p")
+                assert np.array_equal(np.asarray(rB[i]), np.asarray(r1)), (name, "ppr r")
+                assert int(roB[i]) == int(ro1), (name, "ppr rounds")
+                w1 = pagerank_iteration(backend, prs[i], plan=plan)
+                assert np.array_equal(np.asarray(ob[i]), np.asarray(w1)), (name, "pr iter")
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+def test_batched_hierarchical_reduce_parity():
+    """Sum-monoid batched edgeMap on a 2x2 hierarchical-reduce mesh keeps
+    per-lane bit-identity with the single-query run on the same plan: the
+    (B, n) output reduce-scatters each lane's row along the vertex dim,
+    exactly the 1-D combine per lane."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.data import rmat_graph
+from repro.core import compress, edgemap_reduce, edgemap_reduce_batched, make_plan
+
+g = rmat_graph(96, 400, seed=5, block_size=32)
+rng = np.random.default_rng(0)
+fms = jnp.asarray(rng.random((3, g.n)) < 0.3)
+xb = jnp.asarray(rng.normal(size=(3, g.n)), jnp.float32)
+mesh = make_mesh((2, 2), ("pod", "data"))
+for backend in [g, compress(g)]:
+    plan = make_plan(backend, mesh=mesh, reduce_mode="hierarchical")
+    gs = plan.prepare(backend)
+    with use_mesh(mesh):
+        out, t = edgemap_reduce_batched(gs, fms, xb, monoid="sum", mode="dense", plan=plan)
+        for i in range(3):
+            w, wt = edgemap_reduce(gs, fms[i], xb[i], monoid="sum", mode="dense", plan=plan)
+            assert np.array_equal(np.asarray(out[i]), np.asarray(w)), i
+            assert np.array_equal(np.asarray(t[i]), np.asarray(wt)), i
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+def test_root_masks_rank_dispatch():
+    """An int 0/1 roots mask (2-D) is a mask, never vertex ids; 1-D bool is
+    ambiguous and rejected loudly."""
+    g = _graph()
+    mask_int = jnp.zeros(g.n, jnp.int32).at[jnp.asarray([0, 5])].set(1)
+    p1, l1 = multi_source_bfs(g, mask_int)
+    p2, l2 = multi_source_bfs(g, mask_int.astype(bool))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    with pytest.raises(ValueError, match="root masks|sources"):
+        bfs_batched(g, jnp.asarray([True, False]))
+
+
+# ----------------------------------------------------------------------
+# QueryEngine: coalescing, ragged padding, executable cache, accounting
+# ----------------------------------------------------------------------
+def test_engine_results_match_singles():
+    """Engine-served results are bit-identical to the same computation run
+    single-query under jit with the graph as an argument — exactly the
+    engine's execution regime (jit fuses closure-captured constants
+    differently, which is orthogonal to batching)."""
+    g = _graph(weighted=True)
+    eng = QueryEngine(g, max_batch=8)
+    srcs = [0, 3, 9]  # ragged: pads to B=4
+    hb = [eng.submit("bfs", src=s) for s in srcs]
+    hw = [eng.submit("wbfs", src=s) for s in srcs]
+    hp = eng.submit("ppr", src=5, max_rounds=30)
+    pr0 = jnp.full(g.n, 1.0 / g.n, jnp.float32)
+    hpr = eng.submit("pagerank_iteration", pr=pr0)
+    res = eng.flush()
+    assert eng.stats["submitted"] == eng.stats["served"] == 8
+    jit_bfs = jax.jit(lambda gg, s: bfs(gg, s))
+    jit_wbfs = jax.jit(lambda gg, s: wbfs(gg, s))
+    for h, s in zip(hb, srcs):
+        wp, wl = jit_bfs(g, jnp.int32(s))
+        np.testing.assert_array_equal(np.asarray(res[h][0]), np.asarray(wp))
+        np.testing.assert_array_equal(np.asarray(res[h][1]), np.asarray(wl))
+    for h, s in zip(hw, srcs):
+        np.testing.assert_array_equal(
+            np.asarray(res[h]), np.asarray(jit_wbfs(g, jnp.int32(s)))
+        )
+    p1, r1, ro1 = jax.jit(
+        lambda gg, s: personalized_pagerank(gg, s, max_rounds=30)
+    )(g, jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(res[hp][0]), np.asarray(p1))
+    assert int(res[hp][2]) == int(ro1)
+    w = jax.jit(lambda gg, p: pagerank_iteration(gg, p))(g, pr0)
+    np.testing.assert_array_equal(np.asarray(res[hpr]), np.asarray(w))
+
+
+def test_engine_cache_zero_retrace():
+    """Acceptance: a repeated (op, B) bucket re-enters the cached executable
+    — the per-key trace count stays at 1 across flushes."""
+    g = _graph()
+    eng = QueryEngine(g, max_batch=8)
+    for round_srcs in [[1, 2, 3], [4, 5, 6], [7, 8, 9]]:
+        for s in round_srcs:
+            eng.submit("bfs", src=s)
+        eng.flush()
+    assert eng.stats["batches"] == 3
+    (key, traces), = eng.trace_counts.items()
+    assert key[0] == "CSRGraph" and key[2] == "bfs" and key[3] == 4
+    assert traces == 1  # zero retraces after the first
+    # a different B is a different executable, again traced once
+    eng.submit("bfs", src=11)
+    eng.flush()
+    assert sorted(k[3] for k in eng.trace_counts) == [1, 4]
+    assert all(t == 1 for t in eng.trace_counts.values())
+
+
+def test_engine_pads_pow2_and_splits_oversize():
+    g = _graph()
+    eng = QueryEngine(g, max_batch=4)
+    for s in range(6):  # 6 queries, max_batch 4 → buckets of 4 and 2
+        eng.submit("bfs", src=s)
+    res = eng.flush()
+    assert len(res) == 6 and eng.stats["batches"] == 2
+    assert sorted(k[3] for k in eng.trace_counts) == [2, 4]
+
+
+def test_engine_scalar_params_bucket_separately():
+    """Different trace-constant params must not coalesce into one batch."""
+    g = _graph()
+    eng = QueryEngine(g)
+    h1 = eng.submit("ppr", src=1, max_rounds=10)
+    h2 = eng.submit("ppr", src=2, max_rounds=20)
+    res = eng.flush()
+    assert eng.stats["batches"] == 2
+    p1, _, _ = jax.jit(
+        lambda gg, s: personalized_pagerank(gg, s, max_rounds=10)
+    )(g, jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(res[h1][0]), np.asarray(p1))
+    assert res[h2][0].shape == (g.n,)
+
+
+def test_engine_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown op"):
+        QueryEngine(_graph()).submit("triangle_count")
+
+
+def test_engine_sharded_mesh():
+    """The same engine serves a 4-shard mesh: results equal the single-query
+    runs on the same plan, and the cache key records the mesh."""
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, use_mesh
+from repro.data import rmat_graph
+from repro.core import compress, make_plan
+from repro.algorithms import bfs
+from repro.serving import QueryEngine
+
+g = rmat_graph(128, 512, seed=7, block_size=32)
+for backend in [g, compress(g)]:
+    mesh = make_mesh((4,), ("data",))
+    plan = make_plan(backend, mesh=mesh)
+    eng = QueryEngine(backend, plan=plan, max_batch=4)
+    srcs = [0, 9, 33]
+    hs = [eng.submit("bfs", src=s) for s in srcs]
+    res = eng.flush()       # engine enters the mesh context itself
+    with use_mesh(mesh):
+        jit_bfs = jax.jit(lambda gg, sv: bfs(gg, sv, plan=plan))
+        for h, s in zip(hs, srcs):
+            wp, wl = jit_bfs(eng.prepared, jnp.int32(s))
+            assert np.array_equal(np.asarray(res[h][0]), np.asarray(wp)), s
+            assert np.array_equal(np.asarray(res[h][1]), np.asarray(wl)), s
+    (key,) = eng.trace_counts
+    assert key[1] == (("data", 4),) and key[3] == 4
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+# ----------------------------------------------------------------------
+# PSAM accounting: the amortization is real (acceptance criterion)
+# ----------------------------------------------------------------------
+def test_psam_batched_amortization_bfs8():
+    """B=8 batched BFS on RMAT reads ≥4x fewer edge bytes than 8 sequential
+    runs: per round the batch charges one edge sweep; sequential serving
+    charges one per query per round."""
+    g = rmat_graph(2048, 16384, seed=1, block_size=32)
+    srcs = _sources(8, g.n, seed=3)
+    # per-query round counts = deepest level + 1 (the drain round)
+    seq_rounds = [int(jnp.max(bfs(g, s)[1])) + 1 for s in srcs]
+    _, lb = bfs_batched(g, jnp.asarray(srcs))
+    batched_rounds = int(jnp.max(lb)) + 1
+    assert batched_rounds == max(seq_rounds)  # lockstep runs to the slowest
+
+    batched, sequential = PSAMCost(), PSAMCost()
+    for _ in range(batched_rounds):
+        batched.charge_edgemap_batched(g, 8)
+    for rounds in seq_rounds:
+        for _ in range(rounds):
+            sequential.charge_edgemap_planned(g)
+    ratio = sequential.large_reads / batched.large_reads
+    assert ratio >= 4.0, ratio
+    # the O(B·n) small-memory side does NOT amortize: per round the batch
+    # pays B times the single-query state
+    assert batched.small_ops == 8 * g.n * 3 * batched_rounds
+
+
+def test_psam_batched_matches_planned_at_b1():
+    g = _graph()
+    c = compress(g)
+    for backend in [g, c]:
+        a, b = PSAMCost(), PSAMCost()
+        a.charge_edgemap_planned(backend, num_shards=4)
+        b.charge_edgemap_batched(backend, 1, num_shards=4)
+        assert a.large_reads == b.large_reads and a.small_ops == b.small_ops
+        # edge reads are batch-invariant; small ops scale linearly
+        b8 = PSAMCost()
+        b8.charge_edgemap_batched(backend, 8, num_shards=4)
+        assert b8.large_reads == b.large_reads
+        assert b8.small_ops == 8 * b.small_ops
+
+
+def test_engine_cost_tracks_batches():
+    g = _graph()
+    eng = QueryEngine(g, max_batch=8)
+    for s in range(8):
+        eng.submit("bfs", src=s)
+    eng.flush()
+    assert eng.cost.large_reads > 0
+    # one edge sweep per round for the whole batch, never per query
+    solo = PSAMCost()
+    solo.charge_edgemap_planned(g)
+    assert eng.cost.large_reads % solo.large_reads == 0
+    assert eng.cost.large_reads // solo.large_reads < 8 * 2  # « 8 x rounds
