@@ -1,16 +1,25 @@
-"""Kernel microbenchmarks: the three Pallas kernels (interpret mode on this
-CPU container; on TPU the same call sites compile natively) against their
-pure-jnp references."""
+"""Kernel microbenchmarks: the Pallas kernels (interpret mode on this CPU
+container; on TPU the same call sites compile natively) against their
+pure-jnp references, plus the frontier-sweep row demonstrating the
+chunked-mode kernel's PSAM read model: streamed bytes proportional to the
+live (frontier-owned) blocks, never to NB."""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import make_filter
+from repro.core import PSAMCost, compress, make_filter
 from repro.data import rmat_graph
-from repro.kernels import embedding_bag, spmv_vertex
+from repro.kernels import (
+    compressed_spmv_vertex,
+    compressed_spmv_vertex_chunked,
+    embedding_bag,
+    spmv_vertex,
+)
+from repro.kernels.compressed_spmv.ref import compressed_chunked_spmv_ref
 from repro.kernels.edge_block_spmv.ref import spmv_vertex_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -22,6 +31,28 @@ def _timeit(fn, *args):
     out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) * 1e6
+
+
+def frontier_stream_derived(c, k: int, tile_blocks: int) -> str:
+    """PSAM read model of one frontier-sparse streamed round, as a derived
+    string: streamed (chunk-padded live), exactly-live and dense-NB words.
+
+    Shared by the `kernels_micro` and `table_compression` frontier-sweep
+    rows so the acceptance ratio (streamed ≤ 1.2× live at 10% density) is
+    computed exactly one way.
+    """
+    streamed, live, dense = PSAMCost(), PSAMCost(), PSAMCost()
+    streamed.charge_edgemap_sparse(c, k, tile_blocks=tile_blocks)
+    live.charge_edgemap_sparse(c, k, tile_blocks=1)
+    dense.charge_edgemap_dense(c)
+    return (
+        f"live_blocks={k}/{c.num_blocks} "
+        f"streamed_words={streamed.large_reads} "
+        f"live_words={live.large_reads} "
+        f"dense_words={dense.large_reads} "
+        f"streamed_vs_live={streamed.large_reads / max(live.large_reads, 1):.3f}x "
+        f"dense_vs_streamed={dense.large_reads / max(streamed.large_reads, 1):.1f}x"
+    )
 
 
 def run():
@@ -37,6 +68,45 @@ def run():
         lambda xx: spmv_vertex_ref(xx, g.block_dst, g.block_w, f.bits, g.block_src, n=g.n)
     )
     rows.append(dict(name="spmv_jnp_ref", us_per_call=_timeit(ref, x), derived="oracle"))
+
+    # ------------------------------------------------------------------
+    # Frontier sweep (the chunked PrefetchScalarGridSpec mode): a 10%-dense
+    # frontier must stream ≤ 1.2× the live blocks' bytes — the read volume
+    # tracks the compacted live-id list the kernel's index_maps walk, not NB
+    # ------------------------------------------------------------------
+    TB = 8
+    c = compress(g)
+    rng = np.random.default_rng(0)
+    frontier = jnp.asarray(rng.random(g.n) < 0.10)
+    blk_live = jnp.take(frontier, c.block_src, mode="fill", fill_value=False)
+    k = int(blk_live.sum())
+    us_chunk = _timeit(
+        lambda: compressed_spmv_vertex_chunked(c, x, frontier, f, tile_blocks=TB)
+    )
+    rows.append(
+        dict(
+            name="spmv_chunked_frontier_sweep",
+            us_per_call=us_chunk,
+            derived=frontier_stream_derived(c, k, TB),
+        )
+    )
+    ref_chunk = jax.jit(
+        lambda xx: compressed_chunked_spmv_ref(c, xx, frontier, f.bits, c.block_weights)
+    )
+    rows.append(
+        dict(
+            name="spmv_chunked_frontier_jnp_ref",
+            us_per_call=_timeit(ref_chunk, x),
+            derived="oracle (masked full stream)",
+        )
+    )
+    rows.append(
+        dict(
+            name="spmv_compressed_dense_grid",
+            us_per_call=_timeit(lambda: compressed_spmv_vertex(c, x, f)),
+            derived="every block streams (the dense-mode kernel, for contrast)",
+        )
+    )
 
     table = jax.random.normal(jax.random.PRNGKey(1), (4096, 64), jnp.float32)
     idx = jax.random.randint(jax.random.PRNGKey(2), (512, 16), -1, 4096)

@@ -16,6 +16,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import PSAMCost, compress, edgemap_reduce, from_indices, make_filter
 from repro.data import rmat_graph
@@ -65,6 +66,27 @@ def run(n=1024, m=8192, block_size=64):
                     derived=f"mode={mode} backend={label}",
                 )
             )
+
+    # frontier sweep, streamed: a 10%-dense frontier through the chunked-mode
+    # Pallas decode — the wall-clock row next to the PSAM read-model row
+    # below, which is the actual claim (streamed bytes ∝ live blocks, not NB)
+    TB = 8
+    fr10 = jnp.asarray(np.random.default_rng(5).random(g.n) < 0.10)
+    k_live = int(jnp.take(fr10, c.block_src, mode="fill", fill_value=False).sum())
+    fn_str = jax.jit(
+        lambda frm: edgemap_reduce(
+            c, frm, x, monoid="min", mode="sparse_streamed", chunk_blocks=TB
+        )
+    )
+    from .kernels_micro import frontier_stream_derived
+
+    rows.append(
+        dict(
+            name="table_compression_edgemap_frontier_streamed",
+            us_per_call=_time_us(fn_str, fr10),
+            derived=frontier_stream_derived(c, k_live, TB),
+        )
+    )
 
     xf = jax.random.normal(jax.random.PRNGKey(0), (g.n,), jnp.float32)
     f = make_filter(g)

@@ -6,6 +6,8 @@ Public surface:
   GraphBackend / GraphLike                — the protocol both backends satisfy
   ExecutionPlan / make_plan / ShardedGraph— unified planner: one edgeMap,
                                             single-device or sharded mesh
+  compact_live_blocks                     — drop filter-dead blocks before
+                                            the shard split (PSAM streaming)
   VertexSubset / from_indices / from_mask — frontiers (O(n) small memory)
   edgemap_reduce / edge_map               — direction-optimized edgeMapChunked
   GraphFilter / make_filter / pack_vertices / filter_edges — §4.2 bitset filter
@@ -49,6 +51,7 @@ from .plan import (
     ExecutionPlan,
     ShardedEdgeActive,
     ShardedGraph,
+    compact_live_blocks,
     make_plan,
     shard_edge_active,
     sharded_edgemap_reduce,
@@ -63,6 +66,7 @@ __all__ = [
     "ExecutionPlan",
     "ShardedEdgeActive",
     "ShardedGraph",
+    "compact_live_blocks",
     "make_plan",
     "shard_edge_active",
     "sharded_edgemap_reduce",

@@ -1,6 +1,6 @@
 """edgeMap / edgeMapChunked (§4.1) — PSAM-efficient frontier expansion.
 
-Three execution modes, mirroring the paper:
+Four execution modes, mirroring the paper:
 
 * ``dense``  — the pull-style pass over *all* edge slots (one masked
   segment-reduce).  Work O(m); the O(n)-words output discipline holds because
@@ -12,6 +12,16 @@ Three execution modes, mirroring the paper:
   the peak intermediate is ``chunk_blocks × F_B`` words — the JAX analogue of
   the paper's thread-local chunk pool (count → scan → scatter replaces
   malloc-per-thread).
+* ``sparse_streamed`` — the same chunk loop, but on a ``CompressedCSR``
+  backend the per-chunk tile view is produced by the frontier-sparse Pallas
+  kernel (``repro.kernels.compressed_spmv``, PrefetchScalarGridSpec): the
+  compacted live-id list steers the BlockSpec index_maps, so only
+  frontier-owned compressed tiles move HBM→VMEM — read volume proportional
+  to the live blocks, never NB, which is the PSAM sparse-round claim.
+  Backends without a streaming decoder (raw ``CSRGraph``) and
+  exception-dense compressed graphs fall back to plain ``sparse`` —
+  identical results either way (the streamed tile is exception-patched to
+  exactness).
 * ``auto``   — Beamer direction optimization: dense when the frontier's
   incident-edge count exceeds ``m / dense_frac``.
 
@@ -70,6 +80,46 @@ def _edge_active_view(g: GraphLike, edge_active) -> jnp.ndarray | None:
 
 def _gather_rows(arr, idx, fill):
     return jnp.take(arr, idx, axis=0, mode="fill", fill_value=fill)
+
+
+def _streaming_decoder(g: GraphLike, edge_active):
+    """The kernel-backed tile view for the ``sparse_streamed`` mode, or None.
+
+    Returns ``tile(bids) -> (dst, w)`` streaming ONLY the named blocks
+    HBM→VMEM (packed ``edge_active`` words folded into ``dst`` in-VMEM:
+    masked slots come back as the sentinel ``n``, so the caller's
+    ``dst < n`` activity test subsumes the filter).  None when the backend
+    has no streaming decoder — raw ``CSRGraph`` (its block view is already
+    uncompressed; the chunk gather IS the stream) or an exception-dense
+    ``CompressedCSR`` (the COO patch would stop being a rare path)."""
+    from .compressed import CompressedCSR, exception_dense
+
+    if not isinstance(g, CompressedCSR) or exception_dense(g):
+        return None
+    # lazy import: kernels depend on core, never the other way around
+    from ..kernels.compressed_spmv.ops import (
+        _exception_row_targets,
+        compressed_chunked_stream_tile,
+    )
+
+    if edge_active is None:
+        words = None
+    elif isinstance(edge_active, GraphFilter) or (
+        hasattr(edge_active, "dtype") and edge_active.dtype == jnp.uint32
+    ):
+        words = edge_active_words(edge_active, g.block_size)
+    else:  # bool-ish slot mask, flat or (NB, F_B) — pack to canonical words
+        words = edge_active_words(jnp.asarray(edge_active).astype(bool), g.block_size)
+
+    # exception rows are id-independent: decode them exactly ONCE here, so
+    # the chunk loop's per-iteration patch is a cheap match + scatter (the
+    # O(NE·F_B) exact decode becomes a hoisted loop input, not loop body)
+    exact = _exception_row_targets(g, words) if g.n_exceptions else None
+
+    def tile(bids):
+        return compressed_chunked_stream_tile(g, bids, words, exact_rows=exact)
+
+    return tile
 
 
 def _combine(monoid, a, b):
@@ -136,8 +186,20 @@ def edgemap_chunked(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
     chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
+    streamed: bool = False,
 ):
-    """EDGEMAPCHUNKED — only frontier-owned blocks, chunked emission."""
+    """EDGEMAPCHUNKED — only frontier-owned blocks, chunked emission.
+
+    With ``streamed=True`` (the ``sparse_streamed`` mode) a ``CompressedCSR``
+    backend swaps the per-chunk jnp decode for the frontier-sparse Pallas
+    kernel: the compacted live-id chunk is the kernel's scalar-prefetched
+    operand, and only those blocks' compressed tiles stream HBM→VMEM —
+    ``ceil(k / chunk_blocks)`` launches of ``chunk_blocks`` blocks each, so
+    streamed bytes track the live count ``k``, not NB.  Results are
+    bit-identical to the un-streamed path (the kernel tile is
+    exception-patched to exactness and the filter folding commutes with the
+    activity test); backends without a streaming decoder ignore the flag.
+    """
     n, NB, FB = g.n, g.num_blocks, g.block_size
     C = min(chunk_blocks, NB)
     nchunks = -(-NB // C)
@@ -153,20 +215,27 @@ def edgemap_chunked(
         out0 = jnp.zeros((n + 1,) + feat_shape, dtype=bool)
     touched0 = jnp.zeros(n + 1, dtype=jnp.int32)
 
-    bits = _edge_active_view(g, edge_active)
+    stream_tile = _streaming_decoder(g, edge_active) if streamed else None
+    bits = _edge_active_view(g, edge_active) if stream_tile is None else None
 
     def body(state):
         i, out, touched = state
         bids = lax.dynamic_slice(idx, (i * C,), (C,))
-        # per-backend tile view; compressed backends decode here, inside the
-        # chunk loop, so the peak intermediate stays C × F_B words
-        dsts, ws = tile_block_view(g, bids)                # (C, FB)
+        if stream_tile is not None:
+            # Pallas frontier-sparse decode: ONLY these C blocks' compressed
+            # tiles move; filter bits already folded (masked slots → n)
+            dsts, ws = stream_tile(bids)                   # (C, FB)
+            act = dsts < n
+        else:
+            # per-backend tile view; compressed backends decode here, inside
+            # the chunk loop, so the peak intermediate stays C × F_B words
+            dsts, ws = tile_block_view(g, bids)            # (C, FB)
+            act = dsts < n
+            if bits is not None:
+                act = act & _gather_rows(bits, bids, False)
         srcs = _gather_rows(g.block_src, bids, n)          # (C,)
         xs = _gather_rows(x, srcs, ident)                  # (C, ...)
         xs = jnp.broadcast_to(xs[:, None], (C, FB) + feat_shape)
-        act = dsts < n
-        if bits is not None:
-            act = act & _gather_rows(bits, bids, False)
         vals = map_fn(xs, ws if not feat_shape else ws[..., None])
         sel = act if not feat_shape else act[..., None]
         vals = jnp.where(sel, vals, ident)
@@ -201,6 +270,11 @@ def edgemap_reduce(
     plan=None,
 ):
     """Direction-optimized edgeMap (Beamer §4.1.1).
+
+    ``mode`` is ``'dense' | 'sparse' | 'sparse_streamed' | 'auto'`` (see the
+    module docstring); ``sparse_streamed`` is ``sparse`` with the
+    frontier-sparse Pallas decode on ``CompressedCSR`` backends — only live
+    compressed tiles stream — and falls back to ``sparse`` elsewhere.
 
     With ``plan`` (an ``ExecutionPlan``, see ``repro.core.plan``) the same
     call runs wherever the plan says: a meshless plan resolves the mode /
@@ -241,7 +315,7 @@ def edgemap_reduce(
         return edgemap_dense(
             g, frontier_mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active
         )
-    if mode == "sparse":
+    if mode in ("sparse", "sparse_streamed"):
         return edgemap_chunked(
             g,
             frontier_mask,
@@ -250,6 +324,7 @@ def edgemap_reduce(
             map_fn=map_fn,
             edge_active=edge_active,
             chunk_blocks=chunk_blocks,
+            streamed=mode == "sparse_streamed",
         )
     sum_deg = jnp.sum(jnp.where(frontier_mask, g.degrees, 0))
     use_dense = sum_deg * dense_frac > g.m
@@ -317,6 +392,83 @@ def edgemap_dense_batched(
     return out.T, touched.T
 
 
+def edgemap_chunked_batched_streamed(
+    g: GraphLike,
+    frontier_masks: jnp.ndarray,
+    xb: jnp.ndarray,
+    *,
+    monoid: str = "min",
+    map_fn: Callable = _identity_map,
+    edge_active: jnp.ndarray | None = None,
+    chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
+):
+    """Batched EDGEMAPCHUNKED over the streaming kernel: B queries, one
+    compressed-tile read per live block.
+
+    The live set is the UNION of the per-lane frontiers' blocks (any lane
+    owning a block keeps it live), compacted once; each chunk is decoded by
+    the frontier-sparse Pallas kernel exactly once and fanned across the B
+    lanes — lanes for which a block is dead contribute the monoid identity
+    at its real target rows, the same identity-contribution discipline as
+    ``edgemap_dense_batched``.  Per-lane results equal the single-query
+    ``edgemap_chunked(streamed=True)`` runs exactly for int/min/max/or
+    state; float sums may differ in association order (allclose), exactly
+    like the dense batched path's segment-reduce.  NVRAM-side reads are the
+    union live blocks, once — not B times, and never NB.
+    """
+    n, NB, FB = g.n, g.num_blocks, g.block_size
+    B = xb.shape[0]
+    C = min(chunk_blocks, NB)
+    nchunks = -(-NB // C)
+    ident = monoid_identity(monoid, xb.dtype)
+
+    frontier_blk = jnp.take(
+        frontier_masks, g.block_src, axis=1, mode="fill", fill_value=False
+    )                                                   # (B, NB)
+    blk_any = jnp.any(frontier_blk, axis=0)             # union live set
+    idx, k = compact_mask(blk_any, fill=NB)
+    idx = jnp.pad(idx, (0, nchunks * C - NB), constant_values=NB)
+
+    stream_tile = _streaming_decoder(g, edge_active)
+    assert stream_tile is not None, "caller guards on _streaming_decoder"
+
+    out0 = jnp.full((n + 1, B), ident, dtype=xb.dtype)
+    if monoid == "or":
+        out0 = jnp.zeros((n + 1, B), dtype=bool)
+    touched0 = jnp.zeros((n + 1, B), dtype=jnp.int32)
+
+    def body(state):
+        i, out, touched = state
+        bids = lax.dynamic_slice(idx, (i * C,), (C,))
+        dsts, ws = stream_tile(bids)                    # decoded ONCE for all B
+        srcs = _gather_rows(g.block_src, bids, n)       # (C,)
+        act_sh = dsts < n                               # shared: filter folded
+        lane_blk = jnp.take(
+            frontier_masks, srcs, axis=1, mode="fill", fill_value=False
+        )                                               # (B, C) — per-lane live
+        xs = jnp.take(xb, srcs, axis=1, mode="fill", fill_value=ident)  # (B, C)
+        xs = jnp.broadcast_to(xs[:, :, None], (B, C, FB))
+        vals = map_fn(xs, ws[None])
+        act = lane_blk[:, :, None] & act_sh[None]       # (B, C, FB)
+        vals = jnp.where(act, vals, ident).reshape(B, C * FB)
+        ids = jnp.where(act_sh, dsts, n).reshape(-1)    # shared scatter routing
+        out = _combine(monoid, out, segment_reduce(vals.T, ids, n + 1, monoid))
+        touched = jnp.maximum(
+            touched,
+            jax.ops.segment_max(
+                act.reshape(B, -1).T.astype(jnp.int32), ids, num_segments=n + 1
+            ),
+        )
+        return i + 1, out, touched
+
+    def cond(state):
+        i, _, _ = state
+        return (i * C < k) & (i < nchunks)
+
+    _, out, touched = lax.while_loop(cond, body, (jnp.int32(0), out0, touched0))
+    return out[:n].T, touched[:n].T > 0
+
+
 def edgemap_reduce_batched(
     g: GraphLike,
     frontier_masks: jnp.ndarray,
@@ -376,11 +528,13 @@ def edgemap_reduce_batched(
     dense_frac = 20 if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
     if xb.ndim != 2:
-        # feature-dim vertex state: fall back to the vmapped bodies
+        # feature-dim vertex state: fall back to the vmapped bodies (the
+        # streamed kernel path is not vmapped — plain sparse instead)
+        vmode = "sparse" if mode == "sparse_streamed" else mode
         return jax.vmap(
             lambda fm, xv: edgemap_reduce(
                 g, fm, xv, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
-                mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+                mode=vmode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
             )
         )(frontier_masks, xb)
     if mode == "dense":
@@ -395,6 +549,13 @@ def edgemap_reduce_batched(
             chunk_blocks=chunk_blocks,
         )
 
+    if mode == "sparse_streamed":
+        if _streaming_decoder(g, edge_active) is not None:
+            return edgemap_chunked_batched_streamed(
+                g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
+                edge_active=edge_active, chunk_blocks=chunk_blocks,
+            )
+        return jax.vmap(sparse_one)(frontier_masks, xb)
     if mode == "sparse":
         return jax.vmap(sparse_one)(frontier_masks, xb)
     # auto: per-lane Beamer predicate.  When the whole batch agrees (always

@@ -53,9 +53,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .compressed import CompressedCSR
+import numpy as np
+
+from .compressed import CompressedCSR, exception_dense
 from .csr import CSRGraph, graph_spec, sharded_block_counts
-from .graph_filter import edge_active_words, unpack_word_bits
+from .graph_filter import edge_active_words
 
 
 @partial(
@@ -106,7 +108,7 @@ class ShardedGraph:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["words"],
+    data_fields=["words", "live_ids"],
     meta_fields=["num_shards"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -119,14 +121,100 @@ class ShardedEdgeActive:
     :func:`shard_edge_active` / :meth:`ExecutionPlan.prepare`; consumed by
     the sharded edgeMap executor, which partitions the leading dimension
     across the mesh and unpacks locally in each ``shard_map`` body.
+
+    ``live_ids`` (optional) records a live-block compaction
+    (``ExecutionPlan.prepare(..., compact_live=True)`` /
+    :func:`compact_live_blocks`): int32[num_shards, blocks_per_shard] of
+    *original* block ids, padded with the pre-compaction block count — row
+    j of shard s's words masks original block ``live_ids[s, j]``.  The
+    executor never needs it (a compacted graph is just a smaller block
+    set); it exists so cost models and tests can audit exactly which NVRAM
+    blocks each shard streams.
     """
 
     words: jnp.ndarray
     num_shards: int
+    live_ids: jnp.ndarray | None = None
 
     @property
     def blocks_per_shard(self) -> int:
         return self.words.shape[1]
+
+
+def compact_live_blocks(g, edge_active):
+    """Drop dead blocks from a backend under a long-lived filter (host-side).
+
+    The paper's empty-block compaction (§4.2.2), applied *physically* and —
+    crucially for the sharded path — **before the shard split**: a block
+    none of whose edge slots is active under ``edge_active`` can never
+    contribute to any edgeMap that carries this filter, so it should not
+    occupy a slot in any shard's block range, let alone stream.  Returns
+    ``(g_live, words_live, live_ids)``:
+
+    * ``g_live``     — the same backend type over only the live blocks
+      (vertex space untouched: ``n``/``m``/``degrees`` stay global, exactly
+      like ``GraphBackend.shard``'s contract).  ``CompressedCSR`` keeps its
+      per-block independence — the delta rows gather by live id and the COO
+      exception list is filtered to live blocks and re-keyed to compacted
+      positions; the whole-graph ``exception_dense`` verdict is pinned as
+      the hint, as in ``shard``.
+    * ``words_live`` — the packed filter words for the surviving rows
+      (uint32[k, F_B/32], aligned 1:1 with ``g_live``'s blocks).
+    * ``live_ids``   — int32[k] original block ids, the audit trail that
+      ``ShardedEdgeActive.live_ids`` carries through the shard split.
+
+    A filter with no live blocks degenerates to one all-dead block (shapes
+    stay non-degenerate, nothing real streams).  Host-side only (concrete
+    arrays), like every other prepare-time step.
+    """
+    words = np.asarray(edge_active_words(edge_active, g.block_size))
+    if words.shape[0] != g.num_blocks:
+        raise ValueError(
+            f"edge_active covers {words.shape[0]} blocks, graph has "
+            f"{g.num_blocks} — was the filter built for a different graph?"
+        )
+    live = np.nonzero(words.any(axis=1))[0].astype(np.int32)
+    if live.size == 0:
+        # keep shapes non-degenerate: one block, fully masked off
+        live = np.zeros(1, np.int32)
+        words = np.zeros_like(words)
+    live_ids = jnp.asarray(live)
+    words_live = jnp.asarray(words[live])
+    if isinstance(g, CompressedCSR):
+        eb = np.asarray(g.exc_block)
+        keep = np.isin(eb, live)
+        keep_idx = jnp.asarray(np.nonzero(keep)[0])
+        pos = np.full(g.num_blocks + 1, -1, np.int32)
+        pos[live] = np.arange(live.size, dtype=np.int32)
+        g_live = dataclasses.replace(
+            g,
+            block_first=g.block_first[live_ids],
+            deltas=g.deltas[live_ids],
+            valid_count=g.valid_count[live_ids],
+            exc_block=jnp.asarray(pos[eb[keep]]),
+            exc_slot=g.exc_slot[keep_idx],
+            exc_value=g.exc_value[keep_idx],
+            block_src=g.block_src[live_ids],
+            num_blocks=int(live.size),
+            n_exceptions=int(keep.sum()),
+            block_weights=(
+                None if g.block_weights is None else g.block_weights[live_ids]
+            ),
+            exception_dense_hint=exception_dense(g),
+        )
+    elif isinstance(g, CSRGraph):
+        NB, FB = g.num_blocks, g.block_size
+        g_live = dataclasses.replace(
+            g,
+            block_src=g.block_src[live_ids],
+            edge_src=g.edge_src.reshape(NB, FB)[live_ids].reshape(-1),
+            edge_dst=g.edge_dst.reshape(NB, FB)[live_ids].reshape(-1),
+            edge_w=g.edge_w.reshape(NB, FB)[live_ids].reshape(-1),
+            num_blocks=int(live.size),
+        )
+    else:
+        raise TypeError(f"cannot compact {type(g).__name__}")
+    return g_live, words_live, live_ids
 
 
 def shard_edge_active(
@@ -186,7 +274,10 @@ class ExecutionPlan:
                   report what actually ran)
     strategy    — default edgeMap mode when the call site doesn't pass one:
                   'dense' (pull over all blocks), 'sparse' (chunked over
-                  frontier-owned blocks), 'auto' (Beamer direction opt.)
+                  frontier-owned blocks), 'sparse_streamed' (chunked with
+                  the frontier-sparse Pallas decode: only live compressed
+                  tiles stream HBM→VMEM; non-compressed backends fall back
+                  to 'sparse'), 'auto' (Beamer direction opt.)
     reduce_mode — cross-shard combine for the sum monoid: 'flat' psums the
                   O(n) vector over every shard axis; 'hierarchical'
                   reduce-scatters along the fastest axis first (wire bytes
@@ -229,7 +320,7 @@ class ExecutionPlan:
             return mode
         return self.strategy
 
-    def prepare(self, g, edge_active=None):
+    def prepare(self, g, edge_active=None, *, compact_live: bool = False):
         """Shard + stack + place a graph for this plan (identity off-mesh).
 
         Host-side (concrete arrays only): call once per graph, outside jit,
@@ -243,7 +334,32 @@ class ExecutionPlan:
         unchanged.  Filters that mutate per round don't need this: the
         sharded executor normalizes raw masks in-trace; ``prepare`` is the
         ahead-of-time placement path for long-lived filters.
+
+        ``compact_live=True`` (requires ``edge_active``) applies
+        :func:`compact_live_blocks` **before the shard split**: blocks with
+        no active edge under this filter are dropped from the block set
+        entirely, so they never occupy a slot in any shard's range and
+        never stream — the shards partition the *live* blocks, and the
+        returned ``ShardedEdgeActive.live_ids`` records which original
+        block each shard row came from.  Off-mesh it returns the compacted
+        ``(graph, words)`` pair, the single-device form of the same read
+        saving.  Every edgeMap result is unchanged (a dead block only ever
+        contributed masked-off slots); only the filter baked in here must
+        be the one the rounds run with.
         """
+        if compact_live:
+            if edge_active is None:
+                raise ValueError("compact_live=True requires edge_active")
+            if isinstance(g, (ShardedGraph, ShardedEdgeActive)) or isinstance(
+                edge_active, ShardedEdgeActive
+            ):
+                raise ValueError(
+                    "compact_live must run before the shard split — pass the "
+                    "un-sharded graph and filter"
+                )
+            orig_nb = g.num_blocks
+            g, words, live_ids = compact_live_blocks(g, edge_active)
+            edge_active = words
         if not self.is_sharded:
             return g if edge_active is None else (g, edge_active)
         if isinstance(g, ShardedGraph):
@@ -273,10 +389,21 @@ class ExecutionPlan:
                 num_shards=self.num_shards,
                 num_blocks=gs.orig_num_blocks,
             )
+        if compact_live:
+            # audit trail: original block id behind each shard row (pad rows
+            # carry the pre-compaction block count, an always-dead sentinel)
+            per = gs.blocks_per_shard
+            lid = jnp.pad(
+                live_ids,
+                (0, per * self.num_shards - live_ids.shape[0]),
+                constant_values=orig_nb,
+            ).reshape(self.num_shards, per)
+            edge_active = dataclasses.replace(edge_active, live_ids=lid)
         sharding = NamedSharding(self.mesh, P(self.axes))
         edge_active = ShardedEdgeActive(
             words=jax.device_put(edge_active.words, sharding),
             num_shards=edge_active.num_shards,
+            live_ids=edge_active.live_ids,
         )
         return gs, edge_active
 
@@ -441,8 +568,11 @@ def _sharded_edgemap_call(
         g_local = jax.tree.map(lambda a: a[0], sg.shards)
         kwargs = {} if map_fn is None else {"map_fn": map_fn}
         if rest:
-            # shard-local filter words → bool (blocks_per_shard, F_B) view
-            kwargs["edge_active"] = unpack_word_bits(rest[0].words[0])
+            # shard-local packed filter words, passed through verbatim:
+            # every edgeMap consumer normalizes (dense/sparse unpack once,
+            # the streamed kernel wants exactly these words — no
+            # unpack→repack round trip)
+            kwargs["edge_active"] = rest[0].words[0]
         out, touched = local_reduce(
             g_local,
             fm,

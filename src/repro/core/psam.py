@@ -133,6 +133,44 @@ class PSAMCost:
         # side does not
         self.small_ops += batch * (3 * g.n + (num_shards - 1) * g.n)
 
+    def charge_edgemap_sparse(
+        self,
+        g,
+        live_blocks: int,
+        *,
+        batch: int = 1,
+        num_shards: int = 1,
+        tile_blocks: int = 1,
+    ):
+        """One frontier-sparse STREAMED edgeMap round (``sparse_streamed``).
+
+        This is the PSAM read model the chunked-mode kernel implements:
+        large-memory bytes are charged for the **streamed (live) blocks
+        only** — the ``ceil(live / TB)`` scalar-prefetched chunk launches of
+        ``tile_blocks`` blocks each (the last chunk's pad rows land on the
+        all-sentinel row, which is one block's worth of bytes total, charged
+        here as part of the rounding) — never for the dead blocks, and never
+        proportional to NB.  ``live_blocks`` is the frontier-owned block
+        count (sparse frontier) or the filter's live-block popcount
+        (``compact_live_blocks`` sharding): whichever produced the compacted
+        id list the kernel's ``PrefetchScalarGridSpec`` walks.
+
+        Sharded rounds split the live list block-range-wise, so each shard
+        rounds its own chunk count up (a shard with any live block streams
+        at least one chunk).  The compacted id list itself is O(n) words of
+        small memory (``compact_mask``), charged alongside the per-round
+        O(batch·n) vertex state and the O(batch·n)-per-boundary combine —
+        the small-memory side is identical to the dense batched round; only
+        the NVRAM side shrinks with the frontier.
+        """
+        tb = max(tile_blocks, 1)
+        per_shard_live = -(-int(live_blocks) // max(num_shards, 1))
+        per_shard_streamed = -(-per_shard_live // tb) * tb
+        self.large_reads += _block_read_words(g, per_shard_streamed * num_shards)
+        # the compacted live-id list (compact_mask over NB block slots)
+        self.small_ops += g.num_blocks
+        self.small_ops += batch * (3 * g.n + (num_shards - 1) * g.n)
+
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,
         # writes only bits + degrees (small memory)

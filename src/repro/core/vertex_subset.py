@@ -38,19 +38,23 @@ class VertexSubset:
 
 
 def from_indices(n: int, idx) -> VertexSubset:
+    """Frontier from a vertex-id list (out-of-range ids drop silently)."""
     idx = jnp.asarray(idx, dtype=jnp.int32).reshape(-1)
     mask = jnp.zeros(n, dtype=bool).at[idx].set(True, mode="drop")
     return VertexSubset(mask=mask, n=n)
 
 
 def from_mask(mask) -> VertexSubset:
+    """Frontier from an existing bool[n] membership mask (no copy of n)."""
     mask = jnp.asarray(mask, dtype=bool)
     return VertexSubset(mask=mask, n=mask.shape[0])
 
 
 def full(n: int) -> VertexSubset:
+    """The all-vertices frontier (dense passes, e.g. PageRank rounds)."""
     return VertexSubset(mask=jnp.ones(n, dtype=bool), n=n)
 
 
 def empty(n: int) -> VertexSubset:
+    """The empty frontier (the loop-termination fixpoint)."""
     return VertexSubset(mask=jnp.zeros(n, dtype=bool), n=n)

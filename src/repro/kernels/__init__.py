@@ -7,8 +7,10 @@ Each kernel directory contains:
 """
 from .compressed_spmv import (
     compressed_block_spmv,
+    compressed_chunked_stream_tile,
     compressed_spmv_vertex,
     compressed_spmv_vertex_batched,
+    compressed_spmv_vertex_chunked,
 )
 from .decode_attention import decode_attention
 from .edge_block_spmv import edge_block_spmv, spmv_vertex, spmv_vertex_batched
@@ -20,8 +22,10 @@ __all__ = [
     "spmv_vertex",
     "spmv_vertex_batched",
     "compressed_block_spmv",
+    "compressed_chunked_stream_tile",
     "compressed_spmv_vertex",
     "compressed_spmv_vertex_batched",
+    "compressed_spmv_vertex_chunked",
     "embedding_bag",
     "filter_pack",
     "decode_attention",

@@ -1,14 +1,23 @@
 from .ops import (
     compressed_block_spmv,
+    compressed_chunked_stream_tile,
     compressed_spmv_vertex,
     compressed_spmv_vertex_batched,
+    compressed_spmv_vertex_chunked,
 )
-from .ref import compressed_block_spmv_ref, compressed_spmv_vertex_ref
+from .ref import (
+    compressed_block_spmv_ref,
+    compressed_chunked_spmv_ref,
+    compressed_spmv_vertex_ref,
+)
 
 __all__ = [
     "compressed_block_spmv",
+    "compressed_chunked_stream_tile",
     "compressed_spmv_vertex",
     "compressed_spmv_vertex_batched",
+    "compressed_spmv_vertex_chunked",
     "compressed_block_spmv_ref",
+    "compressed_chunked_spmv_ref",
     "compressed_spmv_vertex_ref",
 ]

@@ -35,6 +35,18 @@ delta decode runs once; only the gather and masked reduction fan out across
 the B vertex-state columns.  The compressed edge-byte reads (the scarce
 NVRAM resource) are thus paid once per sweep instead of once per query.
 Output grows a trailing query axis: ``(NB, B)``.
+
+Chunked (frontier-sparse) mode: ``compressed_chunked_spmv_pallas`` is the
+EDGEMAPCHUNKED analogue of the dense grid above.  Instead of walking every
+block, the grid is driven by ``pltpu.PrefetchScalarGridSpec`` whose
+scalar-prefetched operand is the *compacted live block-id list* (the
+``compact_mask`` of frontier-owned blocks): every BlockSpec ``index_map``
+indexes through it (``lambda i, ids: (ids[i], 0)``), so only live delta /
+bitmask / weight tiles move HBM→VMEM.  One launch covers one chunk of
+``TB`` ids; the caller's chunk loop sizes the launch count to
+``ceil(k / TB)`` (k = live blocks), and out-of-range ids (the pad of the
+last chunk) land on an all-sentinel row appended behind the real blocks —
+streamed bytes are proportional to the live blocks, never to NB.
 """
 from __future__ import annotations
 
@@ -43,6 +55,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ...core.graph_filter import unpack_word_bits
 
@@ -196,3 +209,191 @@ def compressed_block_spmv_pallas(
         interpret=interpret,
     )(*operands)
     return out[:NB]
+
+
+def _chunked_kernel(
+    ids_ref,
+    *refs,
+    n: int,
+    emit: str,
+    has_x: bool,
+    has_bits: bool,
+    has_active: bool,
+    has_weights: bool,
+    batched: bool,
+):
+    """One live block per program.  ``ids_ref`` is the scalar-prefetched
+    compacted block-id list — the BlockSpec index_maps have already steered
+    this program's delta/bitmask/weight tiles to row ``ids[i]``, so the body
+    is the same fused decode as ``_kernel``, minus any knowledge of NB."""
+    del ids_ref  # consumed entirely by the index_maps
+    refs = list(refs)
+    x_ref = refs.pop(0) if has_x else None
+    first_ref = refs.pop(0)
+    deltas_ref = refs.pop(0)
+    vc_ref = refs.pop(0)
+    bits_ref = refs.pop(0) if has_bits else None
+    act_ref = refs.pop(0) if has_active else None
+    w_ref = refs.pop(0) if has_weights else None
+
+    first = first_ref[...]        # (1,)    int32
+    deltas = deltas_ref[...]      # (1, FB) uint16 — ONE live block's tile
+    vc = vc_ref[...]              # (1,)    int32
+
+    d = deltas.astype(jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(lane == 0, 0, d)
+    dst = first[:, None] + jnp.cumsum(d, axis=1)
+
+    mask = lane < vc[:, None]
+    if bits_ref is not None:
+        mask = mask & unpack_word_bits(bits_ref[...])
+    if act_ref is not None:
+        mask = mask & unpack_word_bits(act_ref[...])
+
+    if emit == "decode":
+        dst_out_ref, w_out_ref = refs
+        dst_out_ref[...] = jnp.where(mask & (dst < jnp.int32(n)), dst, jnp.int32(n))
+        w_out_ref[...] = (
+            w_ref[...] if w_ref is not None else jnp.ones(deltas.shape, jnp.float32)
+        )
+        return
+
+    out_ref = refs[-1]
+    x = x_ref[...]
+    safe = jnp.where(mask & (dst < jnp.int32(n)), dst, 0)
+    if batched:
+        xv = jnp.take(x, safe.reshape(-1), axis=1).reshape(
+            x.shape[0], *safe.shape
+        )                         # (B, 1, FB)
+        if w_ref is not None:
+            xv = xv * w_ref[...][None]
+        contrib = jnp.where(mask[None], xv, jnp.zeros((), x.dtype))
+        out_ref[...] = jnp.sum(contrib, axis=2).T  # (1, B)
+        return
+    xv = x[safe]
+    if w_ref is not None:
+        xv = xv * w_ref[...]
+    contrib = jnp.where(mask, xv, jnp.zeros((), x.dtype))
+    out_ref[...] = jnp.sum(contrib, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "emit", "interpret"))
+def compressed_chunked_spmv_pallas(
+    x: jnp.ndarray | None,         # (n_pad,) / (B, n_pad) for "sums"; None for "decode"
+    ids: jnp.ndarray,              # (C,) int32 — compacted live block ids (pad: >= NB)
+    block_first: jnp.ndarray,      # (NB,) int32
+    deltas: jnp.ndarray,           # (NB, FB) uint16
+    valid_count: jnp.ndarray,      # (NB,) uint16/int32
+    bits: jnp.ndarray | None = None,          # (NB, FB//32) uint32 graphFilter
+    edge_active: jnp.ndarray | None = None,   # (NB, FB//32) uint32 traversal mask
+    block_weights: jnp.ndarray | None = None,  # (NB, FB) f32, uncompressed
+    *,
+    n: int,
+    emit: str = "sums",
+    interpret: bool = True,
+):
+    """Frontier-sparse chunked mode: stream ONLY the blocks named by ``ids``.
+
+    The grid is one program per entry of ``ids`` (one chunk of a compacted
+    live-block list, ``compact_mask`` of the frontier-owned blocks) under a
+    ``pltpu.PrefetchScalarGridSpec``: ``ids`` is the scalar-prefetched
+    operand and every edge-side BlockSpec indexes through it
+    (``lambda i, ids: (ids[i], 0)``), so the delta / bitmask / weight tiles
+    of dead blocks are never moved HBM→VMEM.  Ids ≥ NB (the ``compact_mask``
+    fill of the last chunk's pad) are clamped onto an all-sentinel row
+    appended behind the real blocks: ``valid_count`` 0, first target ``n`` —
+    it decodes to nothing, in either emit mode.
+
+    ``emit``:
+
+    * ``"sums"``   — per-live-block partial SpMV sums, ``(C,)`` (or ``(C, B)``
+      when ``x`` is a ``(B, n_pad)`` query batch: the tile streams and
+      decodes once, the gather fans across B — the serving amortization,
+      chunked).
+    * ``"decode"`` — the chunk pool of EDGEMAPCHUNKED: masked decoded
+      targets ``(C, FB)`` int32 (inactive slots = sentinel ``n``) plus the
+      aligned weight tile ``(C, FB)`` f32.  This is the variant the core
+      ``edgemap_chunked`` streamed path consumes — decode in-kernel, monoid
+      scatter outside, peak intermediate C × F_B small-memory words.
+
+    Exception blocks (ESCAPE deltas) decode wrong here, exactly as in the
+    dense-grid kernel; the wrapper patches them keyed on the gathered ids
+    (``ops._patch_exception_tile`` / the per-block sum fixup).
+    """
+    if emit not in ("sums", "decode"):
+        raise ValueError(f"emit must be 'sums' or 'decode', got {emit!r}")
+    NB, FB = deltas.shape
+    C = ids.shape[0]
+    W = FB // 32
+    batched = emit == "sums" and x.ndim == 2
+
+    # the all-sentinel row: out-of-range ids (chunk pad) land here and
+    # decode to nothing (valid_count 0; first target = n for belt-and-braces)
+    first_s = jnp.pad(block_first, (0, 1), constant_values=n)
+    deltas_s = jnp.pad(deltas, ((0, 1), (0, 0)))
+    vc_s = jnp.pad(valid_count.astype(jnp.int32), (0, 1))
+    ids = jnp.minimum(ids.astype(jnp.int32), jnp.int32(NB))
+
+    in_specs = []
+    operands = []
+    if emit == "sums":
+        in_specs.append(
+            pl.BlockSpec(x.shape, lambda i, ids: (0, 0))
+            if batched
+            else pl.BlockSpec((x.shape[0],), lambda i, ids: (0,))
+        )
+        operands.append(x)
+    in_specs += [
+        pl.BlockSpec((1,), lambda i, ids: (ids[i],)),       # first targets
+        pl.BlockSpec((1, FB), lambda i, ids: (ids[i], 0)),  # delta stream
+        pl.BlockSpec((1,), lambda i, ids: (ids[i],)),       # valid counts
+    ]
+    operands += [first_s, deltas_s, vc_s]
+    if bits is not None:
+        in_specs.append(pl.BlockSpec((1, W), lambda i, ids: (ids[i], 0)))
+        operands.append(jnp.pad(bits, ((0, 1), (0, 0))))
+    if edge_active is not None:
+        in_specs.append(pl.BlockSpec((1, W), lambda i, ids: (ids[i], 0)))
+        operands.append(jnp.pad(edge_active, ((0, 1), (0, 0))))
+    if block_weights is not None:
+        in_specs.append(pl.BlockSpec((1, FB), lambda i, ids: (ids[i], 0)))
+        operands.append(jnp.pad(block_weights, ((0, 1), (0, 0))))
+
+    if emit == "decode":
+        out_specs = (
+            pl.BlockSpec((1, FB), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1, FB), lambda i, ids: (i, 0)),
+        )
+        out_shape = (
+            jax.ShapeDtypeStruct((C, FB), jnp.int32),
+            jax.ShapeDtypeStruct((C, FB), jnp.float32),
+        )
+    elif batched:
+        out_specs = pl.BlockSpec((1, x.shape[0]), lambda i, ids: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((C, x.shape[0]), x.dtype)
+    else:
+        out_specs = pl.BlockSpec((1,), lambda i, ids: (i,))
+        out_shape = jax.ShapeDtypeStruct((C,), x.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _chunked_kernel,
+            n=n,
+            emit=emit,
+            has_x=emit == "sums",
+            has_bits=bits is not None,
+            has_active=edge_active is not None,
+            has_weights=block_weights is not None,
+            batched=batched,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ids, *operands)

@@ -1,8 +1,23 @@
-"""jit'd public wrappers around the compressed_spmv Pallas kernel."""
+"""jit'd public wrappers around the compressed_spmv Pallas kernel.
+
+Three entry points, one per streaming discipline:
+
+* ``compressed_spmv_vertex`` (+``_batched``) — the dense grid: every block's
+  compressed tile streams HBM→VMEM once, fused decode + masked SpMV, with
+  the rare ESCAPE blocks recomputed exactly and patched afterwards.
+* ``compressed_spmv_vertex_chunked`` — the frontier-sparse chunked mode:
+  only blocks owned by ``frontier`` vertices stream, driven by the
+  scalar-prefetched compacted live-id list (``PrefetchScalarGridSpec``);
+  handles single and (B, n)-batched vertex state.
+* ``compressed_chunked_stream_tile`` — the chunk-pool decoder behind the
+  core ``edgemap_chunked`` streamed path: one chunk of live ids in, exact
+  masked targets + aligned weights out, exceptions patched by gathered id.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from ...core.compressed import CompressedCSR, decode_block, exception_dense
 from ...core.graph_filter import (
@@ -11,8 +26,12 @@ from ...core.graph_filter import (
     make_filter,
     unpack_word_bits,
 )
-from .compressed_spmv import compressed_block_spmv_pallas
-from .ref import compressed_block_spmv_ref
+from ...core.primitives import compact_mask
+from .compressed_spmv import (
+    compressed_block_spmv_pallas,
+    compressed_chunked_spmv_pallas,
+)
+from .ref import compressed_block_spmv_ref, compressed_chunked_spmv_ref
 
 
 def compressed_block_spmv(
@@ -28,6 +47,14 @@ def compressed_block_spmv(
     interpret: bool = True,
     tile_blocks: int = 8,
 ):
+    """Raw kernel entry: per-block partial sums off the compressed stream.
+
+    The array-level form of ``compressed_spmv_vertex`` without the owner
+    reduction or the exception fixup — callers holding the delta-packed
+    arrays directly (benchmarks, tests) get the fused decode+SpMV exactly
+    as the kernel computes it, ESCAPE blocks decoded wrong on purpose.
+    ``x`` may be (n_pad,) or a (B, n_pad) query batch (→ out (NB, B)).
+    """
     return compressed_block_spmv_pallas(
         x,
         block_first,
@@ -144,6 +171,177 @@ def compressed_spmv_vertex(
             fixed = _exception_block_sums(c, x, bits, w, active)
             per_block = per_block.at[c.exc_block].set(fixed)
     return jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
+
+
+def _exception_row_targets(c: CompressedCSR, active=None):
+    """Exact decoded targets for every exception-list block, active-masked.
+
+    (NE, FB) int32 with inactive slots already at the sentinel ``n`` — the
+    same folding the chunked kernel applies in-VMEM, so a patched row is
+    indistinguishable from a correctly decoded one."""
+    exact = jax.vmap(lambda b: decode_block(c, b))(c.exc_block)
+    if active is not None:
+        abits = unpack_word_bits(jnp.take(active, c.exc_block, axis=0))
+        exact = jnp.where(abits, exact, jnp.int32(c.n))
+    return exact
+
+
+def _rows_for_ids(ids: jnp.ndarray, exc_block: jnp.ndarray, num_blocks: int):
+    """For each exception, the row of ``ids`` holding its block (drop: len).
+
+    ``ids`` rows are unique real block ids (compacted indices) plus sentinel
+    pad, so argmax-over-match routes each exception to at most one row —
+    the existing per-block patch discipline, keyed on the gathered ids.
+    Exception rows with ``exc_block >= num_blocks`` are the padding of a
+    sharded graph's stacked exception list; without the in-range guard they
+    would match the chunk's own sentinel pad (both use the block count as
+    fill) and ghost-patch the all-sentinel row."""
+    match = (ids[:, None] == exc_block[None, :]) & (
+        exc_block[None, :] < jnp.int32(num_blocks)
+    )                                                          # (C, NE)
+    hit = jnp.any(match, axis=0)
+    return jnp.where(hit, jnp.argmax(match, axis=0), ids.shape[0])
+
+
+def compressed_chunked_stream_tile(
+    c: CompressedCSR,
+    ids: jnp.ndarray,
+    edge_active=None,
+    *,
+    interpret: bool = True,
+    exact_rows: jnp.ndarray | None = None,
+):
+    """Stream + decode ONE chunk of live blocks: (dst (C, FB), w (C, FB)).
+
+    The Pallas kernel moves only the delta/bitmask/weight tiles named by
+    ``ids`` (ids ≥ num_blocks decode to all-sentinel rows), fusing the
+    cumsum decode and the packed ``edge_active`` masking in-VMEM; ESCAPE
+    blocks are then recomputed exactly and patched keyed on the gathered
+    ids.  This is the tile view the core ``edgemap_chunked`` streamed path
+    consumes in place of ``tile_block_view`` — same contract, but the dead
+    blocks' compressed bytes are never read.
+
+    ``exact_rows``: optionally the precomputed
+    ``_exception_row_targets(c, words)`` — it is id-independent, so a
+    chunk-loop caller computes it ONCE outside the loop and passes it per
+    chunk instead of re-decoding every exception block per iteration
+    (``_streaming_decoder`` in ``repro.core.edgemap`` does exactly this).
+    """
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, c.block_size)
+    )
+    w = c.block_weights if c.weighted else None
+    dst, ws = compressed_chunked_spmv_pallas(
+        None,
+        ids,
+        c.block_first,
+        c.deltas,
+        c.valid_count,
+        None,
+        active,
+        w,
+        n=c.n,
+        emit="decode",
+        interpret=interpret,
+    )
+    if c.n_exceptions:
+        exact = (
+            _exception_row_targets(c, active) if exact_rows is None else exact_rows
+        )
+        rows = _rows_for_ids(ids, c.exc_block, c.num_blocks)
+        dst = dst.at[rows].set(exact, mode="drop")
+    return dst, ws
+
+
+def compressed_spmv_vertex_chunked(
+    c: CompressedCSR,
+    x: jnp.ndarray,
+    frontier: jnp.ndarray,
+    f: GraphFilter | None = None,
+    *,
+    edge_active=None,
+    tile_blocks: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Frontier-sparse SpMV: sums over ONLY the frontier-owned blocks.
+
+    ``out[v] = Σ_{(v,u) active} w_vu · x[u]`` for frontier vertices v, 0
+    elsewhere — the per-vertex pull restricted to the blocks the frontier
+    touches, which is the PSAM read-volume claim: bytes streamed off the
+    compressed array are proportional to the live blocks, not to NB.
+
+    Execution: the live block ids are compacted once (``compact_mask`` over
+    ``frontier[block_src]``, an O(n)-word list) and walked in chunks of
+    ``tile_blocks``; each chunk is one ``PrefetchScalarGridSpec`` launch of
+    ``compressed_chunked_spmv_pallas`` (so the streamed volume is the
+    padded chunk count, ``ceil(k / TB) · TB`` blocks), and the chunk loop
+    is a dynamic-trip-count ``while_loop`` — chunks past the live count
+    never execute.  Exception blocks are patched with the exact per-block
+    sums keyed on the gathered ids; exception-dense graphs fall back to the
+    masked exact decode (a function of exception density only, as ever).
+
+    ``x`` may be (n,) or a (B, n) query batch — the batch shares each
+    chunk's single delta-stream read, returning (B, n).  ``f`` /
+    ``edge_active`` behave exactly as in ``compressed_spmv_vertex``.
+    """
+    bits = f.bits if f is not None else make_filter(c).bits
+    active = (
+        None
+        if edge_active is None
+        else edge_active_words(edge_active, c.block_size)
+    )
+    w = c.block_weights if c.weighted else None
+    batched = x.ndim == 2
+    if exception_dense(c):
+        return compressed_chunked_spmv_ref(c, x, frontier, bits, w, active)
+
+    NB = c.num_blocks
+    TB = min(tile_blocks, NB)
+    nchunks = -(-NB // TB)
+    blk_live = jnp.take(frontier, c.block_src, mode="fill", fill_value=False)
+    idx, k = compact_mask(blk_live, fill=NB)
+    idx = jnp.pad(idx, (0, nchunks * TB - NB), constant_values=NB)
+
+    fixed = (
+        _exception_block_sums(c, x, bits, w, active) if c.n_exceptions else None
+    )  # (NE,) or (NE, B): exact sums, same masks as the kernel
+
+    out0 = jnp.zeros(
+        (c.n + 1, x.shape[0]) if batched else (c.n + 1,), x.dtype
+    )
+
+    def body(state):
+        i, out = state
+        ids = lax.dynamic_slice(idx, (i * TB,), (TB,))
+        sums = compressed_chunked_spmv_pallas(
+            x,
+            ids,
+            c.block_first,
+            c.deltas,
+            c.valid_count,
+            bits,
+            active,
+            w,
+            n=c.n,
+            emit="sums",
+            interpret=interpret,
+        )  # (TB,) or (TB, B) — only these ids' tiles were streamed
+        if fixed is not None:
+            rows = _rows_for_ids(ids, c.exc_block, c.num_blocks)
+            sums = sums.at[rows].set(fixed, mode="drop")
+        srcs = jnp.take(c.block_src, ids, mode="fill", fill_value=c.n)
+        out = out + jax.ops.segment_sum(sums, srcs, num_segments=c.n + 1)
+        return i + 1, out
+
+    def cond(state):
+        i, _ = state
+        return (i * TB < k) & (i < nchunks)
+
+    _, out = lax.while_loop(cond, body, (jnp.int32(0), out0))
+    out = out[: c.n]
+    return out.T if batched else out
 
 
 def compressed_spmv_vertex_batched(

@@ -46,3 +46,23 @@ def compressed_spmv_vertex_ref(c: CompressedCSR, x, bits, weights=None, active=N
     per_block = compressed_block_spmv_ref(c, x, bits, weights, active)
     out = jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
     return out.T if x.ndim == 2 else out
+
+
+def compressed_chunked_spmv_ref(
+    c: CompressedCSR, x, frontier, bits, weights=None, active=None
+):
+    """Oracle for the frontier-sparse chunked mode: the masked-full-stream
+    equivalent of streaming only the compacted live blocks.
+
+    ``frontier`` is the bool[n] vertex mask; a block is live iff its owner
+    is in the frontier.  Dead blocks' partial sums are zeroed — which is
+    exactly what never streaming them produces — so
+    ``compressed_spmv_vertex_chunked`` must match this bit for bit (ints)
+    on any frontier, filter, and exception pattern.  Batched ``x`` of shape
+    (B, n) returns (B, n)."""
+    per_block = compressed_block_spmv_ref(c, x, bits, weights, active)
+    blk_live = jnp.take(frontier, c.block_src, mode="fill", fill_value=False)
+    sel = blk_live[:, None] if x.ndim == 2 else blk_live
+    per_block = jnp.where(sel, per_block, jnp.zeros((), x.dtype))
+    out = jax.ops.segment_sum(per_block, c.block_src, num_segments=c.n + 1)[: c.n]
+    return out.T if x.ndim == 2 else out

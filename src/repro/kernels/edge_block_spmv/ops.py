@@ -20,6 +20,14 @@ def edge_block_spmv(
     interpret: bool = True,
     tile_blocks: int = 8,
 ):
+    """Raw kernel entry: per-block partial sums off the uncompressed stream.
+
+    ``out[b] = Σ_slot active(b,slot) · w(b,slot) · x[dst(b,slot)]`` — the
+    array-level form of ``spmv_vertex`` without the owner reduction, for
+    callers that hold the block arrays directly (benchmarks, tests).  ``x``
+    may be (n_pad,) or a (B, n_pad) query batch (→ out (NB, B));
+    ``edge_active`` is the optional packed traversal mask, ANDed in-VMEM.
+    """
     return edge_block_spmv_pallas(
         x,
         block_dst,

@@ -227,7 +227,7 @@ class QueryEngine:
         res = fn(self.prepared, *args)
         self.stats["batches"] += 1
         self.stats["served"] += k
-        self._charge(B, spec.sweeps(res))
+        self._charge(B, spec.sweeps(res), op=op, scalars=scalars)
         return {
             QueryHandle(hid, op): spec.unbatch(res, i)
             for i, (hid, _) in enumerate(chunk)
@@ -250,9 +250,56 @@ class QueryEngine:
             self._compiled[key] = fn
         return fn
 
-    def _charge(self, B: int, sweeps: int):
+    def _streamed_accounting(self, op: str, scalars: tuple) -> bool:
+        """True when the drained bucket's rounds really ran the streamed
+        frontier-sparse path AND its read model applies.
+
+        Three conditions, mirroring the execution dispatch: the plan's
+        strategy is ``sparse_streamed`` and the bucket's ``mode`` scalar
+        doesn't override it (explicit mode wins in ``resolve_mode``); the
+        backend actually streams (``CompressedCSR``, not exception-dense —
+        others fall back to plain sparse and read per lane); and the op is
+        BFS, the one traversal whose frontiers are monotone — every vertex
+        enters a lane's frontier at most once, so each block streams at
+        most ``min(B, sweeps)`` times across the whole drain (the batched
+        rounds stream the UNION of the lanes' live blocks, and divergent
+        lanes can re-include a block in different rounds).  wBFS re-buckets
+        and PPR revisits, so their streamed volume is not bounded this way;
+        they keep the dense per-sweep charge as a safe over-estimate.
+        """
+        if self.plan is None or self.plan.strategy != "sparse_streamed":
+            return False
+        if op != "bfs":
+            return False
+        if dict(scalars).get("mode", "auto") not in ("auto", "sparse_streamed"):
+            return False
+        from ..core.compressed import CompressedCSR, exception_dense
+
+        return isinstance(self.graph, CompressedCSR) and not exception_dense(
+            self.graph
+        )
+
+    def _charge(self, B: int, sweeps: int, op: str = "", scalars: tuple = ()):
         """PSAM model of one drained batch: ``sweeps`` rounds, each reading
-        the edge blocks once for all B lanes (÷B vs sequential serving)."""
+        the edge blocks once for all B lanes (÷B vs sequential serving).
+
+        When ``_streamed_accounting`` certifies the bucket ran the
+        frontier-sparse chunked kernel on monotone frontiers, the analytic
+        per-round charge is the ``min(B, sweeps) · NB / sweeps`` live share
+        (``charge_edgemap_sparse``): per lane each block streams at most
+        once, so the whole drained batch costs about ``min(B, sweeps)``
+        dense sweeps' edge bytes instead of sweeps × NB (the same
+        analytic-estimate discipline as the ``sweeps`` counts themselves;
+        at B=1 this is one dense sweep total).
+        """
         shards = self.plan.num_shards if self._mesh_key is not None else 1
-        for _ in range(max(sweeps, 1)):
+        sweeps = max(sweeps, 1)
+        if self._streamed_accounting(op, scalars):
+            live = -(-self.graph.num_blocks * min(B, sweeps) // sweeps)
+            for _ in range(sweeps):
+                self.cost.charge_edgemap_sparse(
+                    self.graph, live, batch=B, num_shards=shards
+                )
+            return
+        for _ in range(sweeps):
             self.cost.charge_edgemap_batched(self.graph, B, num_shards=shards)

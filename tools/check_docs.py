@@ -1,0 +1,122 @@
+"""Docs gate for CI: executable snippets + public-docstring audit.
+
+Two checks, both fail-loud (exit 1):
+
+1. **Snippets execute** — every ```python fenced block in ``docs/*.md`` (and
+   any extra files passed on the command line) runs top-to-bottom in one
+   fresh namespace per file, in file order, so later blocks may use earlier
+   blocks' variables — the doctest-extraction discipline, without requiring
+   >>> prompts.  Blocks whose first line is ``# doctest: skip`` are
+   illustrative only (pseudo-code, mesh-requiring examples) and are not
+   executed.
+
+2. **Public symbols are documented** — every name exported via ``__all__``
+   from ``repro.core`` and ``repro.serving`` that is a class or function
+   must have a non-empty docstring.  Data constants (e.g. ``NULL_BUCKET``)
+   and typing aliases (``GraphLike``) carry their documentation in the
+   module docstring instead and are exempt.
+
+Usage (from the repo root, CPU JAX):
+
+    PYTHONPATH=src python tools/check_docs.py            # both checks
+    PYTHONPATH=src python tools/check_docs.py --docstrings-only
+    PYTHONPATH=src python tools/check_docs.py docs/kernels.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import importlib
+import inspect
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+AUDITED_MODULES = ("repro.core", "repro.serving")
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def extract_blocks(path: str) -> list[tuple[int, str]]:
+    """(starting line number, source) for each executable ```python block."""
+    text = open(path).read()
+    blocks = []
+    for m in FENCE.finditer(text):
+        body = m.group(1)
+        first = body.lstrip().splitlines()[0] if body.strip() else ""
+        if first.startswith("# doctest: skip"):
+            continue
+        line = text[: m.start(1)].count("\n") + 1
+        blocks.append((line, body))
+    return blocks
+
+
+def run_snippets(paths: list[str]) -> list[str]:
+    failures = []
+    for path in paths:
+        ns: dict = {"__name__": f"docsnippet:{os.path.basename(path)}"}
+        for line, src in extract_blocks(path):
+            try:
+                exec(compile(src, f"{path}:{line}", "exec"), ns)  # noqa: S102
+            except Exception as e:  # noqa: BLE001 — report, don't crash
+                failures.append(f"{path}:{line}: {type(e).__name__}: {e}")
+                break  # later blocks in this file may depend on this one
+        else:
+            n = len(extract_blocks(path))
+            print(f"  {path}: {n} snippet(s) OK")
+    return failures
+
+
+def run_docstring_audit() -> list[str]:
+    failures = []
+    for modname in AUDITED_MODULES:
+        mod = importlib.import_module(modname)
+        names = getattr(mod, "__all__", None)
+        if not names:
+            failures.append(f"{modname}: no __all__ to audit")
+            continue
+        checked = 0
+        for name in names:
+            obj = getattr(mod, name, None)
+            if obj is None:
+                failures.append(f"{modname}.{name}: exported but missing")
+                continue
+            if not (inspect.isclass(obj) or inspect.isroutine(obj)):
+                continue  # constants / aliases: documented in the module doc
+            checked += 1
+            if not (inspect.getdoc(obj) or "").strip():
+                failures.append(f"{modname}.{name}: public but undocumented")
+        print(f"  {modname}: {checked} documented symbols audited")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="markdown files (default docs/*.md)")
+    ap.add_argument("--docstrings-only", action="store_true")
+    ap.add_argument("--snippets-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    failures = []
+    if not args.docstrings_only:
+        paths = args.files or sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+        if not paths:
+            failures.append("no docs/*.md found to check")
+        else:
+            print("snippets:")
+            failures += run_snippets(paths)
+    if not args.snippets_only:
+        print("docstrings:")
+        failures += run_docstring_audit()
+
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("docs checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
