@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
   table_distributed — planner: per-shard PageRank throughput, compressed vs raw
   table_serving — QueryEngine: queries/sec vs batch size B, both backends,
                   + PSAM edge-read amortization at B=8
+  table_latency — ServingService: p50/p99 latency over Poisson + bursty
+                  arrival traces, qps-vs-SLO curve, saturated-B8 vs engine
   fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
   kernels_micro — Pallas kernels vs jnp oracles
   roofline      — §Roofline terms from the dry-run artifacts (if present)
@@ -28,7 +30,7 @@ def main() -> None:
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
                    table4_filter, table5_edgemap, table_compression,
-                   table_distributed, table_serving)
+                   table_distributed, table_latency, table_serving)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -55,6 +57,11 @@ def main() -> None:
         ),
         # queries/sec vs batch size through the QueryEngine (both backends)
         "table_serving": lambda: table_serving.run(
+            n=4096 if args.full else 1024, m=32768 if args.full else 8192
+        ),
+        # deadline-driven drain loop: latency percentiles over replayed
+        # arrival traces + the saturated-B8 qps parity with the engine
+        "table_latency": lambda: table_latency.run(
             n=4096 if args.full else 1024, m=32768 if args.full else 8192
         ),
         "kernels_micro": kernels_micro.run,

@@ -16,6 +16,9 @@ from .traversal import (
     betweenness,
     bfs,
     bfs_batched,
+    traversal_cohort_active,
+    traversal_cohort_init,
+    traversal_cohort_rounds,
     wbfs,
     wbfs_batched,
     widest_path,
@@ -51,5 +54,8 @@ __all__ = ALL_PROBLEMS + [
     "wbfs_batched",
     "multi_source_bfs",
     "orientation_filter",
+    "traversal_cohort_init",
+    "traversal_cohort_rounds",
+    "traversal_cohort_active",
     "ALL_PROBLEMS",
 ]

@@ -251,6 +251,182 @@ def wbfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
     return dist
 
 
+def _cohort_relax(xs, w):
+    """wBFS relaxation for cohort lanes: int32 saturating xs + w."""
+    wi = w.astype(jnp.int32)
+    return jnp.where(xs >= INF_I32 - jnp.int32(1 << 24), INF_I32, xs + wi)
+
+
+def _bucket_of(dist, settled):
+    """Per-vertex bucket id for the dense semi-eager wBFS bucketing."""
+    return jnp.where(
+        settled | (dist == INF_I32),
+        NULL_BUCKET,
+        jnp.minimum(dist, NULL_BUCKET - 1),
+    )
+
+
+def traversal_cohort_init(g: GraphLike, ops, sources):
+    """Build the fused BFS+wBFS cohort state for one serving drain.
+
+    ``ops`` is a sequence of ``"bfs"`` / ``"wbfs"`` lane kinds and
+    ``sources`` the matching int vertex ids; a source of ``-1`` makes an
+    inert padding lane (empty root set — it never frontiers, is never
+    active, and costs zero rounds of attribution).  Returns
+    ``(state, weighted)``: ``state`` is the pytree that
+    :func:`traversal_cohort_rounds` advances — ``parents`` / ``levels``
+    int32[B, n] (BFS lanes), ``dist`` int32[B, n] / ``settled`` bool[B, n]
+    (wBFS lanes), ``frontier`` bool[B, n] (the BFS "newly" set), and the
+    scalar round counter ``rnd`` — and ``weighted`` is the static tuple of
+    per-lane bools that selects each lane's per-edge map (the
+    ``map_lanes`` argument of the shared sweep).
+
+    The serving scheduler repacks this state between quanta — slicing the
+    leading B axis down to the still-active lanes — which is legal because
+    every batched edgeMap is per-lane independent (the bit-parity contract
+    ``tests/test_serving.py`` locks in).
+    """
+    n = g.n
+    ops = tuple(ops)
+    for op in ops:
+        if op not in ("bfs", "wbfs"):
+            raise ValueError(f"cohort lanes must be 'bfs' or 'wbfs', got {op!r}")
+    srcs = jnp.asarray(sources, jnp.int32)
+    B = len(ops)
+    if srcs.shape != (B,):
+        raise ValueError(f"sources must be int[{B}], got shape {srcs.shape}")
+    weighted = tuple(op == "wbfs" for op in ops)
+    wvec = jnp.asarray(weighted)
+    roots = jnp.arange(n, dtype=jnp.int32)[None, :] == srcs[:, None]
+    broots = roots & ~wvec[:, None]
+    wroots = roots & wvec[:, None]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    idsb = jnp.broadcast_to(ids, (B, n))
+    state = {
+        "parents": jnp.where(broots, idsb, UNVISITED),
+        "levels": jnp.where(broots, 0, UNVISITED),
+        "dist": jnp.where(wroots, 0, INF_I32),
+        "settled": jnp.zeros((B, n), dtype=bool),
+        "frontier": broots,
+        "rnd": jnp.int32(0),
+    }
+    return state, weighted
+
+
+def traversal_cohort_active(state, weighted, n: int) -> jnp.ndarray:
+    """bool[B]: which cohort lanes still have work left.
+
+    A BFS lane is active while its frontier is nonempty and the round cap
+    ``rnd < n`` holds; a wBFS lane while any vertex sits in a non-NULL
+    bucket.  Activity is prefix-monotone — a drained lane can never
+    reactivate — which is what lets the serving scheduler reconstruct
+    round-r active counts from the per-lane round totals.  ``weighted``
+    is static, so single-kind cohorts skip the other kind's state scan
+    entirely (a pure-BFS cohort costs exactly ``bfs_batched``'s check).
+    """
+    b_active = jnp.any(state["frontier"], axis=1) & (state["rnd"] < n)
+    if not any(weighted):
+        return b_active
+    wvec = jnp.asarray(weighted)
+    bo = _bucket_of(state["dist"], state["settled"])
+    w_active = wvec & (jnp.min(bo, axis=1) < NULL_BUCKET)
+    if all(weighted):
+        return w_active
+    return w_active | (~wvec & b_active)
+
+
+def traversal_cohort_rounds(
+    g: GraphLike,
+    state,
+    weighted,
+    *,
+    quantum: int = 4,
+    mode: str = "auto",
+    plan=None,
+):
+    """Advance a fused BFS+wBFS cohort by up to ``quantum`` shared rounds.
+
+    One call = one jitted ``lax.while_loop`` of at most ``quantum``
+    rounds, each round ONE batched edge sweep shared by every lane:
+    wBFS lanes relax distances (``map_lanes`` selects the weighted map),
+    BFS lanes propagate candidate parent ids through the identity map —
+    both int32 min-monoid, so they fuse bit-exactly.  Stops early when
+    every lane drains.  Returns ``(state, lane_rounds, active)``:
+    ``lane_rounds`` int32[B] counts the rounds each lane was active inside
+    this call (the early-exit accounting quantum — a drained lane stops
+    being charged), ``active`` bool[B] flags lanes with work remaining.
+
+    The quantum bound is what lets the serving scheduler repack between
+    calls — narrowing B to the next power of two once lanes drain, so a
+    finished query also stops occupying a batch column.  Each lane's rows
+    stay bit-identical to its single-query ``bfs`` / ``wbfs`` run: drained
+    BFS frontiers touch nothing, drained wBFS lanes are run-gated, and the
+    per-lane independence of the batched edgeMap makes the repack slice
+    invisible to the remaining lanes.
+    """
+    n = g.n
+    if plan is not None:
+        g = plan.prepare(g)
+    weighted = tuple(bool(w) for w in weighted)
+    B = len(weighted)
+    any_w, all_w = any(weighted), all(weighted)
+    wvec = jnp.asarray(weighted)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    idsb = jnp.broadcast_to(ids, (B, n))
+    sweep_kw = {}
+    if any_w:
+        sweep_kw["map_fn"] = _cohort_relax
+        if not all_w:
+            sweep_kw["map_lanes"] = wvec
+
+    def body(carry):
+        q, st, lane_rounds = carry
+        parents, levels = st["parents"], st["levels"]
+        dist, settled = st["dist"], st["settled"]
+        frontier, rnd = st["frontier"], st["rnd"]
+        active = traversal_cohort_active(st, weighted, n)
+        bfr = frontier & (rnd < n)
+        if any_w:
+            bo = _bucket_of(dist, settled)
+            bid = jnp.min(bo, axis=1)
+            run = wvec & (bid < NULL_BUCKET)
+            members = (bo == bid[:, None]) & ~settled & run[:, None]
+            d = jnp.min(jnp.where(members, dist, INF_I32), axis=1)
+            wfr = members & (dist == d[:, None])
+            settled = settled | wfr
+            fr = jnp.where(wvec[:, None], wfr, bfr)
+            xs = jnp.where(wvec[:, None], dist, idsb)
+        else:
+            fr, xs = bfr, idsb
+        cand, touched = edgemap_reduce_batched(
+            g, fr, xs, monoid="min", mode=mode, plan=plan, **sweep_kw
+        )
+        newly = touched & (parents == UNVISITED) & ~wvec[:, None]
+        parents = jnp.where(newly, cand, parents)
+        levels = jnp.where(newly, rnd + 1, levels)
+        if any_w:
+            improve = touched & ~settled & (cand < dist) & wvec[:, None]
+            dist = jnp.where(improve, cand, dist)
+        st = {
+            "parents": parents,
+            "levels": levels,
+            "dist": dist,
+            "settled": settled,
+            "frontier": newly,
+            "rnd": rnd + 1,
+        }
+        return q + 1, st, lane_rounds + active.astype(jnp.int32)
+
+    def cond(carry):
+        q, st, _ = carry
+        return (q < quantum) & jnp.any(traversal_cohort_active(st, weighted, n))
+
+    _, state, lane_rounds = lax.while_loop(
+        cond, body, (jnp.int32(0), state, jnp.zeros(B, jnp.int32))
+    )
+    return state, lane_rounds, traversal_cohort_active(state, weighted, n)
+
+
 def bellman_ford(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     """General-weight SSSP.  Returns (dist float32[n], has_neg_cycle bool).
 

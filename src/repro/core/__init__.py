@@ -13,6 +13,8 @@ Public surface:
   GraphFilter / make_filter / pack_vertices / filter_edges — §4.2 bitset filter
   Buckets / make_buckets                  — semi-eager bucketing (App. B)
   PSAMCost                                — §3 cost accounting
+  TenantLedger / TenantLedgers            — per-tenant edge-read token buckets
+  edgemap_round_read_words                — one dense round's read quantum
 """
 from .backend import GraphBackend, GraphLike, dense_block_view, tile_block_view
 from .bucketing import NULL_BUCKET, Buckets, make_buckets
@@ -58,7 +60,7 @@ from .plan import (
     sharded_edgemap_reduce_batched,
     sharded_graph_spec,
 )
-from .psam import PSAMCost
+from .psam import PSAMCost, TenantLedger, TenantLedgers, edgemap_round_read_words
 from .vertex_subset import VertexSubset, empty, from_indices, from_mask, full
 
 __all__ = [
@@ -112,4 +114,7 @@ __all__ = [
     "make_buckets",
     "NULL_BUCKET",
     "PSAMCost",
+    "TenantLedger",
+    "TenantLedgers",
+    "edgemap_round_read_words",
 ]

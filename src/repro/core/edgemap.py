@@ -353,6 +353,7 @@ def edgemap_dense_batched(
     monoid: str = "min",
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
+    map_lanes: jnp.ndarray | None = None,
 ):
     """Dense pull pass, B queries per sweep.  Returns (out[B,n], touched[B,n]).
 
@@ -365,6 +366,13 @@ def edgemap_dense_batched(
     identity at their real target row (instead of the single-query path's
     sentinel reroute), which reduces to the same value: every lane is
     bit-identical to its own ``edgemap_dense`` run.
+
+    ``map_lanes`` (bool[B], optional) applies ``map_fn`` only on the
+    selected lanes; the rest take the identity map (``xs`` pass through
+    bit-exactly).  This is what lets heterogeneous query kinds — e.g. BFS
+    lanes (identity over candidate parents) and wBFS lanes (weighted
+    relaxation over distances) — share ONE edge sweep while each lane runs
+    its own recurrence.
     """
     n, NB, FB = g.n, g.num_blocks, g.block_size
     B = xb.shape[0]
@@ -383,6 +391,8 @@ def edgemap_dense_batched(
     xs_blk = jnp.take(xb, g.block_src, axis=1, mode="fill", fill_value=ident)
     xs = jnp.broadcast_to(xs_blk[:, :, None], (B, NB, FB)).reshape(B, -1)
     vals = map_fn(xs, block_w.reshape(-1)[None, :])
+    if map_lanes is not None:
+        vals = jnp.where(map_lanes[:, None], vals, xs)
     vals = jnp.where(act, vals, ident)
     out = segment_reduce(vals.T, ids, n + 1, monoid)[:n]          # (n, B)
     touched = (
@@ -401,9 +411,14 @@ def edgemap_chunked_batched_streamed(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
     chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
+    map_lanes: jnp.ndarray | None = None,
 ):
     """Batched EDGEMAPCHUNKED over the streaming kernel: B queries, one
     compressed-tile read per live block.
+
+    ``map_lanes`` (bool[B], optional) applies ``map_fn`` only on the
+    selected lanes (the rest pass ``xs`` through bit-exactly), exactly as
+    in ``edgemap_dense_batched`` — the cross-op serving rounds ride it.
 
     The live set is the UNION of the per-lane frontiers' blocks (any lane
     owning a block keeps it live), compacted once; each chunk is decoded by
@@ -449,6 +464,8 @@ def edgemap_chunked_batched_streamed(
         xs = jnp.take(xb, srcs, axis=1, mode="fill", fill_value=ident)  # (B, C)
         xs = jnp.broadcast_to(xs[:, :, None], (B, C, FB))
         vals = map_fn(xs, ws[None])
+        if map_lanes is not None:
+            vals = jnp.where(map_lanes[:, None, None], vals, xs)
         act = lane_blk[:, :, None] & act_sh[None]       # (B, C, FB)
         vals = jnp.where(act, vals, ident).reshape(B, C * FB)
         ids = jnp.where(act_sh, dsts, n).reshape(-1)    # shared scatter routing
@@ -481,6 +498,7 @@ def edgemap_reduce_batched(
     dense_frac: int | None = None,
     chunk_blocks: int | None = None,
     plan=None,
+    map_lanes: jnp.ndarray | None = None,
 ):
     """Batched edgeMap: B concurrent queries share ONE edge sweep.
 
@@ -490,6 +508,14 @@ def edgemap_reduce_batched(
     round and applied against all B state columns, so the edge-byte reads
     amortize ÷B (``PSAMCost.charge_edgemap_batched``) while the mutable
     state stays O(B·n) words of small memory.
+
+    ``map_lanes`` (bool[B], optional) applies ``map_fn`` only on the
+    selected lanes; unselected lanes take the identity map, bit-exactly.
+    This is the cross-op batching hook: lanes running different query
+    kinds (BFS candidate-parent propagation, wBFS weighted relaxation)
+    share the same sweep, each with its own per-edge map — see
+    ``repro.algorithms.traversal.traversal_cohort_rounds`` and the
+    ``ServingService`` drain loop built on it.
 
     Execution: the dense strategy runs ``edgemap_dense_batched`` — one
     shared edge sweep, one m-row × B-column segment reduction.  The sparse
@@ -521,43 +547,64 @@ def edgemap_reduce_batched(
                 mode=mode,
                 dense_frac=dense_frac,
                 chunk_blocks=chunk_blocks,
+                map_lanes=map_lanes,
             )
         mode = plan.resolve_mode(mode)
         dense_frac = plan.dense_frac if dense_frac is None else dense_frac
         chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
     dense_frac = 20 if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
+
+    def lane_map(ml):
+        # per-lane map selection under vmap: ml is this lane's scalar flag,
+        # so the select is a broadcast where — identity lanes pass xs
+        # through bit-exactly
+        if map_lanes is None:
+            return map_fn
+        return lambda xs, w: jnp.where(ml, map_fn(xs, w), xs)
+
     if xb.ndim != 2:
         # feature-dim vertex state: fall back to the vmapped bodies (the
         # streamed kernel path is not vmapped — plain sparse instead)
         vmode = "sparse" if mode == "sparse_streamed" else mode
+        ml_axis = None if map_lanes is None else 0
+        ml0 = jnp.zeros(xb.shape[0], bool) if map_lanes is None else map_lanes
         return jax.vmap(
-            lambda fm, xv: edgemap_reduce(
-                g, fm, xv, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
+            lambda fm, xv, ml: edgemap_reduce(
+                g, fm, xv, monoid=monoid, map_fn=lane_map(ml),
+                edge_active=edge_active,
                 mode=vmode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
-            )
-        )(frontier_masks, xb)
+            ),
+            in_axes=(0, 0, ml_axis),
+        )(frontier_masks, xb, ml0)
     if mode == "dense":
         return edgemap_dense_batched(
             g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
-            edge_active=edge_active,
+            edge_active=edge_active, map_lanes=map_lanes,
         )
 
-    def sparse_one(fm, xv):
+    def sparse_one(fm, xv, ml):
         return edgemap_chunked(
-            g, fm, xv, monoid=monoid, map_fn=map_fn, edge_active=edge_active,
-            chunk_blocks=chunk_blocks,
+            g, fm, xv, monoid=monoid, map_fn=lane_map(ml),
+            edge_active=edge_active, chunk_blocks=chunk_blocks,
         )
+
+    ml_axis = None if map_lanes is None else 0
+    ml0 = jnp.zeros(xb.shape[0], bool) if map_lanes is None else map_lanes
+
+    def sparse_vmap(fm, xv):
+        return jax.vmap(sparse_one, in_axes=(0, 0, ml_axis))(fm, xv, ml0)
 
     if mode == "sparse_streamed":
         if _streaming_decoder(g, edge_active) is not None:
             return edgemap_chunked_batched_streamed(
                 g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
                 edge_active=edge_active, chunk_blocks=chunk_blocks,
+                map_lanes=map_lanes,
             )
-        return jax.vmap(sparse_one)(frontier_masks, xb)
+        return sparse_vmap(frontier_masks, xb)
     if mode == "sparse":
-        return jax.vmap(sparse_one)(frontier_masks, xb)
+        return sparse_vmap(frontier_masks, xb)
     # auto: per-lane Beamer predicate.  When the whole batch agrees (always
     # true at B=1 — multi_source_bfs and the forest algorithms live there)
     # run ONLY the agreed branch, like the single-query lax.cond; only a
@@ -569,11 +616,11 @@ def edgemap_reduce_batched(
     def dense_all():
         return edgemap_dense_batched(
             g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
-            edge_active=edge_active,
+            edge_active=edge_active, map_lanes=map_lanes,
         )
 
     def sparse_all():
-        return jax.vmap(sparse_one)(frontier_masks, xb)
+        return sparse_vmap(frontier_masks, xb)
 
     def split():
         d_out, d_t = dense_all()
@@ -601,16 +648,18 @@ def edge_map_batched(
     edge_active: jnp.ndarray | None = None,
     mode: str = "auto",
     plan=None,
+    map_lanes: jnp.ndarray | None = None,
 ):
     """Batched Ligra-style EDGEMAP: returns (new_x[B, n], next_masks[B, n]).
 
     The batched analogue of ``edge_map``, with bool masks in place of
     ``VertexSubset`` (frontiers are per-query rows).  ``cond_masks[q, v]``
     plays C(v) for query q; ``update`` merges per-query contributions
-    exactly as in ``edge_map``."""
+    exactly as in ``edge_map``; ``map_lanes`` restricts ``map_fn`` to the
+    selected lanes exactly as in ``edgemap_reduce_batched``."""
     out, touched = edgemap_reduce_batched(
         g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
-        edge_active=edge_active, mode=mode, plan=plan,
+        edge_active=edge_active, mode=mode, plan=plan, map_lanes=map_lanes,
     )
     ok = touched if cond_masks is None else (touched & cond_masks)
     if update == "min":

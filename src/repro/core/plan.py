@@ -320,6 +320,23 @@ class ExecutionPlan:
             return mode
         return self.strategy
 
+    def edge_read_words_per_round(self, g) -> int:
+        """Large-memory words one dense edgeMap round reads under this plan.
+
+        The planner-owned read quantum the serving scheduler prices
+        admission and per-lane drain accounting in: per-shard block reads
+        (empty-padding included, compressed backends at compressed byte
+        width), summed over this plan's shards — exactly what
+        ``PSAMCost.charge_edgemap_planned`` charges for one round.  ``g``
+        may be the raw backend or its plan-prepared ``ShardedGraph`` (the
+        block split is deterministic, so both price identically)."""
+        from .psam import edgemap_round_read_words
+
+        if isinstance(g, ShardedGraph):
+            per_shard = edgemap_round_read_words(g.shards, num_shards=1)
+            return per_shard * g.num_shards
+        return edgemap_round_read_words(g, num_shards=self.num_shards)
+
     def prepare(self, g, edge_active=None, *, compact_live: bool = False):
         """Shard + stack + place a graph for this plan (identity off-mesh).
 
@@ -530,6 +547,7 @@ def _sharded_edgemap_call(
     mode,
     dense_frac,
     chunk_blocks,
+    map_lanes=None,
 ):
     """Shared shard/filter plumbing for both sharded executors.
 
@@ -537,7 +555,9 @@ def _sharded_edgemap_call(
     single-query executor, ``edgemap_reduce_batched`` for the serving path;
     everything else (ShardedEdgeActive validation, in-trace filter-word
     partitioning, shard_map wiring, the monoid combine) is identical and
-    lives here exactly once."""
+    lives here exactly once.  ``map_lanes`` (batched executor only) is a
+    replicated bool[B] operand selecting which lanes apply ``map_fn`` —
+    the cross-op serving rounds carry it through the mesh unchanged."""
     if not isinstance(g, ShardedGraph):
         g = plan.prepare(g)
     mode = plan.resolve_mode(mode)
@@ -564,15 +584,22 @@ def _sharded_edgemap_call(
                 num_blocks=g.orig_num_blocks,
             )
 
+    has_active = active is not None
+    has_lanes = map_lanes is not None
+
     def local(sg, fm, xv, *rest):
         g_local = jax.tree.map(lambda a: a[0], sg.shards)
         kwargs = {} if map_fn is None else {"map_fn": map_fn}
-        if rest:
+        rest = list(rest)
+        if has_active:
             # shard-local packed filter words, passed through verbatim:
             # every edgeMap consumer normalizes (dense/sparse unpack once,
             # the streamed kernel wants exactly these words — no
             # unpack→repack round trip)
-            kwargs["edge_active"] = rest[0].words[0]
+            kwargs["edge_active"] = rest.pop(0).words[0]
+        if has_lanes:
+            # replicated per-lane map selection (cross-op batching)
+            kwargs["map_lanes"] = rest.pop(0)
         out, touched = local_reduce(
             g_local,
             fm,
@@ -587,9 +614,12 @@ def _sharded_edgemap_call(
 
     in_specs = [P(plan.axes), P(), P()]
     operands = [g, frontier, x]
-    if active is not None:
+    if has_active:
         in_specs.append(P(plan.axes))
         operands.append(active)
+    if has_lanes:
+        in_specs.append(P())
+        operands.append(map_lanes)
     fn = shard_map(
         local,
         mesh=plan.mesh,
@@ -651,6 +681,7 @@ def sharded_edgemap_reduce_batched(
     mode: str | None = None,
     dense_frac: int | None = None,
     chunk_blocks: int | None = None,
+    map_lanes=None,
 ):
     """Batched edgeMap over a mesh: B queries share each shard's one local
     edge sweep, then a single monoid combine moves the O(B·n) output.
@@ -661,7 +692,10 @@ def sharded_edgemap_reduce_batched(
     state are replicated, only the edge blocks (and their packed filter
     words) are partitioned — the same plumbing as the single-query executor
     (``_sharded_edgemap_call``), so cross-shard traffic is O(B·n) words per
-    round, never O(m)."""
+    round, never O(m).  ``map_lanes`` (bool[B], replicated) restricts
+    ``map_fn`` to the selected lanes exactly as in the single-device
+    batched body — heterogeneous (cross-op) serving cohorts run sharded
+    with no fallback."""
     from .edgemap import edgemap_reduce_batched
 
     return _sharded_edgemap_call(
@@ -669,4 +703,5 @@ def sharded_edgemap_reduce_batched(
         local_reduce=edgemap_reduce_batched,
         monoid=monoid, map_fn=map_fn, edge_active=edge_active,
         mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+        map_lanes=map_lanes,
     )

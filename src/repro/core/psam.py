@@ -41,6 +41,113 @@ def _block_read_words(g, blocks: int) -> int:
     return 2 * g.block_size * blocks  # dst + w
 
 
+def edgemap_round_read_words(g, num_shards: int = 1) -> int:
+    """Large-memory words one dense edgeMap round reads over ``num_shards``.
+
+    The per-round read quantum every planner charge is built from: per-shard
+    block reads including the empty blocks that pad a non-dividing count
+    (``charge_edgemap_planned``'s dense case, B-invariant by construction —
+    a batched round reads exactly the same words).  The serving scheduler
+    prices admission control and per-lane drain attribution in this unit,
+    via :meth:`repro.core.plan.ExecutionPlan.edge_read_words_per_round`.
+    """
+    _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
+    return _block_read_words(g, padded_total)
+
+
+@dataclasses.dataclass
+class TenantLedger:
+    """One tenant's PSAM edge-read account: a token-bucket byte budget.
+
+    ``capacity`` is the tenant's edge-read allowance in large-memory words
+    (None = unlimited); ``refill_rate`` replenishes ``available`` at that
+    many words per unit of service time, capped at ``capacity`` — the
+    token-bucket shape every rate limiter converges on, priced in the PSAM's
+    scarce resource (NVRAM reads) instead of requests.  ``charged`` is the
+    lifetime attribution (never reset); ``available`` may go negative when a
+    drain's actual cost exceeds its admission estimate — the tenant repays
+    the overdraft out of future refills before new work admits.
+    """
+
+    capacity: float | None = None
+    refill_rate: float = 0.0
+    available: float = 0.0
+    charged: float = 0.0
+    last_refill: float = 0.0
+
+    def refill(self, now: float) -> None:
+        """Advance the token bucket to ``now`` (monotone; no-op backwards)."""
+        if now > self.last_refill:
+            if self.capacity is not None and self.refill_rate > 0:
+                self.available = min(
+                    self.capacity,
+                    self.available + (now - self.last_refill) * self.refill_rate,
+                )
+            self.last_refill = now
+
+    def can_admit(self, est_words: float) -> bool:
+        """True when ``est_words`` of estimated edge reads fit the allowance."""
+        return self.capacity is None or self.available >= est_words
+
+    def reserve(self, est_words: float) -> None:
+        """Deduct an admission estimate; settled against actuals at drain."""
+        if self.capacity is not None:
+            self.available -= est_words
+
+    def settle(self, est_words: float, actual_words: float) -> None:
+        """Replace the reserved estimate with the drain's actual attribution.
+
+        Refunds ``est - actual`` (or charges the shortfall) so the bucket
+        always reflects words actually read; ``charged`` accrues the actual.
+        """
+        if self.capacity is not None:
+            self.available += est_words - actual_words
+        self.charged += actual_words
+
+
+class TenantLedgers:
+    """Per-tenant PSAM edge-read ledgers, keyed by tenant name.
+
+    ``budgets`` maps tenant → (capacity_words, refill_rate) — tenants not
+    named run unlimited (accounting only, never throttled).  The serving
+    admission controller reserves an estimate at submit, settles it against
+    the drain's per-lane attribution, and consults ``can_admit`` to reject
+    or defer work — see ``repro.serving.ServingService``.
+    """
+
+    def __init__(self, budgets: dict | None = None):
+        self._ledgers: dict[str, TenantLedger] = {}
+        for tenant, spec in (budgets or {}).items():
+            cap, rate = spec if isinstance(spec, tuple) else (spec, 0.0)
+            self._ledgers[tenant] = TenantLedger(
+                capacity=float(cap), refill_rate=float(rate), available=float(cap)
+            )
+
+    def ledger(self, tenant: str) -> TenantLedger:
+        """This tenant's ledger (created unlimited on first touch)."""
+        led = self._ledgers.get(tenant)
+        if led is None:
+            led = self._ledgers[tenant] = TenantLedger()
+        return led
+
+    def refill(self, now: float) -> None:
+        """Advance every tenant's token bucket to ``now``."""
+        for led in self._ledgers.values():
+            led.refill(now)
+
+    def charge(self, tenant: str, words: float) -> None:
+        """Attribute ``words`` of edge reads to ``tenant`` (no reservation)."""
+        self.ledger(tenant).charged += words
+
+    def items(self):
+        """(tenant, ledger) pairs, for reporting."""
+        return self._ledgers.items()
+
+    def total_charged(self) -> float:
+        """Sum of every tenant's lifetime attribution (conservation checks)."""
+        return sum(led.charged for led in self._ledgers.values())
+
+
 @dataclasses.dataclass
 class PSAMCost:
     large_reads: int = 0      # words read from the read-only graph

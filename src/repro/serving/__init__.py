@@ -1,14 +1,32 @@
 """repro.serving — the batched query-serving subsystem.
 
 Turns the planner stack from a one-shot algorithm runner into a serving
-system: a :class:`QueryEngine` coalesces concurrent BFS / wBFS / PPR /
-PageRank-iteration requests into per-op batch buckets, pads them to
-power-of-two widths, and drains each bucket through ONE batched edgeMap
-sweep per round — the NVRAM-modeled edge-byte reads are paid once per
-sweep instead of once per query (``PSAMCost.charge_edgemap_batched``),
-while compiled executables are cached per (backend, mesh, op, B) so
-steady-state serving never retraces.
+system, in two layers:
+
+* :class:`QueryEngine` — the batching substrate.  Coalesces concurrent
+  BFS / wBFS / PPR / PageRank-iteration requests into per-op batch
+  buckets, pads them to power-of-two widths, and drains each bucket
+  through ONE batched edgeMap sweep per round — the NVRAM-modeled
+  edge-byte reads are paid once per sweep instead of once per query
+  (``PSAMCost.charge_edgemap_batched``), while compiled executables are
+  cached per (backend, mesh, op, B) so steady-state serving never
+  retraces.  Callers flush by hand.
+* :class:`ServingService` — the always-on control loop.  Wraps the
+  engine with a deadline/depth-triggered drain loop in virtual time,
+  fuses BFS+wBFS lanes into cross-op cohorts that share edge sweeps,
+  repacks drained lanes out between round quanta (early-exit
+  accounting), and gates admission on per-tenant PSAM edge-read budgets
+  (:class:`ServiceConfig` ``budgets`` → ``repro.core.TenantLedgers``).
+
+See ``docs/serving.md`` for the full tier walkthrough.
 """
 from .engine import QueryEngine, QueryHandle
+from .service import ServiceConfig, ServingService, ServingTicket
 
-__all__ = ["QueryEngine", "QueryHandle"]
+__all__ = [
+    "QueryEngine",
+    "QueryHandle",
+    "ServiceConfig",
+    "ServingService",
+    "ServingTicket",
+]

@@ -58,14 +58,15 @@ from ..core.psam import PSAMCost
 
 
 def _bfs_sweeps(res) -> int:
-    # rounds executed = deepest discovered level + 1 (the drain round)
+    """Edge sweeps a drained BFS batch executed: deepest level + drain round."""
     _, levels = res
     return int(jnp.max(levels)) + 1
 
 
 def _wbfs_sweeps(res) -> int:
-    # one relaxation sweep per extracted bucket ≈ distinct finite distances
-    # of the longest-running query (analytic estimate, like Table 1's)
+    """Edge sweeps a drained wBFS batch executed — one relaxation sweep per
+    extracted bucket ≈ distinct finite distances of the longest-running
+    query (analytic estimate, like Table 1's)."""
     finite = np.asarray(jnp.where(res < jnp.int32(2**31 - 1), res, -1))
     per_q = [len(np.unique(r[r >= 0])) for r in finite]
     return max(max(per_q, default=1), 1)
@@ -83,10 +84,12 @@ class _OpSpec:
 
 
 def _src_stack(reqs: list[dict]) -> tuple:
+    """Stack source-vertex requests into the int32[B] batched argument."""
     return (jnp.asarray([r["src"] for r in reqs], jnp.int32),)
 
 
 def _pr_stack(reqs: list[dict]) -> tuple:
+    """Stack per-request rank vectors into the float32[B, n] argument."""
     return (jnp.stack([jnp.asarray(r["pr"], jnp.float32) for r in reqs]),)
 
 
@@ -127,6 +130,7 @@ _OPS: dict[str, _OpSpec] = {
 
 
 def _pow2_batch(k: int, max_batch: int) -> int:
+    """Next power-of-two batch width ≥ k, capped at ``max_batch``."""
     b = 1
     while b < k:
         b *= 2
@@ -152,9 +156,11 @@ class QueryEngine:
     max_batch : cap on the padded batch width B (buckets larger than this
                 split into max_batch-wide chunks)
 
-    ``stats`` counts submitted/served queries, drained batches, and traces
-    per compiled-cache key; ``cost`` accumulates the PSAM model of every
-    drained batch (edge bytes once per sweep, O(B·n) small memory).
+    ``stats`` counts submitted/served queries, drained batches, total batch
+    columns (``lanes``) and padding columns (``padded``) — so batch
+    occupancy is observable, not just throughput; ``cost`` accumulates the
+    PSAM model of every drained batch (edge bytes once per sweep, O(B·n)
+    small memory).
     """
 
     def __init__(self, g, *, plan=None, max_batch: int = 8):
@@ -166,7 +172,13 @@ class QueryEngine:
         self._pending: dict[tuple, list[tuple[int, dict]]] = {}
         self._compiled: dict[tuple, Callable] = {}
         self.trace_counts: dict[tuple, int] = {}
-        self.stats = {"submitted": 0, "served": 0, "batches": 0}
+        self.stats = {
+            "submitted": 0,
+            "served": 0,
+            "batches": 0,
+            "lanes": 0,
+            "padded": 0,
+        }
         self._next_id = 0
         if plan is not None and plan.is_sharded:
             self._mesh_key = tuple(
@@ -213,8 +225,23 @@ class QueryEngine:
         resolved = self.flush()
         return [resolved[h] for h in handles]
 
+    @property
+    def occupancy(self) -> float:
+        """Fraction of drained batch columns that carried real queries.
+
+        ``served / lanes`` — the padding waste metric ``table_latency``
+        reports: 1.0 means every column was a real request, 0.5 means half
+        the batched compute (though NOT half the edge reads — those are
+        shared) went to padded lanes.  1.0 before any batch drains.
+        """
+        lanes = self.stats["lanes"]
+        return self.stats["served"] / lanes if lanes else 1.0
+
     # ------------------------------------------------------------------
     def _run_bucket(self, op, scalars, chunk) -> dict[QueryHandle, Any]:
+        """Pad one (op, scalars) bucket to power-of-two B, run the batched
+        algorithm through the compiled cache, account its PSAM cost, and
+        slice per-handle results (padding lanes dropped)."""
         spec = _OPS[op]
         k = len(chunk)
         B = _pow2_batch(k, self.max_batch)
@@ -227,6 +254,8 @@ class QueryEngine:
         res = fn(self.prepared, *args)
         self.stats["batches"] += 1
         self.stats["served"] += k
+        self.stats["lanes"] += B
+        self.stats["padded"] += B - k
         self._charge(B, spec.sweeps(res), op=op, scalars=scalars)
         return {
             QueryHandle(hid, op): spec.unbatch(res, i)
@@ -234,6 +263,11 @@ class QueryEngine:
         }
 
     def _compiled_fn(self, op, scalars, B, spec):
+        """Fetch or build the jitted executable for one cache key.
+
+        Keyed ``(backend, mesh, op, B, scalars)``; the traced closure bumps
+        ``trace_counts`` so steady-state zero-retrace serving is testable.
+        """
         key = (self._backend_key, self._mesh_key, op, B, scalars)
         fn = self._compiled.get(key)
         if fn is None:

@@ -1,0 +1,452 @@
+"""Always-on serving service — deadline-driven drain loop over the engine.
+
+The :class:`~repro.serving.engine.QueryEngine` coalesces and batches, but a
+caller still has to invoke ``flush()`` by hand — which no live deployment
+does.  :class:`ServingService` is the missing control loop, in virtual
+time: requests arrive with a per-request SLO budget, queue until either
+trigger fires, and drain through shared NVRAM edge sweeps:
+
+    submit(op, tenant, now) ──► admission control (per-tenant PSAM ledger)
+         │                           │ reject / defer when over budget
+         ▼                           ▼
+       queue ──────────── tick(now) drain loop ──────────► completed
+         │        flush when EITHER fires first:              tickets
+         │          · deadline:  now ≥ arrival + slo
+         │          · depth:     len(queue) ≥ depth_trigger
+         ▼
+       cross-op cohorts (bfs+wbfs fused, ≤ max_batch lanes)
+         └─ quantum of shared sweeps ─ repack drained lanes out ─ repeat
+
+Three properties the engine alone cannot provide:
+
+* **Deadline-driven flushing** — a request is never held past its SLO
+  budget waiting for a full batch; a deadline flush drains the WHOLE
+  queue, so later arrivals ride the same sweep for free.
+* **Cross-op batching** — BFS and wBFS lanes share one edge sweep per
+  round (``traversal_cohort_rounds``): both are int32 min-monoid
+  traversals, and ``map_lanes`` gives each lane its own per-edge map
+  bit-exactly.  Non-traversal ops (PPR, PageRank iterations) drain
+  through the wrapped engine in the same flush.
+* **Early-exit accounting** — per-lane round counts stop charging a lane
+  the round its frontier drains, and between quanta the cohort repacks to
+  a narrower power-of-two width so a finished query also stops occupying
+  a batch column.  Per-lane results stay bit-identical to single-query
+  runs (the locked parity contract).
+
+Admission control prices requests in the PSAM's scarce resource — NVRAM
+edge-read words — against per-tenant token buckets
+(:class:`repro.core.TenantLedger`): an estimate is reserved at submit and
+settled against the drain's actual per-lane attribution, so tenants pay
+for what their queries actually read, not for what the scheduler guessed.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..algorithms.traversal import (
+    traversal_cohort_init,
+    traversal_cohort_rounds,
+)
+from ..compat import use_mesh
+from ..core.psam import TenantLedgers, edgemap_round_read_words
+from .engine import QueryEngine, _pow2_batch
+
+TRAVERSAL_OPS = ("bfs", "wbfs")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Tuning knobs for one :class:`ServingService`.
+
+    ``slo`` is the per-request latency budget in virtual-time units —
+    ``deadline = arrival + slo`` and the drain loop flushes no later than
+    that.  ``depth_trigger`` (default ``max_batch``) flushes early once
+    the queue can fill a batch, so a saturated service never waits for a
+    deadline.  ``round_quantum`` bounds how many fused rounds run per
+    jitted call — smaller quanta repack drained lanes out sooner, at more
+    dispatch overhead.  ``admission`` is what happens when a tenant's
+    ledger cannot cover a request's estimated edge reads: ``"reject"``
+    fails it immediately, ``"defer"`` parks it until refills cover it
+    (its SLO clock restarts at admission).  ``budgets`` maps tenant name
+    → ``(capacity_words, refill_rate)``; unnamed tenants are unlimited.
+    ``est_rounds`` sizes the admission estimate: one request is priced at
+    ``est_rounds`` shared sweeps split across ``max_batch`` lanes.
+    """
+
+    slo: float = 0.05
+    max_batch: int = 8
+    depth_trigger: int | None = None
+    round_quantum: int = 4
+    admission: str = "reject"
+    budgets: dict | None = None
+    mode: str = "auto"
+    est_rounds: int = 8
+
+    def __post_init__(self):
+        if self.admission not in ("reject", "defer"):
+            raise ValueError(f"admission must be 'reject'|'defer', got {self.admission!r}")
+
+
+@dataclasses.dataclass
+class ServingTicket:
+    """One submitted request's lifecycle record.
+
+    ``status`` walks ``queued → done`` (or ``rejected``, or
+    ``deferred → queued → done``).  ``deadline`` is the flush-by time;
+    ``finished_at`` the virtual time of the tick that drained it.
+    ``rounds`` / ``words`` are the early-exit accounting actuals: rounds
+    this lane was active, and its attributed share of the edge-read words
+    those rounds streamed — what the tenant ledger settles against.
+    """
+
+    id: int
+    op: str
+    tenant: str
+    params: dict
+    arrival: float
+    deadline: float
+    status: str = "queued"
+    result: Any = None
+    finished_at: float | None = None
+    rounds: int = 0
+    words: float = 0.0
+    est_words: float = 0.0
+
+
+class ServingService:
+    """Deadline-driven drain loop with admission control over a QueryEngine.
+
+    Parameters
+    ----------
+    g      : CSRGraph | CompressedCSR — the read-only large memory
+    plan   : ExecutionPlan | None — execution target, as for the engine
+    config : ServiceConfig | None — SLO, triggers, budgets (default config
+             if omitted)
+
+    The service runs in **virtual time**: callers stamp ``submit`` and
+    ``tick`` with ``now`` and the service never looks at a wall clock —
+    which is what makes trace replay (``benchmarks/table_latency``) and
+    the deadline edge-case tests deterministic.  ``tick(now)`` is the
+    drain loop body: refill ledgers, re-admit deferred work, flush if the
+    deadline or depth trigger fired, return the completed tickets.
+
+    ``stats`` extends the engine's counters with trigger attribution
+    (``deadline_flushes`` / ``depth_flushes``) and round-weighted lane
+    occupancy; ``cost`` is the engine's PSAM account — cohort rounds are
+    charged there too, so one object models the whole service.
+    """
+
+    def __init__(self, g, *, plan=None, config: ServiceConfig | None = None):
+        self.config = config or ServiceConfig()
+        self.engine = QueryEngine(g, plan=plan, max_batch=self.config.max_batch)
+        self.plan = plan
+        self.ledgers = TenantLedgers(self.config.budgets)
+        if plan is not None:
+            self._round_words = plan.edge_read_words_per_round(self.engine.prepared)
+        else:
+            self._round_words = edgemap_round_read_words(g)
+        self._queue: list[ServingTicket] = []
+        self._deferred: list[ServingTicket] = []
+        self._cohort_compiled: dict[tuple, Callable] = {}
+        self.trace_counts: dict[tuple, int] = {}
+        self._next_id = 0
+        self.stats = {
+            "submitted": 0,
+            "admitted": 0,
+            "rejected": 0,
+            "deferred": 0,
+            "served": 0,
+            "ticks": 0,
+            "flushes": 0,
+            "deadline_flushes": 0,
+            "depth_flushes": 0,
+            "forced_flushes": 0,
+            "cohort_rounds": 0,
+            "repacks": 0,
+            "lane_rounds_total": 0,
+            "active_lane_rounds": 0,
+        }
+
+    # ------------------------------------------------------------------
+    @property
+    def cost(self):
+        """The PSAM cost account (shared with the wrapped engine)."""
+        return self.engine.cost
+
+    @property
+    def depth_trigger(self) -> int:
+        """Queue depth that triggers an immediate flush."""
+        return self.config.depth_trigger or self.config.max_batch
+
+    @property
+    def queue_depth(self) -> int:
+        """Currently queued (admitted, undrained) requests."""
+        return len(self._queue)
+
+    @property
+    def occupancy(self) -> float:
+        """Round-weighted fraction of cohort lane-slots doing real work.
+
+        Each fused round contributes B lane-slots (the packed width) of
+        which the active lanes did work — drained-but-not-yet-repacked
+        lanes and padding lanes count as waste.  1.0 before any drain.
+        This is the metric ``round_quantum`` tunes: smaller quanta repack
+        sooner and push occupancy up.
+        """
+        total = self.stats["lane_rounds_total"]
+        return self.stats["active_lane_rounds"] / total if total else 1.0
+
+    # ------------------------------------------------------------------
+    def submit(self, op: str, *, tenant: str = "default", now: float = 0.0, **params):
+        """Submit one request at virtual time ``now``; returns its ticket.
+
+        Admission control runs here: the request's edge reads are
+        estimated (``est_rounds`` sweeps ÷ ``max_batch`` lanes), and if
+        the tenant's token bucket cannot cover the estimate the ticket is
+        rejected or deferred per ``config.admission``.  Admitted tickets
+        reserve the estimate — settled against actuals when drained — and
+        get ``deadline = now + slo``.
+        """
+        self.stats["submitted"] += 1
+        t = ServingTicket(
+            id=self._next_id,
+            op=op,
+            tenant=tenant,
+            params=params,
+            arrival=now,
+            deadline=now + self.config.slo,
+            est_words=self._estimate_words(),
+        )
+        self._next_id += 1
+        self.ledgers.refill(now)
+        led = self.ledgers.ledger(tenant)
+        if led.can_admit(t.est_words):
+            led.reserve(t.est_words)
+            t.status = "queued"
+            self._queue.append(t)
+            self.stats["admitted"] += 1
+        elif self.config.admission == "defer":
+            t.status = "deferred"
+            self._deferred.append(t)
+            self.stats["deferred"] += 1
+        else:
+            t.status = "rejected"
+            self.stats["rejected"] += 1
+        return t
+
+    def tick(self, now: float) -> list[ServingTicket]:
+        """One drain-loop iteration at virtual time ``now``.
+
+        Refills tenant buckets, re-admits deferred work that now fits,
+        and flushes the WHOLE queue when either trigger fires — queue
+        depth ≥ ``depth_trigger``, or the earliest deadline is due (so a
+        deadline flush pulls later arrivals into the same shared sweeps).
+        Returns the tickets completed by this tick (empty on a no-op
+        tick: an empty queue costs nothing).
+        """
+        self.stats["ticks"] += 1
+        self.ledgers.refill(now)
+        self._readmit(now)
+        if not self._queue:
+            return []
+        if len(self._queue) >= self.depth_trigger:
+            self.stats["depth_flushes"] += 1
+        elif min(t.deadline for t in self._queue) <= now:
+            self.stats["deadline_flushes"] += 1
+        else:
+            return []
+        return self._flush(now)
+
+    def drain(self, now: float) -> list[ServingTicket]:
+        """Force-flush everything queued, ignoring both triggers."""
+        self.ledgers.refill(now)
+        self._readmit(now)
+        if not self._queue:
+            return []
+        self.stats["forced_flushes"] += 1
+        return self._flush(now)
+
+    def next_deadline(self) -> float | None:
+        """Earliest queued deadline — when the next tick MUST run; None if
+        the queue is empty (trace replay uses this to advance the clock)."""
+        return min((t.deadline for t in self._queue), default=None)
+
+    # ------------------------------------------------------------------
+    def _estimate_words(self) -> float:
+        """Admission-time price of one request: ``est_rounds`` shared
+        sweeps' edge reads split across a full batch."""
+        return self._round_words * self.config.est_rounds / self.config.max_batch
+
+    def _readmit(self, now: float) -> None:
+        """Move deferred tickets whose tenants can now afford them back
+        into the queue (FIFO); their SLO clock restarts at admission."""
+        still = []
+        for t in self._deferred:
+            led = self.ledgers.ledger(t.tenant)
+            if led.can_admit(t.est_words):
+                led.reserve(t.est_words)
+                t.status = "queued"
+                t.deadline = now + self.config.slo
+                self._queue.append(t)
+                self.stats["admitted"] += 1
+            else:
+                still.append(t)
+        self._deferred = still
+
+    def _flush(self, now: float) -> list[ServingTicket]:
+        """Drain the full queue: traversal tickets fuse into ≤max_batch
+        cohorts (FIFO), the rest delegate to the engine — one flush, one
+        mesh context, every ticket settled against its tenant ledger."""
+        self.stats["flushes"] += 1
+        queue, self._queue = self._queue, []
+        trav = [t for t in queue if t.op in TRAVERSAL_OPS]
+        other = [t for t in queue if t.op not in TRAVERSAL_OPS]
+        done: list[ServingTicket] = []
+        ctx = (
+            use_mesh(self.plan.mesh)
+            if self.plan is not None and self.plan.is_sharded
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            for lo in range(0, len(trav), self.config.max_batch):
+                done += self._drain_cohort(trav[lo : lo + self.config.max_batch], now)
+            if other:
+                done += self._drain_engine_ops(other, now)
+        for t in done:
+            self.ledgers.ledger(t.tenant).settle(t.est_words, t.words)
+        self.stats["served"] += len(done)
+        return done
+
+    # ------------------------------------------------------------------
+    def _drain_cohort(self, tickets: list[ServingTicket], now: float):
+        """Run one fused BFS+wBFS cohort to completion.
+
+        Lanes start at the padded power-of-two width (pads are inert
+        ``src=-1`` lanes — never active, never charged); each quantum of
+        shared rounds is one jitted call, after which drained lanes'
+        results are extracted and, when a narrower power of two holds the
+        survivors, the state repacks down so finished queries stop
+        occupying batch columns.  Edge reads are charged once per
+        executed round and attributed equally across that round's active
+        lanes — the early-exit accounting: a drained lane is charged for
+        exactly the rounds it ran.
+        """
+        k = len(tickets)
+        B = _pow2_batch(k, self.config.max_batch)
+        lane_tickets: list[ServingTicket | None] = list(tickets) + [None] * (B - k)
+        ops = [t.op for t in tickets] + ["bfs"] * (B - k)
+        srcs = [int(t.params["src"]) for t in tickets] + [-1] * (B - k)
+        state, weighted = traversal_cohort_init(self.engine.graph, ops, srcs)
+        shards = (
+            self.plan.num_shards
+            if self.plan is not None and self.plan.is_sharded
+            else 1
+        )
+        done: list[ServingTicket] = []
+        while True:
+            fn = self._cohort_fn(B, weighted)
+            state, lane_rounds, active = fn(self.engine.prepared, state)
+            lane_rounds = np.asarray(lane_rounds)
+            active_np = np.asarray(active)
+            rounds_exec = int(lane_rounds.max(initial=0))
+            # PSAM: each executed round streams the edge blocks once for
+            # the whole cohort; its words split across that round's active
+            # lanes (activity is prefix-monotone, so round r's active set
+            # is exactly the lanes with lane_rounds > r).
+            for r in range(rounds_exec):
+                act = np.flatnonzero(lane_rounds > r)
+                self.engine.cost.charge_edgemap_batched(
+                    self.engine.graph, B, num_shards=shards
+                )
+                share = self._round_words / len(act)
+                for i in act:
+                    lane_tickets[i].words += share
+            for i, t in enumerate(lane_tickets):
+                if t is not None:
+                    t.rounds += int(lane_rounds[i])
+            self.stats["cohort_rounds"] += rounds_exec
+            self.stats["lane_rounds_total"] += B * rounds_exec
+            self.stats["active_lane_rounds"] += int(lane_rounds.sum())
+            # extract lanes that drained inside this quantum
+            for i in range(B):
+                t = lane_tickets[i]
+                if t is not None and not active_np[i]:
+                    t.result = self._unbatch(state, weighted, i)
+                    t.status = "done"
+                    t.finished_at = now
+                    done.append(t)
+                    lane_tickets[i] = None
+            if not active_np.any():
+                return done
+            act_idx = np.flatnonzero(active_np)
+            newB = _pow2_batch(len(act_idx), self.config.max_batch)
+            if newB < B:
+                # repack: survivors first, drained rows as inert padding
+                pads = np.flatnonzero(~active_np)[: newB - len(act_idx)]
+                idx = np.concatenate([act_idx, pads]).astype(np.int32)
+                state = {
+                    key: (v if key == "rnd" else v[idx]) for key, v in state.items()
+                }
+                weighted = tuple(weighted[i] for i in idx)
+                lane_tickets = [lane_tickets[i] for i in idx]
+                B = newB
+                self.stats["repacks"] += 1
+
+    def _unbatch(self, state, weighted, i: int):
+        """Lane i's result in the same shape the engine serves: BFS →
+        (parents, levels), wBFS → dist."""
+        if weighted[i]:
+            return state["dist"][i]
+        return state["parents"][i], state["levels"][i]
+
+    def _cohort_fn(self, B: int, weighted: tuple):
+        """Fetch or build the jitted cohort step for one lane layout.
+
+        Keyed like the engine's cache — (backend, mesh, B, weighted lane
+        pattern, quantum, mode) — with the same observable
+        ``trace_counts``, so steady-state serving provably stops
+        retracing once the handful of layouts it sees are warm.
+        """
+        key = (
+            self.engine._backend_key,
+            self.engine._mesh_key,
+            B,
+            weighted,
+            self.config.round_quantum,
+            self.config.mode,
+        )
+        fn = self._cohort_compiled.get(key)
+        if fn is None:
+            plan, mode, quantum = self.plan, self.config.mode, self.config.round_quantum
+
+            def traced(g, state):
+                self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+                return traversal_cohort_rounds(
+                    g, state, weighted, quantum=quantum, mode=mode, plan=plan
+                )
+
+            fn = jax.jit(traced)
+            self._cohort_compiled[key] = fn
+        return fn
+
+    def _drain_engine_ops(self, tickets: list[ServingTicket], now: float):
+        """Delegate non-traversal tickets to the wrapped engine in one
+        flush; the flush's PSAM edge-read delta is attributed equally
+        across its tickets (per-op sweep splits are not observable from
+        the batched results, so equal shares keep the total conserved)."""
+        before = self.engine.cost.large_reads
+        handles = [self.engine.submit(t.op, **t.params) for t in tickets]
+        results = self.engine.flush()
+        share = (self.engine.cost.large_reads - before) / len(tickets)
+        for h, t in zip(handles, tickets):
+            t.result = results[h]
+            t.status = "done"
+            t.finished_at = now
+            t.words += share
+            t.rounds += 1
+        return tickets

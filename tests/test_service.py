@@ -1,0 +1,378 @@
+"""ServingService: deadline/depth drain loop, cohorts, admission, ledgers.
+
+The always-on tier's contracts (ISSUE 6):
+
+* **Trigger edge cases** — empty-queue ticks are free no-ops; a single
+  lane hitting its deadline flushes the WHOLE queue (later arrivals ride
+  the same sweep); queue depth ≥ depth_trigger flushes immediately; an
+  oversize bucket splits at ``max_batch`` under deadline pressure.
+* **Parity** — every served lane, BFS or wBFS, mixed into one fused
+  cohort, across round quanta and early-exit repacking, is bit-identical
+  to its single-query run (same plan, same backend).
+* **Early-exit accounting** — a drained lane stops being charged: its
+  round count freezes, and the per-round edge-read words split across
+  only the still-active lanes, conserving the total exactly.
+* **Admission control** — per-tenant PSAM token buckets reject or defer
+  work, reserve estimates at submit, and settle against actuals at
+  drain (overdrafts repay out of future refills).
+* **map_lanes** — the cross-op hook in the batched edgeMap: unselected
+  lanes take the identity map bit-exactly, in every execution mode.
+
+The mesh leg runs in a subprocess over fake CPU devices, like
+``test_serving``'s.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    bfs,
+    traversal_cohort_init,
+    traversal_cohort_rounds,
+    wbfs,
+)
+from repro.core import edgemap_reduce_batched
+from repro.data import rmat_graph
+from repro.serving import ServiceConfig, ServingService
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=ROOT,
+        timeout=420,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def _graph(weighted=True):
+    return rmat_graph(128, 512, weighted=weighted, seed=7, block_size=32)
+
+
+def _svc(g, **cfg):
+    return ServingService(g, config=ServiceConfig(**cfg))
+
+
+# ----------------------------------------------------------------------
+# Flush-trigger edge cases
+# ----------------------------------------------------------------------
+def test_empty_queue_ticks_are_noops():
+    svc = _svc(_graph())
+    for now in (0.0, 1.0, 5.0):
+        assert svc.tick(now) == []
+    assert svc.stats["ticks"] == 3
+    assert svc.stats["flushes"] == 0
+    assert svc.cost.large_reads == 0
+
+
+def test_deadline_flush_pulls_in_later_arrivals():
+    g = _graph()
+    svc = _svc(g, slo=0.05, max_batch=8)
+    first = svc.submit("bfs", src=0, now=0.0)
+    assert svc.tick(0.02) == []  # neither trigger fired
+    late = svc.submit("wbfs", src=9, now=0.04)  # deadline 0.09, not due
+    done = svc.tick(0.05)  # first's deadline due -> whole queue drains
+    assert {t.id for t in done} == {first.id, late.id}
+    assert svc.stats["deadline_flushes"] == 1
+    assert svc.stats["depth_flushes"] == 0
+    assert late.finished_at == 0.05  # served 40ms before its own deadline
+
+
+def test_depth_trigger_fires_before_deadline():
+    g = _graph()
+    svc = _svc(g, slo=10.0, max_batch=4, depth_trigger=4)
+    for i in range(4):
+        svc.submit("bfs", src=i, now=0.0)
+    done = svc.tick(0.0)  # deadlines are 10s away; depth fires
+    assert len(done) == 4
+    assert svc.stats["depth_flushes"] == 1
+    assert svc.stats["deadline_flushes"] == 0
+
+
+def test_oversize_bucket_splits_at_max_batch_under_deadline():
+    g = _graph()
+    svc = _svc(g, slo=0.01, max_batch=4, depth_trigger=100)
+    tickets = [svc.submit("bfs", src=i, now=0.0) for i in range(6)]
+    done = svc.tick(0.011)  # deadline pressure, depth never reached
+    assert len(done) == 6
+    assert svc.stats["deadline_flushes"] == 1
+    # 6 traversal lanes under max_batch=4 -> cohorts of 4 and 2
+    for t, s in zip(tickets, range(6)):
+        wp, wl = bfs(g, s)
+        np.testing.assert_array_equal(np.asarray(t.result[0]), np.asarray(wp))
+        np.testing.assert_array_equal(np.asarray(t.result[1]), np.asarray(wl))
+
+
+def test_single_lane_deadline_while_others_mid_round():
+    # one queued lane goes overdue while a prior flush's lanes were long
+    # running: the next tick drains it regardless of queue depth 1
+    g = _graph()
+    svc = _svc(g, slo=0.03, max_batch=8)
+    a = svc.submit("wbfs", src=3, now=0.0)
+    svc.tick(0.03)  # drains a (deadline)
+    b = svc.submit("bfs", src=5, now=0.1)
+    assert svc.tick(0.12) == []  # not due
+    done = svc.tick(0.13)
+    assert [t.id for t in done] == [b.id]
+    assert a.status == "done" and b.status == "done"
+    assert svc.stats["deadline_flushes"] == 2
+
+
+# ----------------------------------------------------------------------
+# Parity: mixed cohorts, early exit, repacking
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("quantum", [1, 3])
+def test_mixed_cohort_bit_identical_to_singles(quantum):
+    g = _graph(weighted=True)
+    svc = _svc(g, slo=0.01, max_batch=8, round_quantum=quantum)
+    reqs = [("bfs", 0), ("wbfs", 5), ("bfs", 9), ("wbfs", 17), ("bfs", 33)]
+    tickets = [svc.submit(op, src=s, now=0.0) for op, s in reqs]
+    done = svc.tick(0.02)
+    assert len(done) == len(reqs)
+    for t, (op, s) in zip(tickets, reqs):
+        if op == "bfs":
+            wp, wl = bfs(g, s)
+            np.testing.assert_array_equal(np.asarray(t.result[0]), np.asarray(wp))
+            np.testing.assert_array_equal(np.asarray(t.result[1]), np.asarray(wl))
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(t.result), np.asarray(wbfs(g, s))
+            )
+
+
+def test_early_exit_freezes_rounds_and_repacks():
+    g = _graph(weighted=True)
+    # quantum=1 repacks at every opportunity: short BFS lanes exit while
+    # the wBFS lanes grind on, and the batch narrows behind them
+    svc = _svc(g, slo=0.01, max_batch=8, round_quantum=1)
+    ts = [
+        svc.submit("bfs", src=0, now=0.0),
+        svc.submit("wbfs", src=5, now=0.0),
+        svc.submit("bfs", src=9, now=0.0),
+        svc.submit("wbfs", src=17, now=0.0),
+    ]
+    done = svc.tick(0.02)
+    assert len(done) == 4
+    b_rounds = [t.rounds for t in ts if t.op == "bfs"]
+    w_rounds = [t.rounds for t in ts if t.op == "wbfs"]
+    assert max(b_rounds) < min(w_rounds)  # BFS exits earlier on this graph
+    assert svc.stats["repacks"] >= 1
+    assert 0 < svc.occupancy < 1
+    # and the early exit is invisible in the results
+    np.testing.assert_array_equal(
+        np.asarray(ts[1].result), np.asarray(wbfs(g, 5))
+    )
+
+
+def test_word_attribution_conserved_and_early_exit_uncharged():
+    g = _graph(weighted=True)
+    svc = _svc(g, slo=0.01, max_batch=4, round_quantum=2)
+    ts = [
+        svc.submit("bfs", src=0, now=0.0, tenant="a"),
+        svc.submit("wbfs", src=5, now=0.0, tenant="b"),
+        svc.submit("bfs", src=9, now=0.0, tenant="a"),
+    ]
+    done = svc.tick(0.02)
+    total = sum(t.words for t in done)
+    expect = svc.stats["cohort_rounds"] * svc._round_words
+    assert abs(total - expect) < 1e-6  # every streamed word lands on a lane
+    # the long lane pays for the rounds it ran alone
+    short = min(ts, key=lambda t: t.rounds)
+    long = max(ts, key=lambda t: t.rounds)
+    assert long.words > short.words
+    assert abs(svc.ledgers.total_charged() - total) < 1e-6
+
+
+# ----------------------------------------------------------------------
+# Admission control
+# ----------------------------------------------------------------------
+def test_admission_rejects_over_budget_tenant():
+    g = _graph()
+    svc = _svc(g, budgets={"small": (10.0, 0.0)})
+    r = svc.submit("bfs", src=0, tenant="small", now=0.0)
+    assert r.status == "rejected"
+    assert svc.stats["rejected"] == 1
+    ok = svc.submit("bfs", src=0, tenant="other", now=0.0)  # unlimited
+    assert ok.status == "queued"
+    assert svc.queue_depth == 1  # rejected ticket never queued
+
+
+def test_admission_defers_until_refill_covers():
+    g = _graph(weighted=True)
+    cap = 7000.0
+    svc = _svc(
+        g, budgets={"t": (cap, 2000.0)}, admission="defer", slo=0.1
+    )
+    a = svc.submit("wbfs", src=1, tenant="t", now=0.0)
+    assert a.status == "queued"
+    d = svc.submit("wbfs", src=3, tenant="t", now=0.0)
+    assert d.status == "deferred"  # reserve holds a's estimate
+    out = svc.tick(0.101)
+    assert [t.id for t in out] == [a.id]
+    # a's actual cost overdrew the bucket; d stays deferred until refills
+    # repay the overdraft AND cover d's estimate
+    assert svc.ledgers.ledger("t").available < 0
+    assert svc.tick(1.0) == [] and d.status == "deferred"
+    out = svc.tick(100.0)  # long refill; d admitted, new deadline 100.1
+    assert out == [] and d.status == "queued"
+    out = svc.tick(100.11)
+    assert [t.id for t in out] == [d.id]
+    np.testing.assert_array_equal(np.asarray(d.result), np.asarray(wbfs(g, 3)))
+    led = svc.ledgers.ledger("t")
+    assert abs(led.charged - (a.words + d.words)) < 1e-6
+
+
+def test_reserve_settles_to_actuals():
+    g = _graph()
+    svc = _svc(g, budgets={"t": (1e9, 0.0)})
+    t = svc.submit("bfs", src=0, tenant="t", now=0.0)
+    led = svc.ledgers.ledger("t")
+    assert led.available == 1e9 - t.est_words  # estimate reserved
+    svc.tick(1.0)
+    assert abs(led.available - (1e9 - t.words)) < 1e-6  # settled to actual
+    assert abs(led.charged - t.words) < 1e-6
+
+
+# ----------------------------------------------------------------------
+# Engine delegation, occupancy stats
+# ----------------------------------------------------------------------
+def test_non_traversal_ops_drain_through_engine():
+    g = _graph()
+    svc = _svc(g, slo=0.01)
+    t1 = svc.submit("bfs", src=0, now=0.0)
+    t2 = svc.submit("ppr", src=4, now=0.0)
+    done = svc.tick(0.02)
+    assert {t.id for t in done} == {t1.id, t2.id}
+    assert svc.engine.stats["served"] == 1  # only the ppr went engine-side
+    assert t2.words > 0
+    assert t2.result[0].shape == (g.n,)
+
+
+def test_engine_stats_track_padded_lanes():
+    from repro.serving import QueryEngine
+
+    g = _graph()
+    eng = QueryEngine(g, max_batch=8)
+    for s in (0, 1, 2):  # k=3 pads to B=4
+        eng.submit("bfs", src=s)
+    eng.flush()
+    assert eng.stats["lanes"] == 4
+    assert eng.stats["padded"] == 1
+    assert eng.stats["served"] == 3
+    assert eng.occupancy == 0.75
+
+
+def test_service_occupancy_counts_inert_lane_slots():
+    g = _graph()
+    svc = _svc(g, slo=0.01, max_batch=8, round_quantum=100)
+    # quantum too deep to repack: 3 lanes pad to 4, and drained lanes
+    # keep occupying columns -> occupancy strictly below 1
+    for s in (0, 9, 33):
+        svc.submit("bfs", src=s, now=0.0)
+    svc.tick(0.02)
+    assert svc.stats["repacks"] == 0
+    assert 0 < svc.occupancy < 1
+    total = svc.stats["lane_rounds_total"]
+    active = svc.stats["active_lane_rounds"]
+    assert total == 4 * svc.stats["cohort_rounds"]
+    assert active < total
+
+
+# ----------------------------------------------------------------------
+# map_lanes + cohort primitives
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["dense", "chunked", "auto"])
+def test_map_lanes_identity_on_unselected(mode):
+    g = _graph(weighted=True)
+    B, n = 4, g.n
+    fm = np.zeros((B, n), bool)
+    fm[0, :5] = True
+    fm[1, 10:20] = True
+    fm[2, 3] = True
+    fm[3, 40:60] = True
+    fm = jnp.asarray(fm)
+    xs = jnp.arange(B * n, dtype=jnp.int32).reshape(B, n) % 97
+    add1 = lambda x, w: x + 1
+    ml = jnp.asarray([True, False, True, False])
+    out, touched = edgemap_reduce_batched(
+        g, fm, xs, map_fn=add1, map_lanes=ml, monoid="min", mode=mode
+    )
+    on, t_on = edgemap_reduce_batched(g, fm, xs, map_fn=add1, monoid="min", mode=mode)
+    off, _ = edgemap_reduce_batched(g, fm, xs, monoid="min", mode=mode)
+    for b in (0, 2):
+        np.testing.assert_array_equal(np.asarray(out[b]), np.asarray(on[b]))
+    for b in (1, 3):
+        np.testing.assert_array_equal(np.asarray(out[b]), np.asarray(off[b]))
+    np.testing.assert_array_equal(np.asarray(touched), np.asarray(t_on))
+
+
+def test_cohort_pad_lanes_inert_and_uncharged():
+    g = _graph(weighted=True)
+    state, weighted = traversal_cohort_init(g, ["bfs", "wbfs", "bfs"], [0, 5, -1])
+    state, lane_rounds, active = traversal_cohort_rounds(
+        g, state, weighted, quantum=64
+    )
+    lr = np.asarray(lane_rounds)
+    assert lr[2] == 0  # src=-1 pad never active
+    assert not bool(np.any(np.asarray(active)))
+    wp, wl = bfs(g, 0)
+    np.testing.assert_array_equal(np.asarray(state["parents"][0]), np.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(state["levels"][0]), np.asarray(wl))
+    np.testing.assert_array_equal(np.asarray(state["dist"][1]), np.asarray(wbfs(g, 5)))
+
+
+def test_service_steady_state_never_retraces():
+    g = _graph(weighted=True)
+    svc = _svc(g, slo=0.01, max_batch=4)
+    for rep in range(3):
+        now = float(rep)
+        for op, s in [("bfs", 0), ("wbfs", 5), ("bfs", 9)]:
+            svc.submit(op, src=s, now=now)
+        done = svc.tick(now + 0.02)
+        assert len(done) == 3
+    assert all(c == 1 for c in svc.trace_counts.values())
+
+
+# ----------------------------------------------------------------------
+# Mesh leg (subprocess over fake CPU devices)
+# ----------------------------------------------------------------------
+def test_service_on_sharded_plan_subprocess():
+    out = _run(
+        """
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+)
+import numpy as np
+from repro.core import make_plan
+from repro.compat import make_mesh
+from repro.data import rmat_graph
+from repro.algorithms import bfs, wbfs
+from repro.serving import ServingService, ServiceConfig
+
+g = rmat_graph(128, 512, weighted=True, seed=7, block_size=32)
+plan = make_plan(g, mesh=make_mesh((2,), ("data",)))
+svc = ServingService(g, plan=plan, config=ServiceConfig(slo=0.01, max_batch=4))
+t1 = svc.submit("bfs", src=0, now=0.0)
+t2 = svc.submit("wbfs", src=5, now=0.0)
+done = svc.tick(0.02)
+assert len(done) == 2
+wp, wl = bfs(g, 0, plan=plan)
+np.testing.assert_array_equal(np.asarray(t1.result[0]), np.asarray(wp))
+np.testing.assert_array_equal(np.asarray(t1.result[1]), np.asarray(wl))
+np.testing.assert_array_equal(np.asarray(t2.result), np.asarray(wbfs(g, 5, plan=plan)))
+assert svc.cost.large_reads > 0
+print("MESH_SERVICE_OK")
+"""
+    )
+    assert "MESH_SERVICE_OK" in out

@@ -14,7 +14,12 @@ Two checks, both fail-loud (exit 1):
    from ``repro.core`` and ``repro.serving`` that is a class or function
    must have a non-empty docstring.  Data constants (e.g. ``NULL_BUCKET``)
    and typing aliases (``GraphLike``) carry their documentation in the
-   module docstring instead and are exempt.
+   module docstring instead and are exempt.  For the serving API
+   (``MEMBER_AUDITED``) the audit descends INTO exported classes: every
+   public method and property defined on ``QueryEngine``,
+   ``ServingService`` etc. must be documented too — the serving tier is
+   driven through its methods (``submit`` / ``tick`` / ``flush``), so a
+   class-level docstring alone is not a usable API reference.
 
 Usage (from the repo root, CPU JAX):
 
@@ -34,6 +39,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 AUDITED_MODULES = ("repro.core", "repro.serving")
+MEMBER_AUDITED = ("repro.serving",)  # classes audited method-by-method
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
 
 
@@ -67,6 +73,28 @@ def run_snippets(paths: list[str]) -> list[str]:
     return failures
 
 
+def audit_members(modname: str, clsname: str, cls) -> tuple[int, list[str]]:
+    """Audit a class's own public methods and properties for docstrings."""
+    checked, failures = 0, []
+    for mname, member in vars(cls).items():
+        if mname.startswith("_"):
+            continue
+        if isinstance(member, property):
+            target = member
+        elif isinstance(member, (staticmethod, classmethod)):
+            target = member.__func__
+        elif inspect.isroutine(member):
+            target = member
+        else:
+            continue  # dataclass fields, class attrs: class doc covers them
+        checked += 1
+        if not (inspect.getdoc(target) or "").strip():
+            failures.append(
+                f"{modname}.{clsname}.{mname}: public but undocumented"
+            )
+    return checked, failures
+
+
 def run_docstring_audit() -> list[str]:
     failures = []
     for modname in AUDITED_MODULES:
@@ -86,6 +114,10 @@ def run_docstring_audit() -> list[str]:
             checked += 1
             if not (inspect.getdoc(obj) or "").strip():
                 failures.append(f"{modname}.{name}: public but undocumented")
+            if inspect.isclass(obj) and modname in MEMBER_AUDITED:
+                n, fails = audit_members(modname, name, obj)
+                checked += n
+                failures += fails
         print(f"  {modname}: {checked} documented symbols audited")
     return failures
 
