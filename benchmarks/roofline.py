@@ -7,6 +7,10 @@ dry-run's compiled artifacts.
 
 Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI (one effective link per collective hop — conservative).
+The numbers come from the tuning table's ``hardware`` section
+(``repro.tuning.hardware_model``) — the SAME description the calibration
+pass records — so roofline terms and measured-cost autotuning can never
+drift onto two divergent hardware models.
 
 Also reported: MODEL_FLOPS / HLO_FLOPs ("useful fraction" — catches remat
 and redundancy waste) and the dominant bottleneck term.
@@ -17,9 +21,12 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+from repro.tuning import hardware_model
+
+_HW = hardware_model()
+PEAK_FLOPS = _HW["peak_flops"]
+HBM_BW = _HW["hbm_bw"]
+ICI_BW = _HW["ici_bw"]
 
 RESULTS_DIR = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results", "dryrun"

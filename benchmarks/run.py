@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
                   + PSAM edge-read amortization at B=8
   table_latency — ServingService: p50/p99 latency over Poisson + bursty
                   arrival traces, qps-vs-SLO curve, saturated-B8 vs engine
+  table_autotune— tuning: strategy="auto" vs every fixed strategy across a
+                  frontier-density sweep (in-bench asserted) + BFS/wBFS/
+                  PageRank replays under an in-run calibrated table
   fig_layout    — §5.2: pod-replicated layout ↔ collective bytes
   kernels_micro — Pallas kernels vs jnp oracles
   roofline      — §Roofline terms from the dry-run artifacts (if present)
@@ -29,8 +32,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
-                   table4_filter, table5_edgemap, table_compression,
-                   table_distributed, table_latency, table_serving)
+                   table4_filter, table5_edgemap, table_autotune,
+                   table_compression, table_distributed, table_latency,
+                   table_serving)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -63,6 +67,13 @@ def main() -> None:
         # arrival traces + the saturated-B8 qps parity with the engine
         "table_latency": lambda: table_latency.run(
             n=4096 if args.full else 1024, m=32768 if args.full else 8192
+        ),
+        # auto-vs-fixed strategy spread with an in-run calibrated table;
+        # always the calibration-default workload — the in-bench tolerance
+        # asserts were validated at this size, smaller graphs compress the
+        # strategy spread below the asserted margins
+        "table_autotune": lambda: table_autotune.run(
+            n=2048, m=16384, reps=3 if args.full else 2
         ),
         "kernels_micro": kernels_micro.run,
         "fig_layout": fig_layout.run,

@@ -49,12 +49,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..tuning.defaults import DEFAULT_CHUNK_BLOCKS, DEFAULT_DENSE_FRAC
 from .backend import GraphLike, dense_block_view, tile_block_view
 from .graph_filter import GraphFilter, edge_active_words, unpack_word_bits
 from .primitives import compact_mask, monoid_identity, segment_reduce
 from .vertex_subset import VertexSubset
-
-DEFAULT_CHUNK_BLOCKS = 256
 
 
 def _identity_map(x_src, w):
@@ -265,8 +264,9 @@ def edgemap_reduce(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
     mode: str = "auto",
-    dense_frac: int | None = None,
+    dense_frac: float | None = None,
     chunk_blocks: int | None = None,
+    auto_sparse: str | None = None,
     plan=None,
 ):
     """Direction-optimized edgeMap (Beamer §4.1.1).
@@ -305,12 +305,15 @@ def edgemap_reduce(
                 mode=mode,
                 dense_frac=dense_frac,
                 chunk_blocks=chunk_blocks,
+                auto_sparse=auto_sparse,
             )
         mode = plan.resolve_mode(mode)
         dense_frac = plan.dense_frac if dense_frac is None else dense_frac
         chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
-    dense_frac = 20 if dense_frac is None else dense_frac
+        auto_sparse = plan.auto_sparse if auto_sparse is None else auto_sparse
+    dense_frac = DEFAULT_DENSE_FRAC if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
+    auto_sparse = "sparse" if auto_sparse is None else auto_sparse
     if mode == "dense":
         return edgemap_dense(
             g, frontier_mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active
@@ -341,6 +344,7 @@ def edgemap_reduce(
             map_fn=map_fn,
             edge_active=edge_active,
             chunk_blocks=chunk_blocks,
+            streamed=auto_sparse == "sparse_streamed",
         ),
     )
 
@@ -495,8 +499,10 @@ def edgemap_reduce_batched(
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
     mode: str = "auto",
-    dense_frac: int | None = None,
+    dense_frac: float | None = None,
     chunk_blocks: int | None = None,
+    auto_sparse: str | None = None,
+    flavor_crossover: float | None = None,
     plan=None,
     map_lanes: jnp.ndarray | None = None,
 ):
@@ -547,13 +553,23 @@ def edgemap_reduce_batched(
                 mode=mode,
                 dense_frac=dense_frac,
                 chunk_blocks=chunk_blocks,
+                auto_sparse=auto_sparse,
                 map_lanes=map_lanes,
             )
         mode = plan.resolve_mode(mode)
-        dense_frac = plan.dense_frac if dense_frac is None else dense_frac
+        # batched rounds take the BATCHED knobs: their own Beamer threshold
+        # (the batched dense body amortizes one shared sweep over all B
+        # lanes) and their own sparse flavor (one shared live-block loop vs
+        # B vmapped chunk loops) — neither crossover transfers from the
+        # single-query calibration
+        dense_frac = plan.dense_frac_batched if dense_frac is None else dense_frac
         chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
-    dense_frac = 20 if dense_frac is None else dense_frac
+        auto_sparse = plan.auto_sparse_batched if auto_sparse is None else auto_sparse
+        if flavor_crossover is None:
+            flavor_crossover = plan.batched_flavor_crossover
+    dense_frac = DEFAULT_DENSE_FRAC if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
+    auto_sparse = "sparse" if auto_sparse is None else auto_sparse
 
     def lane_map(ml):
         # per-lane map selection under vmap: ml is this lane's scalar flag,
@@ -605,13 +621,15 @@ def edgemap_reduce_batched(
         return sparse_vmap(frontier_masks, xb)
     if mode == "sparse":
         return sparse_vmap(frontier_masks, xb)
-    # auto: per-lane Beamer predicate.  When the whole batch agrees (always
-    # true at B=1 — multi_source_bfs and the forest algorithms live there)
-    # run ONLY the agreed branch, like the single-query lax.cond; only a
-    # genuinely split batch pays both shared-sweep branches and selects per
-    # lane (what vmap(lax.cond) lowers to anyway).
+    # auto: ONE Beamer predicate for the whole batch, on the aggregate
+    # density.  Per-lane selection can't win here: the batched dense body is
+    # one shared sweep regardless of density, and the batched sparse body's
+    # chunk loop is paced by the densest lane — so a straddling batch that
+    # ran both and picked per lane (what vmap(lax.cond) lowers to) would pay
+    # dense + sparse for a result bit-identical to either branch alone.  At
+    # B=1 the aggregate IS the lane predicate, matching single-query auto.
     sum_deg = jnp.sum(jnp.where(frontier_masks, g.degrees[None, :], 0), axis=1)
-    use_dense = sum_deg * dense_frac > g.m                         # (B,)
+    use_dense = jnp.sum(sum_deg) * dense_frac > frontier_masks.shape[0] * g.m
 
     def dense_all():
         return edgemap_dense_batched(
@@ -620,20 +638,35 @@ def edgemap_reduce_batched(
         )
 
     def sparse_all():
+        # the calibrated sparse flavor: the streamed union path when the
+        # table picked it AND the backend can stream, plain vmapped chunks
+        # otherwise — per-lane results are bit-identical either way
+        if (
+            auto_sparse == "sparse_streamed"
+            and _streaming_decoder(g, edge_active) is not None
+        ):
+            def streamed():
+                return edgemap_chunked_batched_streamed(
+                    g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
+                    edge_active=edge_active, chunk_blocks=chunk_blocks,
+                    map_lanes=map_lanes,
+                )
+
+            if flavor_crossover is None or flavor_crossover >= 1.0:
+                return streamed()
+            # measured flavor crossover: the shared live-block loop wins
+            # only while the union frontier is sparse enough — switch to
+            # the vmapped chunk loops above it, at the batch's mean lane
+            # density (the quantity the calibration sweep varied)
+            mean_density = jnp.sum(sum_deg) / (xb.shape[0] * g.m)
+            return lax.cond(
+                mean_density < flavor_crossover,
+                streamed,
+                lambda: sparse_vmap(frontier_masks, xb),
+            )
         return sparse_vmap(frontier_masks, xb)
 
-    def split():
-        d_out, d_t = dense_all()
-        s_out, s_t = sparse_all()
-        out = jnp.where(use_dense[:, None], d_out, s_out)
-        touched = jnp.where(use_dense[:, None], d_t, s_t)
-        return out, touched
-
-    return lax.cond(
-        jnp.all(use_dense),
-        dense_all,
-        lambda: lax.cond(~jnp.any(use_dense), sparse_all, split),
-    )
+    return lax.cond(use_dense, dense_all, sparse_all)
 
 
 def edge_map_batched(

@@ -55,6 +55,7 @@ from jax.sharding import PartitionSpec as P
 
 import numpy as np
 
+from ..tuning.defaults import DEFAULT_CHUNK_BLOCKS, DEFAULT_DENSE_FRAC
 from .compressed import CompressedCSR, exception_dense
 from .csr import CSRGraph, graph_spec, sharded_block_counts
 from .graph_filter import edge_active_words
@@ -286,6 +287,34 @@ class ExecutionPlan:
                   analogue of gradient compression
     chunk_blocks— chunk size for the sparse strategy
     dense_frac  — Beamer threshold: dense when frontier degree > m/dense_frac
+                  (measured plans carry 1/d* for the calibrated dense/sparse
+                  crossover density d* instead of the hand-picked constant)
+    auto_sparse — which sparse flavor the 'auto' strategy's sparse branch
+                  runs: 'sparse' | 'sparse_streamed' (calibration picks the
+                  one that measured cheaper; non-streaming backends fall
+                  back inside edgemap_chunked either way)
+    dense_frac_batched — Beamer threshold for BATCHED rounds, from the
+                  batched density sweep's own crossover: the batched dense
+                  body amortizes one shared sweep over all B lanes, so
+                  dense wins batched at far lower densities than
+                  single-query and the single-query crossover does not
+                  transfer
+    auto_sparse_batched — the sparse flavor for BATCHED auto rounds,
+                  calibrated separately because the crossover is
+                  B-dependent: the streamed union path runs one live-block
+                  loop shared by all B lanes while plain sparse vmaps B
+                  chunk loops, so streaming can win batched while losing
+                  single-query
+    batched_flavor_crossover — measured density below which the batched
+                  streamed union actually wins: when set (and
+                  auto_sparse_batched is 'sparse_streamed'), batched auto's
+                  sparse branch picks its flavor at runtime from the
+                  batch's mean lane density; None runs the static flavor
+                  unconditionally
+    decisions   — the TuningDecision behind this plan's knobs (source
+                  'measured' | 'constants', crossover density, table host) —
+                  recorded by make_plan so tests / PSAM accounting can see
+                  exactly what ran and why
     """
 
     mesh: Any = None
@@ -294,14 +323,41 @@ class ExecutionPlan:
     strategy: str = "auto"
     reduce_mode: str = "flat"
     state_dtype: Any = None
-    chunk_blocks: int = 256
-    dense_frac: int = 20
+    chunk_blocks: int = DEFAULT_CHUNK_BLOCKS
+    dense_frac: float = DEFAULT_DENSE_FRAC
+    auto_sparse: str = "sparse"
+    dense_frac_batched: float = DEFAULT_DENSE_FRAC
+    auto_sparse_batched: str = "sparse"
+    batched_flavor_crossover: float | None = None
+    decisions: Any = None
 
     @property
     def axes(self) -> tuple:
         if self.mesh is None:
             return ()
         return tuple(self.shard_axes) or tuple(self.mesh.axis_names)
+
+    @property
+    def tuning_key(self) -> tuple:
+        """Hashable summary of the knobs that change compiled executables.
+
+        The piece of a compiled-callable cache key that must vary when a
+        calibrated table changes a decision — recompiling is correct when
+        the strategy / sparse flavor / thresholds changed, and a cache hit
+        is correct when they didn't (zero steady-state retraces either
+        way).  ``QueryEngine`` and ``ServingService`` fold this into their
+        executable cache keys."""
+        return (
+            self.strategy,
+            self.auto_sparse,
+            self.auto_sparse_batched,
+            None
+            if self.batched_flavor_crossover is None
+            else float(self.batched_flavor_crossover),
+            float(self.dense_frac),
+            float(self.dense_frac_batched),
+            int(self.chunk_blocks),
+        )
 
     @property
     def num_shards(self) -> int:
@@ -436,6 +492,34 @@ class ExecutionPlan:
         )
 
 
+def _resolve_decision(backend: str, strategy: str, tuning):
+    """The TuningDecision behind a plan's knobs.
+
+    ``tuning`` is a :class:`repro.tuning.TuningTable` (always consulted),
+    ``"default"`` (the shipped table, consulted for ``strategy="auto"``
+    plans only — fixed-strategy plans keep the documented constants unless
+    a table is passed explicitly), or ``None``/``"off"`` (static constants).
+    Backends the table has no measurements for — including ``"auto"`` when
+    no graph was passed — fall back to the constants decision.
+    """
+    from ..tuning.table import TuningTable, constants_decision, default_table
+
+    if tuning is None or tuning == "off":
+        return constants_decision(backend, strategy)
+    if isinstance(tuning, TuningTable):
+        return tuning.decide(backend, strategy)
+    if tuning == "default":
+        if strategy == "auto":
+            try:
+                return default_table().decide(backend, strategy)
+            except (OSError, ValueError):  # missing/stale shipped table
+                return constants_decision(backend, strategy)
+        return constants_decision(backend, strategy)
+    raise ValueError(
+        f"tuning must be a TuningTable, 'default', 'off' or None; got {tuning!r}"
+    )
+
+
 def make_plan(
     g=None,
     *,
@@ -444,10 +528,22 @@ def make_plan(
     shard_axes: tuple = (),
     reduce_mode: str = "flat",
     state_dtype=None,
-    chunk_blocks: int = 256,
-    dense_frac: int = 20,
+    chunk_blocks: int | None = None,
+    dense_frac: float | None = None,
+    tuning="default",
 ) -> ExecutionPlan:
-    """Build an :class:`ExecutionPlan`, recording the backend from ``g``."""
+    """Build an :class:`ExecutionPlan`, recording the backend from ``g``.
+
+    Knob resolution, most-specific wins: explicit ``chunk_blocks`` /
+    ``dense_frac`` arguments → the ``tuning`` source (a calibrated
+    :class:`~repro.tuning.TuningTable`, or the shipped default table for
+    ``strategy="auto"`` plans) → the static constants in
+    ``repro.tuning.defaults``.  The resolved :class:`TuningDecision` —
+    including where each value came from (``source='measured'`` vs
+    ``'constants'``) and the measured crossover density behind a calibrated
+    ``dense_frac`` — is recorded on ``plan.decisions``.  Pass
+    ``tuning=None`` (or ``"off"``) to pin the historical constant behavior.
+    """
     backend = "auto"
     if isinstance(g, ShardedGraph):
         g = g.shards
@@ -455,6 +551,27 @@ def make_plan(
         backend = "compressed"
     elif isinstance(g, CSRGraph):
         backend = "csr"
+    decision = _resolve_decision(backend, strategy, tuning)
+    if dense_frac is not None:
+        # an explicit threshold pins BOTH predicates — the caller is
+        # overriding the crossover, not just the single-query one
+        dense_frac_batched = float(dense_frac)
+    else:
+        dense_frac = decision.dense_frac
+        dense_frac_batched = (
+            float(decision.dense_frac_batched)
+            if decision.dense_frac_batched is not None
+            else float(dense_frac)
+        )
+    if chunk_blocks is None:
+        chunk_blocks = decision.chunk_blocks
+    decision = dataclasses.replace(
+        decision,
+        strategy=strategy,
+        dense_frac=float(dense_frac),
+        dense_frac_batched=dense_frac_batched,
+        chunk_blocks=int(chunk_blocks),
+    )
     return ExecutionPlan(
         mesh=mesh,
         shard_axes=tuple(shard_axes),
@@ -462,8 +579,13 @@ def make_plan(
         strategy=strategy,
         reduce_mode=reduce_mode,
         state_dtype=state_dtype,
-        chunk_blocks=chunk_blocks,
-        dense_frac=dense_frac,
+        chunk_blocks=int(chunk_blocks),
+        dense_frac=float(dense_frac),
+        auto_sparse=decision.auto_sparse,
+        dense_frac_batched=dense_frac_batched,
+        auto_sparse_batched=decision.auto_sparse_batched,
+        batched_flavor_crossover=decision.batched_flavor_crossover,
+        decisions=decision,
     )
 
 
@@ -547,6 +669,8 @@ def _sharded_edgemap_call(
     mode,
     dense_frac,
     chunk_blocks,
+    auto_sparse=None,
+    flavor_crossover=None,
     map_lanes=None,
 ):
     """Shared shard/filter plumbing for both sharded executors.
@@ -563,6 +687,7 @@ def _sharded_edgemap_call(
     mode = plan.resolve_mode(mode)
     dense_frac = plan.dense_frac if dense_frac is None else dense_frac
     chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
+    auto_sparse = plan.auto_sparse if auto_sparse is None else auto_sparse
     n = g.n
     out_dtype = x.dtype
 
@@ -590,6 +715,9 @@ def _sharded_edgemap_call(
     def local(sg, fm, xv, *rest):
         g_local = jax.tree.map(lambda a: a[0], sg.shards)
         kwargs = {} if map_fn is None else {"map_fn": map_fn}
+        if flavor_crossover is not None:
+            # batched-executor-only knob (edgemap_reduce has no such param)
+            kwargs["flavor_crossover"] = flavor_crossover
         rest = list(rest)
         if has_active:
             # shard-local packed filter words, passed through verbatim:
@@ -608,6 +736,7 @@ def _sharded_edgemap_call(
             mode=mode,
             dense_frac=dense_frac,
             chunk_blocks=chunk_blocks,
+            auto_sparse=auto_sparse,
             **kwargs,
         )
         return _combine_shards(plan, out, touched, monoid, n, out_dtype)
@@ -642,8 +771,9 @@ def sharded_edgemap_reduce(
     map_fn=None,
     edge_active=None,
     mode: str | None = None,
-    dense_frac: int | None = None,
+    dense_frac: float | None = None,
     chunk_blocks: int | None = None,
+    auto_sparse: str | None = None,
 ):
     """Direction-optimized edgeMap over a mesh: per-shard local pass through
     the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
@@ -666,6 +796,7 @@ def sharded_edgemap_reduce(
         local_reduce=edgemap_reduce,
         monoid=monoid, map_fn=map_fn, edge_active=edge_active,
         mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+        auto_sparse=auto_sparse,
     )
 
 
@@ -679,8 +810,9 @@ def sharded_edgemap_reduce_batched(
     map_fn=None,
     edge_active=None,
     mode: str | None = None,
-    dense_frac: int | None = None,
+    dense_frac: float | None = None,
     chunk_blocks: int | None = None,
+    auto_sparse: str | None = None,
     map_lanes=None,
 ):
     """Batched edgeMap over a mesh: B queries share each shard's one local
@@ -698,10 +830,20 @@ def sharded_edgemap_reduce_batched(
     with no fallback."""
     from .edgemap import edgemap_reduce_batched
 
+    if auto_sparse is None:
+        # batched rounds have their own calibrated sparse flavor (the
+        # streamed/plain crossover is B-dependent — see ExecutionPlan)
+        auto_sparse = plan.auto_sparse_batched
+    if dense_frac is None:
+        # ...and their own calibrated Beamer threshold (the batched dense
+        # body amortizes one shared sweep over all B lanes)
+        dense_frac = plan.dense_frac_batched
     return _sharded_edgemap_call(
         plan, g, frontier_masks, xb,
         local_reduce=edgemap_reduce_batched,
         monoid=monoid, map_fn=map_fn, edge_active=edge_active,
         mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+        auto_sparse=auto_sparse,
+        flavor_crossover=plan.batched_flavor_crossover,
         map_lanes=map_lanes,
     )

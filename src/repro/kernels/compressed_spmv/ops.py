@@ -27,6 +27,7 @@ from ...core.graph_filter import (
     unpack_word_bits,
 )
 from ...core.primitives import compact_mask
+from ...tuning.defaults import DEFAULT_TILE_BLOCKS
 from .compressed_spmv import (
     compressed_block_spmv_pallas,
     compressed_chunked_spmv_pallas,
@@ -45,7 +46,7 @@ def compressed_block_spmv(
     *,
     n: int,
     interpret: bool = True,
-    tile_blocks: int = 8,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ):
     """Raw kernel entry: per-block partial sums off the compressed stream.
 
@@ -115,7 +116,7 @@ def compressed_spmv_vertex(
     *,
     edge_active=None,
     interpret: bool = True,
-    tile_blocks: int = 8,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """out[v] = Σ_{(v,u) active} w_vu · x[u], straight off the compressed
     stream.
@@ -262,7 +263,7 @@ def compressed_spmv_vertex_chunked(
     f: GraphFilter | None = None,
     *,
     edge_active=None,
-    tile_blocks: int = 8,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Frontier-sparse SpMV: sums over ONLY the frontier-owned blocks.
@@ -351,7 +352,7 @@ def compressed_spmv_vertex_batched(
     *,
     edge_active=None,
     interpret: bool = True,
-    tile_blocks: int = 8,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """Batched ``compressed_spmv_vertex``: ``xb`` is (B, n); returns (B, n).
 

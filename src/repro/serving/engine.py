@@ -10,7 +10,8 @@ The :class:`QueryEngine` is the throughput lever the semi-external systems
     submit() ──► per-(op, params) buckets ──► pad to power-of-two B
                                                      │
                  compiled-executable cache ◄── flush()│
-                 keyed (backend, mesh, op, B)        ▼
+                 keyed (backend, mesh,               ▼
+                       tuning, op, B)
                  ┌────────────────────────────────────────────┐
                  │ batched algorithm (bfs_batched, …)         │
                  │   └─ edgemap_reduce_batched: each round    │
@@ -32,7 +33,7 @@ Mechanics:
   lanes are real-but-discarded queries; batched ops are bit-identical per
   query, so padding never perturbs a real lane.
 * **Executable cache** — compiled callables are keyed by
-  ``(backend type, mesh, op, B)`` (+ the bucket's scalar params, which are
+  ``(backend type, mesh, plan tuning decision, op, B)`` (+ the bucket's scalar params, which are
   trace constants); a repeated ``(op, B)`` bucket re-enters the cached
   executable with zero retraces (``trace_counts`` makes this testable).
 * **Planner-native** — the engine drains every bucket through the
@@ -55,6 +56,7 @@ from ..algorithms.local import personalized_pagerank_batched
 from ..algorithms.traversal import bfs_batched, wbfs_batched
 from ..compat import use_mesh
 from ..core.psam import PSAMCost
+from ..tuning.defaults import DEFAULT_MAX_BATCH
 
 
 def _bfs_sweeps(res) -> int:
@@ -154,7 +156,11 @@ class QueryEngine:
     plan      : ExecutionPlan | None — where the batches run; the graph is
                 prepared (sharded + placed) once at construction
     max_batch : cap on the padded batch width B (buckets larger than this
-                split into max_batch-wide chunks)
+                split into max_batch-wide chunks).  Default (None): the
+                plan's tuning decision — the measured knee of the per-query
+                cost curve over B (``plan.decisions.max_batch``) — falling
+                back to the static ``DEFAULT_MAX_BATCH`` for plan-less
+                engines or constants-only plans
 
     ``stats`` counts submitted/served queries, drained batches, total batch
     columns (``lanes``) and padding columns (``padded``) — so batch
@@ -163,10 +169,15 @@ class QueryEngine:
     small memory).
     """
 
-    def __init__(self, g, *, plan=None, max_batch: int = 8):
+    def __init__(self, g, *, plan=None, max_batch: int | None = None):
         self.graph = g
         self.plan = plan
         self.prepared = g if plan is None else plan.prepare(g)
+        if max_batch is None:
+            decisions = getattr(plan, "decisions", None)
+            max_batch = (
+                decisions.max_batch if decisions is not None else DEFAULT_MAX_BATCH
+            )
         self.max_batch = int(max_batch)
         self.cost = PSAMCost()
         self._pending: dict[tuple, list[tuple[int, dict]]] = {}
@@ -187,6 +198,11 @@ class QueryEngine:
         else:
             self._mesh_key = None
         self._backend_key = type(g).__name__
+        # the tuning decisions are trace constants of every compiled
+        # executable (strategy, auto_sparse, dense_frac, chunk_blocks) —
+        # fold them into the cache key so a recalibrated table recompiles
+        # and an unchanged one keeps zero steady-state retraces
+        self._tuning_key = plan.tuning_key if plan is not None else None
 
     # ------------------------------------------------------------------
     def submit(self, op: str, **params) -> QueryHandle:
@@ -265,10 +281,11 @@ class QueryEngine:
     def _compiled_fn(self, op, scalars, B, spec):
         """Fetch or build the jitted executable for one cache key.
 
-        Keyed ``(backend, mesh, op, B, scalars)``; the traced closure bumps
-        ``trace_counts`` so steady-state zero-retrace serving is testable.
+        Keyed ``(backend, mesh, tuning, op, B, scalars)``; the traced
+        closure bumps ``trace_counts`` so steady-state zero-retrace serving
+        is testable.
         """
-        key = (self._backend_key, self._mesh_key, op, B, scalars)
+        key = (self._backend_key, self._mesh_key, self._tuning_key, op, B, scalars)
         fn = self._compiled.get(key)
         if fn is None:
             sc = dict(scalars)

@@ -54,6 +54,7 @@ from ..algorithms.traversal import (
 )
 from ..compat import use_mesh
 from ..core.psam import TenantLedgers, edgemap_round_read_words
+from ..tuning.defaults import DEFAULT_EST_ROUNDS
 from .engine import QueryEngine, _pow2_batch
 
 TRAVERSAL_OPS = ("bfs", "wbfs")
@@ -74,18 +75,28 @@ class ServiceConfig:
     fails it immediately, ``"defer"`` parks it until refills cover it
     (its SLO clock restarts at admission).  ``budgets`` maps tenant name
     → ``(capacity_words, refill_rate)``; unnamed tenants are unlimited.
-    ``est_rounds`` sizes the admission estimate: one request is priced at
-    ``est_rounds`` shared sweeps split across ``max_batch`` lanes.
+
+    ``max_batch`` (default ``None``) resolves like the engine's: the
+    plan's measured tuning decision, else the static default — the
+    resolved value is ``service.max_batch``.  ``est_rounds`` sizes the
+    COLD admission estimate: a request whose (op, backend) pair has never
+    drained is priced at ``est_rounds`` shared sweeps split across
+    ``max_batch`` lanes.  Once drains complete, the service prices each
+    op from its own observed round counts — an EWMA (weight
+    ``ewma_alpha`` on the newest drain) settled from the early-exit
+    accounting actuals — so admission reflects what this workload's
+    queries really read, per op and backend, not one flat guess.
     """
 
     slo: float = 0.05
-    max_batch: int = 8
+    max_batch: int | None = None
     depth_trigger: int | None = None
     round_quantum: int = 4
     admission: str = "reject"
     budgets: dict | None = None
     mode: str = "auto"
-    est_rounds: int = 8
+    est_rounds: int = DEFAULT_EST_ROUNDS
+    ewma_alpha: float = 0.25
 
     def __post_init__(self):
         if self.admission not in ("reject", "defer"):
@@ -144,7 +155,13 @@ class ServingService:
     def __init__(self, g, *, plan=None, config: ServiceConfig | None = None):
         self.config = config or ServiceConfig()
         self.engine = QueryEngine(g, plan=plan, max_batch=self.config.max_batch)
+        # resolved batch width (explicit config > plan tuning > default) —
+        # every width decision below uses this, never the raw config field
+        self.max_batch = self.engine.max_batch
         self.plan = plan
+        # per-(op, backend) observed rounds-per-request (EWMA, settled at
+        # drain) — the admission estimate once warm; est_rounds until then
+        self.observed_rounds: dict[tuple, float] = {}
         self.ledgers = TenantLedgers(self.config.budgets)
         if plan is not None:
             self._round_words = plan.edge_read_words_per_round(self.engine.prepared)
@@ -181,7 +198,7 @@ class ServingService:
     @property
     def depth_trigger(self) -> int:
         """Queue depth that triggers an immediate flush."""
-        return self.config.depth_trigger or self.config.max_batch
+        return self.config.depth_trigger or self.max_batch
 
     @property
     def queue_depth(self) -> int:
@@ -206,9 +223,11 @@ class ServingService:
         """Submit one request at virtual time ``now``; returns its ticket.
 
         Admission control runs here: the request's edge reads are
-        estimated (``est_rounds`` sweeps ÷ ``max_batch`` lanes), and if
-        the tenant's token bucket cannot cover the estimate the ticket is
-        rejected or deferred per ``config.admission``.  Admitted tickets
+        estimated from this service's observed rounds for its (op,
+        backend) pair — the flat ``est_rounds`` constant while cold —
+        split across ``max_batch`` lanes, and if the tenant's token
+        bucket cannot cover the estimate the ticket is rejected or
+        deferred per ``config.admission``.  Admitted tickets
         reserve the estimate — settled against actuals when drained — and
         get ``deadline = now + slo``.
         """
@@ -220,7 +239,7 @@ class ServingService:
             params=params,
             arrival=now,
             deadline=now + self.config.slo,
-            est_words=self._estimate_words(),
+            est_words=self._estimate_words(op),
         )
         self._next_id += 1
         self.ledgers.refill(now)
@@ -277,10 +296,26 @@ class ServingService:
         return min((t.deadline for t in self._queue), default=None)
 
     # ------------------------------------------------------------------
-    def _estimate_words(self) -> float:
-        """Admission-time price of one request: ``est_rounds`` shared
-        sweeps' edge reads split across a full batch."""
-        return self._round_words * self.config.est_rounds / self.config.max_batch
+    def _estimate_words(self, op: str) -> float:
+        """Admission-time price of one ``op`` request: its observed
+        rounds-per-request (EWMA over this service's drains of the same
+        (op, backend) pair) worth of shared sweeps split across a full
+        batch — the flat ``est_rounds`` constant only while that pair is
+        still cold."""
+        rounds = self.observed_rounds.get(
+            (op, self.engine._backend_key), float(self.config.est_rounds)
+        )
+        return self._round_words * rounds / self.max_batch
+
+    def _observe_rounds(self, t: ServingTicket) -> None:
+        """Fold one drained ticket's actual round count into the estimate
+        for its (op, backend) pair — EWMA so the estimate tracks workload
+        drift without one outlier query repricing admission."""
+        key = (t.op, self.engine._backend_key)
+        obs = float(max(t.rounds, 1))
+        prev = self.observed_rounds.get(key)
+        a = self.config.ewma_alpha
+        self.observed_rounds[key] = obs if prev is None else (1 - a) * prev + a * obs
 
     def _readmit(self, now: float) -> None:
         """Move deferred tickets whose tenants can now afford them back
@@ -313,12 +348,13 @@ class ServingService:
             else contextlib.nullcontext()
         )
         with ctx:
-            for lo in range(0, len(trav), self.config.max_batch):
-                done += self._drain_cohort(trav[lo : lo + self.config.max_batch], now)
+            for lo in range(0, len(trav), self.max_batch):
+                done += self._drain_cohort(trav[lo : lo + self.max_batch], now)
             if other:
                 done += self._drain_engine_ops(other, now)
         for t in done:
             self.ledgers.ledger(t.tenant).settle(t.est_words, t.words)
+            self._observe_rounds(t)
         self.stats["served"] += len(done)
         return done
 
@@ -337,7 +373,7 @@ class ServingService:
         exactly the rounds it ran.
         """
         k = len(tickets)
-        B = _pow2_batch(k, self.config.max_batch)
+        B = _pow2_batch(k, self.max_batch)
         lane_tickets: list[ServingTicket | None] = list(tickets) + [None] * (B - k)
         ops = [t.op for t in tickets] + ["bfs"] * (B - k)
         srcs = [int(t.params["src"]) for t in tickets] + [-1] * (B - k)
@@ -384,7 +420,7 @@ class ServingService:
             if not active_np.any():
                 return done
             act_idx = np.flatnonzero(active_np)
-            newB = _pow2_batch(len(act_idx), self.config.max_batch)
+            newB = _pow2_batch(len(act_idx), self.max_batch)
             if newB < B:
                 # repack: survivors first, drained rows as inert padding
                 pads = np.flatnonzero(~active_np)[: newB - len(act_idx)]
@@ -438,15 +474,20 @@ class ServingService:
         """Delegate non-traversal tickets to the wrapped engine in one
         flush; the flush's PSAM edge-read delta is attributed equally
         across its tickets (per-op sweep splits are not observable from
-        the batched results, so equal shares keep the total conserved)."""
+        the batched results, so equal shares keep the total conserved).
+        Each ticket's ``rounds`` is the batch-amortized sweep count its
+        word share corresponds to (``words ÷ (round_words / max_batch)``),
+        so the per-op EWMA admission estimate prices engine ops in the
+        same currency as cohort lanes."""
         before = self.engine.cost.large_reads
         handles = [self.engine.submit(t.op, **t.params) for t in tickets]
         results = self.engine.flush()
         share = (self.engine.cost.large_reads - before) / len(tickets)
+        lane_words = self._round_words / self.max_batch
         for h, t in zip(handles, tickets):
             t.result = results[h]
             t.status = "done"
             t.finished_at = now
             t.words += share
-            t.rounds += 1
+            t.rounds += max(1, round(share / lane_words)) if lane_words else 1
         return tickets

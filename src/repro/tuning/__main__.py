@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.tuning [--quick] [--out PATH]``.
+
+Runs :func:`repro.tuning.calibrate` on this host and writes the resulting
+TuningTable JSON.  This is the nightly-CI entry point (``calibrate --quick``
++ artifact upload) and the way to regenerate the shipped
+``default_table.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .measure import calibrate
+from .table import _DEFAULT_PATH
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("--quick", action="store_true", help="small grids (CI)")
+    ap.add_argument("--out", default="tuning_table.json", help="output path")
+    ap.add_argument("--n", type=int, default=2048, help="calibration |V|")
+    ap.add_argument("--m", type=int, default=16384, help="calibration |E|")
+    ap.add_argument("--reps", type=int, default=3, help="timing repetitions")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--shards", action="store_true", help="include the mesh shard sweep"
+    )
+    ap.add_argument(
+        "--default",
+        action="store_true",
+        help=f"write to the shipped default table path ({_DEFAULT_PATH})",
+    )
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    table = calibrate(
+        n=args.n,
+        m=args.m,
+        quick=args.quick,
+        seed=args.seed,
+        reps=args.reps,
+        shards=args.shards,
+    )
+    table.to_dict()["created"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    out = _DEFAULT_PATH if args.default else args.out
+    table.save(out)
+    secs = time.perf_counter() - t0
+
+    print(f"calibrated in {secs:.1f}s on {table.host_key} -> {out}")
+    for backend in table.backends():
+        d = table.decide(backend)
+        print(
+            f"  {backend}: crossover d*={d.crossover_density:.4g} "
+            f"(dense_frac={d.dense_frac:.3g}), chunk_blocks={d.chunk_blocks}, "
+            f"auto_sparse={d.auto_sparse}, max_batch={d.max_batch}, "
+            f"tile_blocks={d.tile_blocks}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

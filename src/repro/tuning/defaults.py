@@ -1,0 +1,46 @@
+"""Tuning-owned constants — the single seam every hand-tuned knob sits behind.
+
+Every threshold in the hot path that used to be a scattered literal lives
+here exactly once, so a measured :class:`~repro.tuning.TuningTable` can
+override it through one well-known name and the code that consumes the knob
+never needs to know whether the value was hand-picked or calibrated:
+
+* ``DEFAULT_DENSE_FRAC``   — the Beamer direction-optimization threshold
+  (dense when the frontier's incident edges exceed ``m / dense_frac``).
+  Previously defaulted independently in ``core/plan.py`` and twice in
+  ``core/edgemap.py``; a calibrated plan replaces it with ``1 / d*`` for
+  the measured dense/sparse crossover density ``d*``.
+* ``DEFAULT_CHUNK_BLOCKS`` — EDGEMAPCHUNKED chunk-pool size (blocks per
+  chunk-loop iteration; the paper's thread-local pool, App. A).
+* ``DEFAULT_TILE_BLOCKS``  — TB, the scalar-prefetched live-id tile of the
+  frontier-sparse Pallas kernel (blocks per ``PrefetchScalarGridSpec``
+  launch, ``repro.kernels.compressed_spmv``).
+* ``DEFAULT_MAX_BATCH``    — serving batch width cap (``QueryEngine`` /
+  ``ServingService``); calibration replaces it with the knee of the
+  measured per-query cost curve over B.
+* ``DEFAULT_EST_ROUNDS``   — the cold-start admission estimate (rounds per
+  request) the serving ledger prices reservations with until per-op
+  observed round counts warm up.
+* ``DEFAULT_HARDWARE``     — the analytic hardware model (TPU v5e-class):
+  peak bf16 FLOP/s, HBM bandwidth, effective per-link ICI bandwidth.  The
+  roofline benchmark and the calibration pass both read THIS description,
+  so there is one set of hardware constants, not two divergent ones.
+
+This module is import-light on purpose (no jax, no numpy): ``repro.core``
+imports it at module load, so it must never import back into core.
+"""
+from __future__ import annotations
+
+DEFAULT_DENSE_FRAC = 20
+DEFAULT_CHUNK_BLOCKS = 256
+DEFAULT_TILE_BLOCKS = 8
+DEFAULT_MAX_BATCH = 8
+DEFAULT_EST_ROUNDS = 8
+
+# TPU v5e-class per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+# (one effective link per collective hop — conservative).
+DEFAULT_HARDWARE = {
+    "peak_flops": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}

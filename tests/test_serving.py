@@ -278,12 +278,13 @@ def test_engine_cache_zero_retrace():
         eng.flush()
     assert eng.stats["batches"] == 3
     (key, traces), = eng.trace_counts.items()
-    assert key[0] == "CSRGraph" and key[2] == "bfs" and key[3] == 4
+    # key layout: (backend, mesh, tuning_key, op, B, scalars)
+    assert key[0] == "CSRGraph" and key[3] == "bfs" and key[4] == 4
     assert traces == 1  # zero retraces after the first
     # a different B is a different executable, again traced once
     eng.submit("bfs", src=11)
     eng.flush()
-    assert sorted(k[3] for k in eng.trace_counts) == [1, 4]
+    assert sorted(k[4] for k in eng.trace_counts) == [1, 4]
     assert all(t == 1 for t in eng.trace_counts.values())
 
 
@@ -294,7 +295,7 @@ def test_engine_pads_pow2_and_splits_oversize():
         eng.submit("bfs", src=s)
     res = eng.flush()
     assert len(res) == 6 and eng.stats["batches"] == 2
-    assert sorted(k[3] for k in eng.trace_counts) == [2, 4]
+    assert sorted(k[4] for k in eng.trace_counts) == [2, 4]
 
 
 def test_engine_scalar_params_bucket_separately():
@@ -346,7 +347,9 @@ for backend in [g, compress(g)]:
             assert np.array_equal(np.asarray(res[h][0]), np.asarray(wp)), s
             assert np.array_equal(np.asarray(res[h][1]), np.asarray(wl)), s
     (key,) = eng.trace_counts
-    assert key[1] == (("data", 4),) and key[3] == 4
+    # key layout: (backend, mesh, tuning_key, op, B, scalars)
+    assert key[1] == (("data", 4),) and key[4] == 4
+    assert key[2] == plan.tuning_key
 print("OK")
 """
     )

@@ -11,7 +11,8 @@ Two checks, both fail-loud (exit 1):
    executed.
 
 2. **Public symbols are documented** — every name exported via ``__all__``
-   from ``repro.core`` and ``repro.serving`` that is a class or function
+   from ``repro.core``, ``repro.serving`` and ``repro.tuning`` that is a
+   class or function
    must have a non-empty docstring.  Data constants (e.g. ``NULL_BUCKET``)
    and typing aliases (``GraphLike``) carry their documentation in the
    module docstring instead and are exempt.  For the serving API
@@ -38,7 +39,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-AUDITED_MODULES = ("repro.core", "repro.serving")
+AUDITED_MODULES = ("repro.core", "repro.serving", "repro.tuning")
 MEMBER_AUDITED = ("repro.serving",)  # classes audited method-by-method
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
 
