@@ -19,9 +19,11 @@ from repro.kernels import (
     embedding_bag,
     spmv_vertex,
 )
+from repro.kernels.compressed_spmv.ops import compressed_chunked_stream_tile
 from repro.kernels.compressed_spmv.ref import compressed_chunked_spmv_ref
 from repro.kernels.edge_block_spmv.ref import spmv_vertex_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.lowering import resolve_lowering
 
 
 def _timeit(fn, *args):
@@ -70,6 +72,26 @@ def run():
     rows.append(dict(name="spmv_jnp_ref", us_per_call=_timeit(ref, x), derived="oracle"))
 
     # ------------------------------------------------------------------
+    # Lowering seam: the same kernel under forced interpret mode vs the
+    # per-backend resolved default (identical on CPU, native on TPU) — the
+    # trend pair that shows what the auto decision buys on each host
+    # ------------------------------------------------------------------
+    rows.append(
+        dict(
+            name="spmv_lowering_forced_interp",
+            us_per_call=_timeit(lambda: spmv_vertex(g, x, f, interpret=True)),
+            derived="interpret pinned",
+        )
+    )
+    rows.append(
+        dict(
+            name="spmv_lowering_resolved",
+            us_per_call=_timeit(lambda: spmv_vertex(g, x, f, interpret=None)),
+            derived=f"resolved={resolve_lowering()}",
+        )
+    )
+
+    # ------------------------------------------------------------------
     # Frontier sweep (the chunked PrefetchScalarGridSpec mode): a 10%-dense
     # frontier must stream ≤ 1.2× the live blocks' bytes — the read volume
     # tracks the compacted live-id list the kernel's index_maps walk, not NB
@@ -88,6 +110,38 @@ def run():
             name="spmv_chunked_frontier_sweep",
             us_per_call=us_chunk,
             derived=frontier_stream_derived(c, k, TB),
+        )
+    )
+    # gather-tile shape: the (1, F_B) row-wise PrefetchScalarGridSpec walk
+    # vs the default (TB, F_B) pre-gathered DMA tiles, on ONE streamed
+    # decode of the 10%-frontier's live blocks — same rows read, same PSAM
+    # charge, batched HBM→VMEM transfers (acceptance: tiled ≥ 1.3×)
+    live_ids = jnp.nonzero(blk_live)[0].astype(jnp.int32)
+    us_rowwise = _timeit(
+        lambda: compressed_chunked_stream_tile(
+            c, live_ids, f, tile_blocks=TB, gather_tiles=False
+        )
+    )
+    rows.append(
+        dict(
+            name="stream_tile_rowwise_gather",
+            us_per_call=us_rowwise,
+            derived="(1,FB) scalar-prefetch rows",
+        )
+    )
+    us_tiled = _timeit(
+        lambda: compressed_chunked_stream_tile(
+            c, live_ids, f, tile_blocks=TB, gather_tiles=True
+        )
+    )
+    rows.append(
+        dict(
+            name="stream_tile_tiled_gather",
+            us_per_call=us_tiled,
+            derived=(
+                f"(TB,FB) pre-gathered tiles TB={TB} "
+                f"speedup_vs_rowwise={us_rowwise / max(us_tiled, 1e-9):.2f}x"
+            ),
         )
     )
     ref_chunk = jax.jit(

@@ -29,6 +29,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of benches")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument(
+        "--profile",
+        default=None,
+        metavar="DIR",
+        help="capture a jax.profiler trace of the selected benches into DIR "
+        "(one TraceAnnotation span per bench; the traced rounds carry the "
+        "sage.round / sage.shard_combine named scopes)",
+    )
     args = ap.parse_args()
 
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
@@ -88,15 +96,35 @@ def main() -> None:
         pass
 
     only = set(args.only.split(",")) if args.only else None
-    print("name,us_per_call,derived")
-    for name, fn in benches.items():
-        if only and name not in only:
-            continue
-        try:
-            for r in fn():
-                print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}", flush=True)
-        except Exception as e:  # noqa: BLE001
-            print(f"{name},-1,ERROR: {type(e).__name__}: {e}", flush=True)
+    if args.profile:
+        import jax
+
+        jax.profiler.start_trace(args.profile)
+    try:
+        print("name,us_per_call,derived")
+        for name, fn in benches.items():
+            if only and name not in only:
+                continue
+            try:
+                if args.profile:
+                    import jax
+
+                    with jax.profiler.TraceAnnotation(f"bench.{name}"):
+                        rows = fn()
+                else:
+                    rows = fn()
+                for r in rows:
+                    print(
+                        f"{r['name']},{r['us_per_call']:.0f},{r['derived']}",
+                        flush=True,
+                    )
+            except Exception as e:  # noqa: BLE001
+                print(f"{name},-1,ERROR: {type(e).__name__}: {e}", flush=True)
+    finally:
+        if args.profile:
+            import jax
+
+            jax.profiler.stop_trace()
 
 
 if __name__ == "__main__":

@@ -7,10 +7,10 @@ Ligra's sequential neighbor scan).  O(P_it·m) work, O(P_it·log n) depth.
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
 from ..core.backend import GraphLike
 from ..core.edgemap import edgemap_reduce, edgemap_reduce_batched
+from ..core.plan import round_loop
 
 
 def pagerank(
@@ -35,17 +35,15 @@ def pagerank(
     full_mask = jnp.ones(n, dtype=bool)
     pr0 = jnp.full(n, 1.0 / n, jnp.float32)
 
-    def one_iter(pr):
+    def sweep_inputs(state):
+        pr, _, _ = state
         contrib = jnp.where(dangling, 0.0, pr / deg)
-        s, _ = edgemap_reduce(
-            g, full_mask, contrib, monoid="sum", mode="dense", plan=plan
-        )
-        dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
-        return (1.0 - damping) / n + damping * (s + dangling_mass / n)
+        return state, full_mask, contrib
 
-    def body(state):
+    def epilogue(state, s, _touched):
         pr, it, _ = state
-        new = one_iter(pr)
+        dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0))
+        new = (1.0 - damping) / n + damping * (s + dangling_mass / n)
         err = jnp.sum(jnp.abs(new - pr))
         return new, it + 1, err
 
@@ -53,8 +51,10 @@ def pagerank(
         _, it, err = state
         return (err > eps) & (it < max_iters)
 
-    pr, iters, _ = lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf))
+    pr, iters, _ = round_loop(
+        g, (pr0, jnp.int32(0), jnp.float32(jnp.inf)),
+        sweep_inputs=sweep_inputs, epilogue=epilogue, cond_fn=cond,
+        monoid="sum", plan=plan, mode="dense",
     )
     return pr, iters
 

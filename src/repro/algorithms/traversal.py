@@ -23,6 +23,7 @@ from jax import lax
 from ..core.backend import GraphLike
 from ..core.bucketing import NULL_BUCKET, make_buckets
 from ..core.edgemap import edgemap_reduce, edgemap_reduce_batched
+from ..core.plan import round_loop
 
 INF_I32 = jnp.int32(2**31 - 1)
 UNVISITED = jnp.int32(-1)
@@ -68,11 +69,12 @@ def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
     frontier0 = jnp.zeros(n, dtype=bool).at[src].set(True)
     ids = jnp.arange(n, dtype=jnp.int32)
 
-    def body(state):
-        rnd, parents, levels, frontier = state
-        cand, touched = edgemap_reduce(
-            g, frontier, ids, monoid="min", mode=mode, plan=plan
-        )
+    def sweep_inputs(state):
+        _, _, _, frontier = state
+        return state, frontier, ids
+
+    def epilogue(state, cand, touched):
+        rnd, parents, levels, _ = state
         newly = touched & (parents == UNVISITED)
         parents = jnp.where(newly, cand, parents)
         levels = jnp.where(newly, rnd + 1, levels)
@@ -82,8 +84,10 @@ def bfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
         rnd, _, _, frontier = state
         return jnp.any(frontier) & (rnd < n)
 
-    _, parents, levels, _ = lax.while_loop(
-        cond, body, (jnp.int32(0), parents0, levels0, frontier0)
+    _, parents, levels, _ = round_loop(
+        g, (jnp.int32(0), parents0, levels0, frontier0),
+        sweep_inputs=sweep_inputs, epilogue=epilogue, cond_fn=cond,
+        monoid="min", plan=plan, mode=mode,
     )
     return parents, levels
 
@@ -114,11 +118,12 @@ def bfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
     parents0 = jnp.where(roots, idsb, UNVISITED)
     levels0 = jnp.where(roots, 0, UNVISITED)
 
-    def body(state):
-        rnd, parents, levels, frontier = state
-        cand, touched = edgemap_reduce_batched(
-            g, frontier, idsb, monoid="min", mode=mode, plan=plan
-        )
+    def sweep_inputs(state):
+        _, _, _, frontier = state
+        return state, frontier, idsb
+
+    def epilogue(state, cand, touched):
+        rnd, parents, levels, _ = state
         newly = touched & (parents == UNVISITED)
         parents = jnp.where(newly, cand, parents)
         levels = jnp.where(newly, rnd + 1, levels)
@@ -128,8 +133,10 @@ def bfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
         rnd, _, _, frontier = state
         return jnp.any(frontier) & (rnd < n)
 
-    _, parents, levels, _ = lax.while_loop(
-        cond, body, (jnp.int32(0), parents0, levels0, roots)
+    _, parents, levels, _ = round_loop(
+        g, (jnp.int32(0), parents0, levels0, roots),
+        sweep_inputs=sweep_inputs, epilogue=epilogue, cond_fn=cond,
+        monoid="min", plan=plan, mode=mode, batched=True,
     )
     return parents, levels
 
@@ -172,16 +179,17 @@ def wbfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
             )
         )
 
-    def body(state):
+    def sweep_inputs(state):
         dist, settled = state
         _, members, _ = buckets(dist, settled).next_bucket()
         members = members & ~settled
         d = jnp.min(jnp.where(members, dist, INF_I32))
         frontier = members & (dist == d)
         settled = settled | frontier
-        cand, touched = edgemap_reduce(
-            g, frontier, dist, monoid="min", map_fn=relax, mode=mode, plan=plan
-        )
+        return (dist, settled), frontier, dist
+
+    def epilogue(state, cand, touched):
+        dist, settled = state
         improve = touched & ~settled & (cand < dist)
         dist = jnp.where(improve, cand, dist)
         return dist, settled
@@ -190,7 +198,11 @@ def wbfs(g: GraphLike, src: int, *, mode: str = "auto", plan=None):
         dist, settled = state
         return buckets(dist, settled).next_bucket()[2]
 
-    dist, _ = lax.while_loop(cond, body, (dist0, settled0))
+    dist, _ = round_loop(
+        g, (dist0, settled0),
+        sweep_inputs=sweep_inputs, epilogue=epilogue, cond_fn=cond,
+        monoid="min", plan=plan, map_fn=relax, mode=mode,
+    )
     return dist
 
 
@@ -227,7 +239,7 @@ def wbfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
             jnp.minimum(dist, NULL_BUCKET - 1),
         )
 
-    def body(state):
+    def sweep_inputs(state):
         dist, settled = state
         bo = bucket_of(dist, settled)
         bid = jnp.min(bo, axis=1)              # per-query next bucket
@@ -236,9 +248,10 @@ def wbfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
         d = jnp.min(jnp.where(members, dist, INF_I32), axis=1)
         frontier = members & (dist == d[:, None])
         settled = settled | frontier
-        cand, touched = edgemap_reduce_batched(
-            g, frontier, dist, monoid="min", map_fn=relax, mode=mode, plan=plan
-        )
+        return (dist, settled), frontier, dist
+
+    def epilogue(state, cand, touched):
+        dist, settled = state
         improve = touched & ~settled & (cand < dist)
         dist = jnp.where(improve, cand, dist)
         return dist, settled
@@ -247,7 +260,11 @@ def wbfs_batched(g: GraphLike, sources, *, mode: str = "auto", plan=None):
         dist, settled = state
         return jnp.any(bucket_of(dist, settled) < NULL_BUCKET)
 
-    dist, _ = lax.while_loop(cond, body, (dist0, settled0))
+    dist, _ = round_loop(
+        g, (dist0, settled0),
+        sweep_inputs=sweep_inputs, epilogue=epilogue, cond_fn=cond,
+        monoid="min", plan=plan, map_fn=relax, mode=mode, batched=True,
+    )
     return dist
 
 

@@ -55,6 +55,7 @@ from .plan import (
     ShardedGraph,
     compact_live_blocks,
     make_plan,
+    round_loop,
     shard_edge_active,
     sharded_edgemap_reduce,
     sharded_edgemap_reduce_batched,
@@ -70,6 +71,7 @@ __all__ = [
     "ShardedGraph",
     "compact_live_blocks",
     "make_plan",
+    "round_loop",
     "shard_edge_active",
     "sharded_edgemap_reduce",
     "sharded_graph_spec",

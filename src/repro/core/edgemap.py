@@ -81,7 +81,7 @@ def _gather_rows(arr, idx, fill):
     return jnp.take(arr, idx, axis=0, mode="fill", fill_value=fill)
 
 
-def _streaming_decoder(g: GraphLike, edge_active):
+def _streaming_decoder(g: GraphLike, edge_active, interpret: bool | None = None):
     """The kernel-backed tile view for the ``sparse_streamed`` mode, or None.
 
     Returns ``tile(bids) -> (dst, w)`` streaming ONLY the named blocks
@@ -90,7 +90,10 @@ def _streaming_decoder(g: GraphLike, edge_active):
     ``dst < n`` activity test subsumes the filter).  None when the backend
     has no streaming decoder — raw ``CSRGraph`` (its block view is already
     uncompressed; the chunk gather IS the stream) or an exception-dense
-    ``CompressedCSR`` (the COO patch would stop being a rare path)."""
+    ``CompressedCSR`` (the COO patch would stop being a rare path).
+
+    ``interpret`` is the Pallas lowering decision threaded down from the
+    plan (``None`` → resolve per backend, ``repro.kernels.lowering``)."""
     from .compressed import CompressedCSR, exception_dense
 
     if not isinstance(g, CompressedCSR) or exception_dense(g):
@@ -116,7 +119,9 @@ def _streaming_decoder(g: GraphLike, edge_active):
     exact = _exception_row_targets(g, words) if g.n_exceptions else None
 
     def tile(bids):
-        return compressed_chunked_stream_tile(g, bids, words, exact_rows=exact)
+        return compressed_chunked_stream_tile(
+            g, bids, words, exact_rows=exact, interpret=interpret
+        )
 
     return tile
 
@@ -141,12 +146,18 @@ def edgemap_dense(
     monoid: str = "min",
     map_fn: Callable = _identity_map,
     edge_active: jnp.ndarray | None = None,
+    interpret: bool | None = None,
 ):
     """Pull-style pass over all edge slots.  Returns (out[n,...], touched[n]).
 
     Reads the backend's block view: for ``CompressedCSR`` the target decode
     is a lazy cumsum fused into the gather/segment-reduce below.
+
+    ``interpret`` is accepted for call-site symmetry with the chunked /
+    streamed paths but is a no-op here: this body is pure jnp (the fused
+    decode+reduce IS the lowering), there is no Pallas kernel to steer.
     """
+    del interpret
     n, FB = g.n, g.block_size
     ident = monoid_identity(monoid, x.dtype)
     block_dst, block_w = dense_block_view(g)
@@ -186,6 +197,7 @@ def edgemap_chunked(
     edge_active: jnp.ndarray | None = None,
     chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
     streamed: bool = False,
+    interpret: bool | None = None,
 ):
     """EDGEMAPCHUNKED — only frontier-owned blocks, chunked emission.
 
@@ -214,7 +226,7 @@ def edgemap_chunked(
         out0 = jnp.zeros((n + 1,) + feat_shape, dtype=bool)
     touched0 = jnp.zeros(n + 1, dtype=jnp.int32)
 
-    stream_tile = _streaming_decoder(g, edge_active) if streamed else None
+    stream_tile = _streaming_decoder(g, edge_active, interpret) if streamed else None
     bits = _edge_active_view(g, edge_active) if stream_tile is None else None
 
     def body(state):
@@ -267,6 +279,7 @@ def edgemap_reduce(
     dense_frac: float | None = None,
     chunk_blocks: int | None = None,
     auto_sparse: str | None = None,
+    interpret: bool | None = None,
     plan=None,
 ):
     """Direction-optimized edgeMap (Beamer §4.1.1).
@@ -306,11 +319,13 @@ def edgemap_reduce(
                 dense_frac=dense_frac,
                 chunk_blocks=chunk_blocks,
                 auto_sparse=auto_sparse,
+                interpret=interpret,
             )
         mode = plan.resolve_mode(mode)
         dense_frac = plan.dense_frac if dense_frac is None else dense_frac
         chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
         auto_sparse = plan.auto_sparse if auto_sparse is None else auto_sparse
+        interpret = plan.interpret if interpret is None else interpret
     dense_frac = DEFAULT_DENSE_FRAC if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
     auto_sparse = "sparse" if auto_sparse is None else auto_sparse
@@ -328,6 +343,7 @@ def edgemap_reduce(
             edge_active=edge_active,
             chunk_blocks=chunk_blocks,
             streamed=mode == "sparse_streamed",
+            interpret=interpret,
         )
     sum_deg = jnp.sum(jnp.where(frontier_mask, g.degrees, 0))
     use_dense = sum_deg * dense_frac > g.m
@@ -345,6 +361,7 @@ def edgemap_reduce(
             edge_active=edge_active,
             chunk_blocks=chunk_blocks,
             streamed=auto_sparse == "sparse_streamed",
+            interpret=interpret,
         ),
     )
 
@@ -416,6 +433,7 @@ def edgemap_chunked_batched_streamed(
     edge_active: jnp.ndarray | None = None,
     chunk_blocks: int = DEFAULT_CHUNK_BLOCKS,
     map_lanes: jnp.ndarray | None = None,
+    interpret: bool | None = None,
 ):
     """Batched EDGEMAPCHUNKED over the streaming kernel: B queries, one
     compressed-tile read per live block.
@@ -448,7 +466,7 @@ def edgemap_chunked_batched_streamed(
     idx, k = compact_mask(blk_any, fill=NB)
     idx = jnp.pad(idx, (0, nchunks * C - NB), constant_values=NB)
 
-    stream_tile = _streaming_decoder(g, edge_active)
+    stream_tile = _streaming_decoder(g, edge_active, interpret)
     assert stream_tile is not None, "caller guards on _streaming_decoder"
 
     out0 = jnp.full((n + 1, B), ident, dtype=xb.dtype)
@@ -503,6 +521,7 @@ def edgemap_reduce_batched(
     chunk_blocks: int | None = None,
     auto_sparse: str | None = None,
     flavor_crossover: float | None = None,
+    interpret: bool | None = None,
     plan=None,
     map_lanes: jnp.ndarray | None = None,
 ):
@@ -554,6 +573,7 @@ def edgemap_reduce_batched(
                 dense_frac=dense_frac,
                 chunk_blocks=chunk_blocks,
                 auto_sparse=auto_sparse,
+                interpret=interpret,
                 map_lanes=map_lanes,
             )
         mode = plan.resolve_mode(mode)
@@ -565,6 +585,7 @@ def edgemap_reduce_batched(
         dense_frac = plan.dense_frac_batched if dense_frac is None else dense_frac
         chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
         auto_sparse = plan.auto_sparse_batched if auto_sparse is None else auto_sparse
+        interpret = plan.interpret if interpret is None else interpret
         if flavor_crossover is None:
             flavor_crossover = plan.batched_flavor_crossover
     dense_frac = DEFAULT_DENSE_FRAC if dense_frac is None else dense_frac
@@ -590,6 +611,7 @@ def edgemap_reduce_batched(
                 g, fm, xv, monoid=monoid, map_fn=lane_map(ml),
                 edge_active=edge_active,
                 mode=vmode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+                interpret=interpret,
             ),
             in_axes=(0, 0, ml_axis),
         )(frontier_masks, xb, ml0)
@@ -603,6 +625,7 @@ def edgemap_reduce_batched(
         return edgemap_chunked(
             g, fm, xv, monoid=monoid, map_fn=lane_map(ml),
             edge_active=edge_active, chunk_blocks=chunk_blocks,
+            interpret=interpret,
         )
 
     ml_axis = None if map_lanes is None else 0
@@ -616,7 +639,7 @@ def edgemap_reduce_batched(
             return edgemap_chunked_batched_streamed(
                 g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
                 edge_active=edge_active, chunk_blocks=chunk_blocks,
-                map_lanes=map_lanes,
+                map_lanes=map_lanes, interpret=interpret,
             )
         return sparse_vmap(frontier_masks, xb)
     if mode == "sparse":
@@ -649,7 +672,7 @@ def edgemap_reduce_batched(
                 return edgemap_chunked_batched_streamed(
                     g, frontier_masks, xb, monoid=monoid, map_fn=map_fn,
                     edge_active=edge_active, chunk_blocks=chunk_blocks,
-                    map_lanes=map_lanes,
+                    map_lanes=map_lanes, interpret=interpret,
                 )
 
             if flavor_crossover is None or flavor_crossover >= 1.0:

@@ -311,10 +311,24 @@ class ExecutionPlan:
                   sparse branch picks its flavor at runtime from the
                   batch's mean lane density; None runs the static flavor
                   unconditionally
+    interpret   — the resolved Pallas lowering every kernel under this plan
+                  runs with: False = native Mosaic, True = interpret mode,
+                  None = defer to the per-backend default at the call site.
+                  ``make_plan`` resolves it from the ``lowering`` knob
+                  (explicit arg → calibrated table → DEFAULT_LOWERING) and
+                  folds it into ``tuning_key`` so the serving executable
+                  cache never aliases lowerings
+    pipeline_rounds — sharded round loops run software-pipelined: the O(n)
+                  cross-shard combine of round r is issued at the head of
+                  round r+1's loop body, next to the (frontier-independent)
+                  block decode of the next local sweep, so the collective
+                  and the VMEM stream can overlap (one-round epilogue
+                  drain).  Bit-identical per lane — only scheduling moves.
+                  Algorithms opt in via ``repro.core.plan.round_loop``
     decisions   — the TuningDecision behind this plan's knobs (source
-                  'measured' | 'constants', crossover density, table host) —
-                  recorded by make_plan so tests / PSAM accounting can see
-                  exactly what ran and why
+                  'measured' | 'constants', crossover density, table host,
+                  resolved ``lowering``) — recorded by make_plan so tests /
+                  PSAM accounting can see exactly what ran and why
     """
 
     mesh: Any = None
@@ -329,6 +343,8 @@ class ExecutionPlan:
     dense_frac_batched: float = DEFAULT_DENSE_FRAC
     auto_sparse_batched: str = "sparse"
     batched_flavor_crossover: float | None = None
+    interpret: bool | None = None
+    pipeline_rounds: bool = False
     decisions: Any = None
 
     @property
@@ -357,6 +373,8 @@ class ExecutionPlan:
             float(self.dense_frac),
             float(self.dense_frac_batched),
             int(self.chunk_blocks),
+            self.interpret,
+            bool(self.pipeline_rounds),
         )
 
     @property
@@ -530,6 +548,8 @@ def make_plan(
     state_dtype=None,
     chunk_blocks: int | None = None,
     dense_frac: float | None = None,
+    lowering: str | None = None,
+    pipeline_rounds: bool = False,
     tuning="default",
 ) -> ExecutionPlan:
     """Build an :class:`ExecutionPlan`, recording the backend from ``g``.
@@ -543,7 +563,22 @@ def make_plan(
     ``'constants'``) and the measured crossover density behind a calibrated
     ``dense_frac`` — is recorded on ``plan.decisions``.  Pass
     ``tuning=None`` (or ``"off"``) to pin the historical constant behavior.
+
+    ``lowering`` picks how every Pallas kernel under the plan lowers:
+    ``"native"`` (Mosaic), ``"interpret"`` (XLA interpret mode), or
+    ``"auto"`` (per-backend default — native where supported).  ``None``
+    defers to the tuning decision's calibrated winner, then to
+    ``repro.tuning.defaults.DEFAULT_LOWERING``.  The resolved value lands
+    on ``plan.decisions.lowering`` and in ``plan.tuning_key``.
+
+    ``pipeline_rounds=True`` opts sharded round loops into the
+    software-pipelined schedule (see :class:`ExecutionPlan` and
+    :func:`round_loop`); bit-identical per lane, so it is purely a
+    performance knob.
     """
+    # kernels depend on core, never the reverse — resolve lazily, exactly
+    # like the tuning-table import below
+    from ..kernels.lowering import resolve_lowering
     backend = "auto"
     if isinstance(g, ShardedGraph):
         g = g.shards
@@ -565,12 +600,16 @@ def make_plan(
         )
     if chunk_blocks is None:
         chunk_blocks = decision.chunk_blocks
+    resolved_lowering = resolve_lowering(
+        lowering if lowering is not None else decision.lowering
+    )
     decision = dataclasses.replace(
         decision,
         strategy=strategy,
         dense_frac=float(dense_frac),
         dense_frac_batched=dense_frac_batched,
         chunk_blocks=int(chunk_blocks),
+        lowering=resolved_lowering,
     )
     return ExecutionPlan(
         mesh=mesh,
@@ -585,6 +624,8 @@ def make_plan(
         dense_frac_batched=dense_frac_batched,
         auto_sparse_batched=decision.auto_sparse_batched,
         batched_flavor_crossover=decision.batched_flavor_crossover,
+        interpret=resolved_lowering == "interpret",
+        pipeline_rounds=bool(pipeline_rounds),
         decisions=decision,
     )
 
@@ -612,6 +653,11 @@ def sharded_graph_spec(
 # ----------------------------------------------------------------------
 def _combine_shards(plan: ExecutionPlan, out, touched, monoid: str, n: int, out_dtype):
     """Monoid-combine per-shard edgeMap outputs: O(n) words per round."""
+    with jax.named_scope("sage.shard_combine"):
+        return _combine_shards_body(plan, out, touched, monoid, n, out_dtype)
+
+
+def _combine_shards_body(plan, out, touched, monoid, n, out_dtype):
     axes = plan.axes
     if plan.state_dtype is not None and monoid == "sum":
         out = out.astype(plan.state_dtype)
@@ -672,6 +718,7 @@ def _sharded_edgemap_call(
     auto_sparse=None,
     flavor_crossover=None,
     map_lanes=None,
+    interpret=None,
 ):
     """Shared shard/filter plumbing for both sharded executors.
 
@@ -688,6 +735,7 @@ def _sharded_edgemap_call(
     dense_frac = plan.dense_frac if dense_frac is None else dense_frac
     chunk_blocks = plan.chunk_blocks if chunk_blocks is None else chunk_blocks
     auto_sparse = plan.auto_sparse if auto_sparse is None else auto_sparse
+    interpret = plan.interpret if interpret is None else interpret
     n = g.n
     out_dtype = x.dtype
 
@@ -737,6 +785,7 @@ def _sharded_edgemap_call(
             dense_frac=dense_frac,
             chunk_blocks=chunk_blocks,
             auto_sparse=auto_sparse,
+            interpret=interpret,
             **kwargs,
         )
         return _combine_shards(plan, out, touched, monoid, n, out_dtype)
@@ -774,6 +823,7 @@ def sharded_edgemap_reduce(
     dense_frac: float | None = None,
     chunk_blocks: int | None = None,
     auto_sparse: str | None = None,
+    interpret: bool | None = None,
 ):
     """Direction-optimized edgeMap over a mesh: per-shard local pass through
     the ordinary ``edgemap_dense`` / ``edgemap_chunked`` bodies, then one
@@ -796,7 +846,7 @@ def sharded_edgemap_reduce(
         local_reduce=edgemap_reduce,
         monoid=monoid, map_fn=map_fn, edge_active=edge_active,
         mode=mode, dense_frac=dense_frac, chunk_blocks=chunk_blocks,
-        auto_sparse=auto_sparse,
+        auto_sparse=auto_sparse, interpret=interpret,
     )
 
 
@@ -814,6 +864,7 @@ def sharded_edgemap_reduce_batched(
     chunk_blocks: int | None = None,
     auto_sparse: str | None = None,
     map_lanes=None,
+    interpret: bool | None = None,
 ):
     """Batched edgeMap over a mesh: B queries share each shard's one local
     edge sweep, then a single monoid combine moves the O(B·n) output.
@@ -846,4 +897,184 @@ def sharded_edgemap_reduce_batched(
         auto_sparse=auto_sparse,
         flavor_crossover=plan.batched_flavor_crossover,
         map_lanes=map_lanes,
+        interpret=interpret,
     )
+
+
+# ----------------------------------------------------------------------
+# Round-pipelined loop driver — overlap combine(r) with sweep(r+1)
+# ----------------------------------------------------------------------
+def round_loop(
+    g,
+    state,
+    *,
+    sweep_inputs,
+    epilogue,
+    cond_fn,
+    monoid: str,
+    plan: ExecutionPlan | None = None,
+    map_fn=None,
+    edge_active=None,
+    mode: str = "auto",
+    batched: bool = False,
+):
+    """Run a frontier round loop, software-pipelined when the plan asks.
+
+    Every Sage traversal is the same recurrence::
+
+        while cond_fn(state):
+            state, frontier, x = sweep_inputs(state)   # pre-sweep mutation
+            out, touched = edgeMap(g, frontier, x)     # sweep + combine
+            state = epilogue(state, out, touched)
+
+    This driver owns that loop.  For single-device plans (or
+    ``plan.pipeline_rounds=False``) it runs the literal sequential
+    recurrence above — one ``edgemap_reduce`` (or the batched variant) per
+    round, bit-for-bit what the open-coded algorithm loops did.
+
+    For sharded plans with ``pipeline_rounds=True`` the whole loop moves
+    inside ONE ``shard_map`` and the schedule is skewed: round ``r``'s
+    O(n) cross-shard monoid combine is issued at the *head* of the loop
+    body, adjacent to round ``r+1``'s local sweep, so the collective and
+    the next block stream overlap (a one-round software pipeline with an
+    epilogue drain).  Only scheduling moves — each round still runs
+    ``sweep → combine → epilogue`` on the same values in the same order,
+    so results are bit-identical per lane to the sequential path (locked
+    by ``tests/test_pipeline.py``).
+
+    ``sweep_inputs(state) -> (state', frontier, x)`` may mutate state
+    before the sweep (wBFS settles its extracted bucket); ``epilogue(state,
+    out, touched) -> state`` applies the combined sweep; ``cond_fn(state)``
+    is the loop predicate.  All three must be collective-free — the driver
+    owns every cross-shard word.
+    """
+    pipelined = (
+        plan is not None and plan.is_sharded and plan.pipeline_rounds
+    )
+    if not pipelined:
+        from .edgemap import edgemap_reduce, edgemap_reduce_batched
+
+        local_reduce = edgemap_reduce_batched if batched else edgemap_reduce
+        kwargs = {} if map_fn is None else {"map_fn": map_fn}
+        if edge_active is not None:
+            kwargs["edge_active"] = edge_active
+
+        def body(st):
+            st, frontier, x = sweep_inputs(st)
+            with jax.named_scope("sage.round"):
+                out, touched = local_reduce(
+                    g, frontier, x, monoid=monoid, mode=mode, plan=plan,
+                    **kwargs,
+                )
+            return epilogue(st, out, touched)
+
+        return lax.while_loop(cond_fn, body, state)
+
+    # ---- pipelined sharded path: the whole loop in one shard_map ----
+    if not isinstance(g, ShardedGraph):
+        g = plan.prepare(g)
+    rmode = plan.resolve_mode(mode)
+    chunk_blocks = plan.chunk_blocks
+    interpret = plan.interpret
+    if batched:
+        dense_frac = plan.dense_frac_batched
+        auto_sparse = plan.auto_sparse_batched
+        flavor_crossover = plan.batched_flavor_crossover
+    else:
+        dense_frac = plan.dense_frac
+        auto_sparse = plan.auto_sparse
+        flavor_crossover = None
+    n = g.n
+
+    active = None
+    if edge_active is not None:
+        if isinstance(edge_active, ShardedEdgeActive):
+            if edge_active.num_shards != plan.num_shards:
+                raise ValueError(
+                    f"edge_active prepared for {edge_active.num_shards} "
+                    f"shards, plan has {plan.num_shards}"
+                )
+            active = edge_active
+        else:
+            active = shard_edge_active(
+                edge_active,
+                block_size=g.block_size,
+                blocks_per_shard=g.blocks_per_shard,
+                num_shards=plan.num_shards,
+                num_blocks=g.orig_num_blocks,
+            )
+    has_active = active is not None
+
+    from .edgemap import edgemap_reduce, edgemap_reduce_batched
+
+    local_reduce = edgemap_reduce_batched if batched else edgemap_reduce
+
+    def whole(sg, st0, *rest):
+        g_local = jax.tree.map(lambda a: a[0], sg.shards)
+        kwargs = {} if map_fn is None else {"map_fn": map_fn}
+        if batched and flavor_crossover is not None:
+            kwargs["flavor_crossover"] = flavor_crossover
+        if has_active:
+            kwargs["edge_active"] = rest[0].words[0]
+        out_dtype = jax.eval_shape(lambda s: sweep_inputs(s)[2], st0).dtype
+
+        def sweep(frontier, x):
+            # local (uncombined) sweep — same body the sequential sharded
+            # executor runs per shard, resolved from the same plan knobs
+            with jax.named_scope("sage.round.sweep"):
+                return local_reduce(
+                    g_local, frontier, x, monoid=monoid, mode=rmode,
+                    dense_frac=dense_frac, chunk_blocks=chunk_blocks,
+                    auto_sparse=auto_sparse, interpret=interpret, **kwargs,
+                )
+
+        def combine(pending):
+            out, touched = pending
+            return _combine_shards(plan, out, touched, monoid, n, out_dtype)
+
+        def maybe_sweep(st, pending, flag):
+            # the local sweep is collective-free, so it is legal under
+            # lax.cond inside shard_map; the combine is NOT conditional
+            def do(st, pending):
+                st2, frontier, x = sweep_inputs(st)
+                return st2, sweep(frontier, x)
+
+            def dont(st, pending):
+                return st, pending
+
+            return lax.cond(flag, do, dont, st, pending)
+
+        shapes = jax.eval_shape(lambda s: sweep(*sweep_inputs(s)[1:]), st0)
+        zeros = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+
+        flag0 = cond_fn(st0)
+        st1, pending0 = maybe_sweep(st0, zeros, flag0)
+
+        def body(carry):
+            st, pending, flag = carry
+            # head-of-round: combine round r while the hardware can overlap
+            # it with round r+1's (already issued) local block stream
+            out, touched = combine(pending)
+            st = epilogue(st, out, touched)
+            flag = cond_fn(st)
+            st, pending = maybe_sweep(st, pending, flag)
+            return st, pending, flag
+
+        final, _, _ = lax.while_loop(lambda c: c[2], body, (st1, pending0, flag0))
+        return final
+
+    in_specs = [P(plan.axes), P()]
+    operands = [g, state]
+    if has_active:
+        in_specs.append(P(plan.axes))
+        operands.append(active)
+    fn = shard_map(
+        whole,
+        mesh=plan.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(),
+        # every shard computes the same replicated state (the combine is
+        # replicated by construction) but the static check can't prove it
+        check_rep=False,
+    )
+    return fn(*operands)

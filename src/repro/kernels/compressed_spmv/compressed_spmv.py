@@ -58,8 +58,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.graph_filter import unpack_word_bits
-
-DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
+from ...tuning.defaults import DEFAULT_TILE_BLOCKS  # TB: edge-blocks per program
+from ..lowering import resolve_interpret
 
 
 def _kernel(
@@ -130,7 +130,7 @@ def compressed_block_spmv_pallas(
     *,
     n: int,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Per-block partial sums off the compressed stream:
     out[b] = Σ_slot active(b,slot)·w(b,slot)·x[decode(b)[slot]].
@@ -148,7 +148,12 @@ def compressed_block_spmv_pallas(
     Batched queries: ``x`` of shape (B, n_pad) returns (NB, B) — each grid
     step streams the compressed tile and decodes it once, then applies it
     to all B columns.
+
+    ``interpret=None`` (the default) resolves the Pallas lowering per
+    backend — native Mosaic on TPU, interpret mode elsewhere
+    (:mod:`repro.kernels.lowering`).
     """
+    interpret = resolve_interpret(interpret)
     batched = x.ndim == 2
     NB, FB = deltas.shape
     vc = valid_count.astype(jnp.int32)
@@ -278,7 +283,10 @@ def _chunked_kernel(
     out_ref[...] = jnp.sum(contrib, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "emit", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "emit", "interpret", "gather_tiles", "tile_blocks"),
+)
 def compressed_chunked_spmv_pallas(
     x: jnp.ndarray | None,         # (n_pad,) / (B, n_pad) for "sums"; None for "decode"
     ids: jnp.ndarray,              # (C,) int32 — compacted live block ids (pad: >= NB)
@@ -291,7 +299,9 @@ def compressed_chunked_spmv_pallas(
     *,
     n: int,
     emit: str = "sums",
-    interpret: bool = True,
+    interpret: bool | None = None,
+    gather_tiles: bool = True,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ):
     """Frontier-sparse chunked mode: stream ONLY the blocks named by ``ids``.
 
@@ -320,9 +330,24 @@ def compressed_chunked_spmv_pallas(
     Exception blocks (ESCAPE deltas) decode wrong here, exactly as in the
     dense-grid kernel; the wrapper patches them keyed on the gathered ids
     (``ops._patch_exception_tile`` / the per-block sum fixup).
+
+    Tiling (``gather_tiles``, the default): BlockSpec index_maps are
+    block-granular, so the id-steered grid above can only fetch ``(1, FB)``
+    rows — DMA-granularity-pessimal.  The tiled mode instead pre-gathers
+    the live rows (an XLA gather of exactly the ``ids`` rows — the NVRAM
+    reads are unchanged) into contiguous ``(C, FB)`` buffers and runs a
+    plain ``(ceil(C/TB),)`` grid of ``(TB, FB)`` tiles: each HBM→VMEM
+    transfer is TB rows wide and the grid pipeline double-buffers tile
+    ``i+1``'s DMA against tile ``i``'s decode.  ``gather_tiles=False``
+    keeps the row-steered ``PrefetchScalarGridSpec`` grid (the
+    microbenchmark baseline).  Emit shapes are identical either way.
+
+    ``interpret=None`` resolves the lowering per backend — native Mosaic
+    on TPU, interpret elsewhere (:mod:`repro.kernels.lowering`).
     """
     if emit not in ("sums", "decode"):
         raise ValueError(f"emit must be 'sums' or 'decode', got {emit!r}")
+    interpret = resolve_interpret(interpret)
     NB, FB = deltas.shape
     C = ids.shape[0]
     W = FB // 32
@@ -334,6 +359,13 @@ def compressed_chunked_spmv_pallas(
     deltas_s = jnp.pad(deltas, ((0, 1), (0, 0)))
     vc_s = jnp.pad(valid_count.astype(jnp.int32), (0, 1))
     ids = jnp.minimum(ids.astype(jnp.int32), jnp.int32(NB))
+
+    if gather_tiles:
+        return _chunked_tiled_call(
+            x, ids, first_s, deltas_s, vc_s, bits, edge_active, block_weights,
+            n=n, emit=emit, batched=batched, C=C, NB=NB, FB=FB, W=W,
+            tile_blocks=tile_blocks, interpret=interpret,
+        )
 
     in_specs = []
     operands = []
@@ -397,3 +429,94 @@ def compressed_chunked_spmv_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(ids, *operands)
+
+
+def _chunked_tiled_call(
+    x, ids, first_s, deltas_s, vc_s, bits, edge_active, block_weights,
+    *, n, emit, batched, C, NB, FB, W, tile_blocks, interpret,
+):
+    """The ``gather_tiles`` grid: pre-gathered live rows, (TB, FB) tiles.
+
+    ``ids`` is already clamped onto the all-sentinel row (index NB), so the
+    pad extending C to a TB multiple just names more sentinel rows — they
+    decode to nothing.  The gather reads exactly the live rows (+ sentinel)
+    out of the compressed arrays; the kernel then walks contiguous (TB, FB)
+    tiles, so every HBM→VMEM transfer is DMA-sized and the grid pipeline
+    overlaps tile i+1's fetch with tile i's decode.
+    """
+    TB = max(1, min(tile_blocks, C))
+    pad = (-C) % TB
+    if pad:
+        ids = jnp.pad(ids, (0, pad), constant_values=NB)
+    c_pad = C + pad
+
+    first_g = jnp.take(first_s, ids)               # (C_pad,)
+    deltas_g = jnp.take(deltas_s, ids, axis=0)     # (C_pad, FB) — live rows only
+    vc_g = jnp.take(vc_s, ids)
+
+    in_specs = []
+    operands = []
+    if emit == "sums":
+        in_specs.append(
+            pl.BlockSpec(x.shape, lambda i: (0, 0))
+            if batched
+            else pl.BlockSpec((x.shape[0],), lambda i: (0,))
+        )
+        operands.append(x)
+    in_specs += [
+        pl.BlockSpec((TB,), lambda i: (i,)),
+        pl.BlockSpec((TB, FB), lambda i: (i, 0)),
+        pl.BlockSpec((TB,), lambda i: (i,)),
+    ]
+    operands += [first_g, deltas_g, vc_g]
+    if bits is not None:
+        in_specs.append(pl.BlockSpec((TB, W), lambda i: (i, 0)))
+        operands.append(jnp.take(jnp.pad(bits, ((0, 1), (0, 0))), ids, axis=0))
+    if edge_active is not None:
+        in_specs.append(pl.BlockSpec((TB, W), lambda i: (i, 0)))
+        operands.append(
+            jnp.take(jnp.pad(edge_active, ((0, 1), (0, 0))), ids, axis=0)
+        )
+    if block_weights is not None:
+        in_specs.append(pl.BlockSpec((TB, FB), lambda i: (i, 0)))
+        operands.append(
+            jnp.take(jnp.pad(block_weights, ((0, 1), (0, 0))), ids, axis=0)
+        )
+
+    if emit == "decode":
+        out_specs = (
+            pl.BlockSpec((TB, FB), lambda i: (i, 0)),
+            pl.BlockSpec((TB, FB), lambda i: (i, 0)),
+        )
+        out_shape = (
+            jax.ShapeDtypeStruct((c_pad, FB), jnp.int32),
+            jax.ShapeDtypeStruct((c_pad, FB), jnp.float32),
+        )
+    elif batched:
+        out_specs = pl.BlockSpec((TB, x.shape[0]), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((c_pad, x.shape[0]), x.dtype)
+    else:
+        out_specs = pl.BlockSpec((TB,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((c_pad,), x.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _chunked_kernel,
+            None,  # no scalar-prefetch operand on the plain grid
+            n=n,
+            emit=emit,
+            has_x=emit == "sums",
+            has_bits=bits is not None,
+            has_active=edge_active is not None,
+            has_weights=block_weights is not None,
+            batched=batched,
+        ),
+        grid=(c_pad // TB,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    if emit == "decode":
+        return out[0][:C], out[1][:C]
+    return out[:C]

@@ -45,7 +45,7 @@ def compressed_block_spmv(
     block_weights=None,
     *,
     n: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ):
     """Raw kernel entry: per-block partial sums off the compressed stream.
@@ -115,7 +115,7 @@ def compressed_spmv_vertex(
     f: GraphFilter | None = None,
     *,
     edge_active=None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """out[v] = Σ_{(v,u) active} w_vu · x[u], straight off the compressed
@@ -209,8 +209,10 @@ def compressed_chunked_stream_tile(
     ids: jnp.ndarray,
     edge_active=None,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     exact_rows: jnp.ndarray | None = None,
+    gather_tiles: bool = True,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ):
     """Stream + decode ONE chunk of live blocks: (dst (C, FB), w (C, FB)).
 
@@ -227,6 +229,10 @@ def compressed_chunked_stream_tile(
     chunk-loop caller computes it ONCE outside the loop and passes it per
     chunk instead of re-decoding every exception block per iteration
     (``_streaming_decoder`` in ``repro.core.edgemap`` does exactly this).
+
+    ``gather_tiles`` (default) batches the live rows into DMA-sized
+    ``(tile_blocks, FB)`` kernel tiles instead of the row-steered
+    ``(1, FB)`` grid; shapes and results are identical either way.
     """
     active = (
         None
@@ -246,6 +252,8 @@ def compressed_chunked_stream_tile(
         n=c.n,
         emit="decode",
         interpret=interpret,
+        gather_tiles=gather_tiles,
+        tile_blocks=tile_blocks,
     )
     if c.n_exceptions:
         exact = (
@@ -264,7 +272,8 @@ def compressed_spmv_vertex_chunked(
     *,
     edge_active=None,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    gather_tiles: bool = True,
 ) -> jnp.ndarray:
     """Frontier-sparse SpMV: sums over ONLY the frontier-owned blocks.
 
@@ -328,6 +337,8 @@ def compressed_spmv_vertex_chunked(
             n=c.n,
             emit="sums",
             interpret=interpret,
+            gather_tiles=gather_tiles,
+            tile_blocks=TB,
         )  # (TB,) or (TB, B) — only these ids' tiles were streamed
         if fixed is not None:
             rows = _rows_for_ids(ids, c.exc_block, c.num_blocks)
@@ -351,7 +362,7 @@ def compressed_spmv_vertex_batched(
     f: GraphFilter | None = None,
     *,
     edge_active=None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """Batched ``compressed_spmv_vertex``: ``xb`` is (B, n); returns (B, n).

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from ..lowering import resolve_interpret
+
 NEG_INF = -1e30
 DEFAULT_TILE_BATCH = 4
 DEFAULT_SEQ_TILE = 128
@@ -68,8 +70,9 @@ def decode_attention_pallas(
     *,
     tile_batch: int = DEFAULT_TILE_BATCH,
     seq_tile: int = DEFAULT_SEQ_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)
     B, H, D = q.shape
     S = k.shape[1]
     st = min(seq_tile, S)

@@ -12,7 +12,7 @@ def decode_attention(
     v: jnp.ndarray,
     pos: jnp.ndarray,  # (B,) valid cache lengths
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_batch: int = 4,
     seq_tile: int = 128,
 ) -> jnp.ndarray:

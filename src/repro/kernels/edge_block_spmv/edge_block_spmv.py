@@ -32,8 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ...core.graph_filter import unpack_word_bits
-
-DEFAULT_TILE_BLOCKS = 8  # TB: edge-blocks per program
+from ...tuning.defaults import DEFAULT_TILE_BLOCKS  # TB: edge-blocks per program
+from ..lowering import resolve_interpret
 
 
 def _kernel(
@@ -78,7 +78,7 @@ def edge_block_spmv_pallas(
     *,
     n: int,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Per-block partial sums: out[b] = Σ_slot active(b,slot)·w·x[dst].
 
@@ -87,7 +87,11 @@ def edge_block_spmv_pallas(
     as its own (TB, F_B/32) tile and is ANDed in-kernel.
 
     Batched queries: ``x`` of shape (B, n_pad) returns (NB, B) — each grid
-    step streams the edge tile once and applies it to all B columns."""
+    step streams the edge tile once and applies it to all B columns.
+
+    ``interpret=None`` (the default) resolves the lowering per backend —
+    native Mosaic on TPU, interpret mode elsewhere."""
+    interpret = resolve_interpret(interpret)
     batched = x.ndim == 2
     NB, FB = block_dst.shape
     TB = min(tile_blocks, NB)

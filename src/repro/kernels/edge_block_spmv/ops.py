@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from ...core.csr import CSRGraph
 from ...core.graph_filter import GraphFilter, edge_active_words
+from ...tuning.defaults import DEFAULT_TILE_BLOCKS
 from .edge_block_spmv import edge_block_spmv_pallas
 
 
@@ -17,8 +18,8 @@ def edge_block_spmv(
     edge_active=None,
     *,
     n: int,
-    interpret: bool = True,
-    tile_blocks: int = 8,
+    interpret: bool | None = None,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ):
     """Raw kernel entry: per-block partial sums off the uncompressed stream.
 
@@ -46,8 +47,8 @@ def spmv_vertex(
     f: GraphFilter | None = None,
     *,
     edge_active=None,
-    interpret: bool = True,
-    tile_blocks: int = 8,
+    interpret: bool | None = None,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """out[v] = Σ_{(v,u) active} w_vu · x[u] — PageRank/GNN aggregation step.
 
@@ -87,8 +88,8 @@ def spmv_vertex_batched(
     f: GraphFilter | None = None,
     *,
     edge_active=None,
-    interpret: bool = True,
-    tile_blocks: int = 8,
+    interpret: bool | None = None,
+    tile_blocks: int = DEFAULT_TILE_BLOCKS,
 ) -> jnp.ndarray:
     """Batched ``spmv_vertex``: ``xb`` is (B, n); returns (B, n).
 

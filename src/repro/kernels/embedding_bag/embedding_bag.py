@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..lowering import resolve_interpret
+
 DEFAULT_TILE_BATCH = 64
 
 
@@ -39,9 +41,10 @@ def embedding_bag_pallas(
     weights: jnp.ndarray,  # (B, L)
     *,
     tile_batch: int = DEFAULT_TILE_BATCH,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Returns (B, D) weighted bag sums."""
+    interpret = resolve_interpret(interpret)
     V, D = table.shape
     B, L = indices.shape
     TB = min(tile_batch, B)

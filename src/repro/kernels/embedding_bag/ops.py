@@ -12,7 +12,7 @@ def embedding_bag(
     weights: jnp.ndarray | None = None,
     *,
     mode: str = "sum",
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_batch: int = 64,
 ) -> jnp.ndarray:
     """EmbeddingBag with sum/mean modes over fixed-width (-1 padded) bags."""

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_TILE_BLOCKS = 8
+from ...tuning.defaults import DEFAULT_TILE_BLOCKS
+from ..lowering import resolve_interpret
 
 
 def _popcount32(x):
@@ -54,9 +55,10 @@ def filter_pack_pallas(
     subset: jnp.ndarray,   # (NB,) bool
     *,
     tile_blocks: int = DEFAULT_TILE_BLOCKS,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (new_bits (NB, W) uint32, active_count (NB,) int32)."""
+    interpret = resolve_interpret(interpret)
     NB, W = bits.shape
     FB = keep.shape[1]
     TB = min(tile_blocks, NB)

@@ -15,7 +15,7 @@ def filter_pack(
     subset_mask: jnp.ndarray,
     keep_pred: jnp.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     tile_blocks: int = 8,
 ) -> GraphFilter:
     """Kernel-backed equivalent of ``core.graph_filter.pack_vertices``

@@ -1,0 +1,62 @@
+"""Backend-aware Pallas lowering resolution.
+
+Every Pallas kernel entry point takes ``interpret: bool | None``.  ``True``
+runs the kernel in interpret mode (pure XLA emulation of the grid — the
+only mode that works on CPU), ``False`` lowers natively through Mosaic.
+``None`` — the default everywhere — defers the decision to this module:
+the plan's calibrated ``lowering`` knob if one is threaded through, else
+:data:`repro.tuning.defaults.DEFAULT_LOWERING` resolved per backend.
+
+This is the one place that inspects ``jax.default_backend()``, so the
+kernels, the core edgeMap, and the planner all agree on what ``None``
+means and the serving cache can key executables by the *resolved* value.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..tuning.defaults import DEFAULT_LOWERING
+
+LOWERINGS = ("auto", "native", "interpret")
+
+
+def native_lowering_supported() -> bool:
+    """True when this process can lower Pallas kernels natively (Mosaic).
+
+    Native lowering needs a TPU backend; on CPU/GPU hosts the kernels run
+    in interpret mode.  (Pallas-on-GPU Triton lowering is not wired into
+    these kernels' BlockSpecs, so GPU counts as unsupported here.)
+    """
+    return jax.default_backend() == "tpu"
+
+
+def resolve_lowering(lowering: str | None = None) -> str:
+    """Collapse a lowering knob to ``"native"`` or ``"interpret"``.
+
+    ``None`` and ``"auto"`` pick natively-lowered kernels exactly when
+    :func:`native_lowering_supported` says the backend can compile them;
+    explicit ``"native"`` / ``"interpret"`` pass through (a forced
+    ``"native"`` on CPU will fail loudly at compile time, which is the
+    right behavior for an explicit override).
+    """
+    if lowering is None:
+        lowering = DEFAULT_LOWERING
+    if lowering not in LOWERINGS:
+        raise ValueError(f"lowering must be one of {LOWERINGS}, got {lowering!r}")
+    if lowering == "auto":
+        return "native" if native_lowering_supported() else "interpret"
+    return lowering
+
+
+def resolve_interpret(interpret: bool | None = None,
+                      lowering: str | None = None) -> bool:
+    """The ``interpret=`` flag a ``pl.pallas_call`` should actually get.
+
+    An explicit bool wins (call sites that already decided); otherwise the
+    ``lowering`` knob (``"auto"``/``"native"``/``"interpret"``, default
+    :data:`~repro.tuning.defaults.DEFAULT_LOWERING`) is resolved against
+    the current backend.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return resolve_lowering(lowering) == "interpret"

@@ -25,7 +25,7 @@ replaces assumption with measurement:
 
 plus the static defaults (``DEFAULT_DENSE_FRAC``, ``DEFAULT_CHUNK_BLOCKS``,
 ``DEFAULT_TILE_BLOCKS``, ``DEFAULT_MAX_BATCH``, ``DEFAULT_EST_ROUNDS``,
-``DEFAULT_HARDWARE``) — module-level constants documented in
+``DEFAULT_LOWERING``, ``DEFAULT_HARDWARE``) — module-level constants documented in
 ``repro.tuning.defaults``.
 
 CLI: ``python -m repro.tuning --quick --out table.json`` (the nightly job).
@@ -40,6 +40,7 @@ from .defaults import (
     DEFAULT_DENSE_FRAC,
     DEFAULT_EST_ROUNDS,
     DEFAULT_HARDWARE,
+    DEFAULT_LOWERING,
     DEFAULT_MAX_BATCH,
     DEFAULT_TILE_BLOCKS,
 )
@@ -64,6 +65,7 @@ __all__ = [
     "DEFAULT_TILE_BLOCKS",
     "DEFAULT_MAX_BATCH",
     "DEFAULT_EST_ROUNDS",
+    "DEFAULT_LOWERING",
     "DEFAULT_HARDWARE",
     "TuningTable",
     "TuningDecision",

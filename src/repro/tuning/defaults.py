@@ -21,6 +21,10 @@ never needs to know whether the value was hand-picked or calibrated:
 * ``DEFAULT_EST_ROUNDS``   — the cold-start admission estimate (rounds per
   request) the serving ledger prices reservations with until per-op
   observed round counts warm up.
+* ``DEFAULT_LOWERING``     — how the Pallas kernels lower: ``"auto"``
+  resolves per backend at plan time (native Mosaic on TPU, XLA interpret
+  mode elsewhere); ``"native"`` / ``"interpret"`` force one side.  A
+  calibrated table replaces ``"auto"`` with the measured winner.
 * ``DEFAULT_HARDWARE``     — the analytic hardware model (TPU v5e-class):
   peak bf16 FLOP/s, HBM bandwidth, effective per-link ICI bandwidth.  The
   roofline benchmark and the calibration pass both read THIS description,
@@ -36,6 +40,7 @@ DEFAULT_CHUNK_BLOCKS = 256
 DEFAULT_TILE_BLOCKS = 8
 DEFAULT_MAX_BATCH = 8
 DEFAULT_EST_ROUNDS = 8
+DEFAULT_LOWERING = "auto"
 
 # TPU v5e-class per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
 # (one effective link per collective hop — conservative).

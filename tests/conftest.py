@@ -1,6 +1,26 @@
 import os
 import sys
 
+import pytest
+
 # tests see the real single CPU device (the 512-device XLA flag is set ONLY
 # inside launch/dryrun.py, never globally)
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_executables():
+    """Release jit caches at every module boundary.
+
+    The suite compiles thousands of executables in one process; XLA:CPU's
+    jit code eventually corrupts under that accumulation and segfaults a
+    late compile (reproducibly in whichever module runs near the end once
+    the suite grows past ~400 tests).  Dropping the pjit caches between
+    modules keeps the live-executable population bounded; each module pays
+    its own warm-up compiles, which it must survive anyway under -p
+    no:randomly orderings.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
