@@ -14,6 +14,13 @@ leave a trace too.  The nightly workflow carries the file across runs via
 the actions cache and uploads it as an artifact — per-PR trend lines for
 every benchmark, the filtered-edgeMap rows included.
 
+Alongside the CSV, ``--trend`` maintains a schema-versioned JSON sibling
+(``<PATH minus .csv>.json``): one object per run keyed by git SHA +
+timestamp with the full row dict — the machine-readable series dashboards
+ingest without re-parsing CSV (schema_version 1:
+``{"schema_version": 1, "runs": [{"sha", "timestamp", "rows": {...}}]}``).
+A corrupt or pre-schema file is restarted, never crashed on.
+
 ``BENCH_REGRESSION_FACTOR`` (env) scales the threshold for known-slower
 runners without editing the workflow.
 
@@ -53,10 +60,20 @@ def read_csv(path: str) -> tuple[dict[str, float], list[str]]:
     return rows, errors
 
 
+TREND_SCHEMA_VERSION = 1
+
+
+def trend_json_path(csv_path: str) -> str:
+    """The JSON sibling of a trend CSV path (``bench_trend.csv`` →
+    ``bench_trend.json``)."""
+    return os.path.splitext(csv_path)[0] + ".json"
+
+
 def append_trend(path: str, rows: dict[str, float]) -> None:
     """Append one line per benchmark to the rolling trend CSV (header on
-    first write).  ``GITHUB_SHA`` tags the rows with the commit when run in
-    CI, so the artifact reads as a per-PR time series."""
+    first write) AND one run object to the JSON sibling.  ``GITHUB_SHA``
+    tags the rows with the commit when run in CI, so the artifacts read as
+    a per-PR time series."""
     fresh = not os.path.exists(path) or os.path.getsize(path) == 0
     ts = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
     sha = os.environ.get("GITHUB_SHA", "local")[:12]
@@ -65,7 +82,27 @@ def append_trend(path: str, rows: dict[str, float]) -> None:
             fh.write("timestamp,sha,name,us_per_call\n")
         for name, us in sorted(rows.items()):
             fh.write(f"{ts},{sha},{name},{us:.0f}\n")
-    print(f"trend: appended {len(rows)} rows to {path}")
+    jpath = trend_json_path(path)
+    doc = {"schema_version": TREND_SCHEMA_VERSION, "runs": []}
+    if os.path.exists(jpath):
+        try:
+            with open(jpath) as fh:
+                loaded = json.load(fh)
+            if (
+                isinstance(loaded, dict)
+                and loaded.get("schema_version") == TREND_SCHEMA_VERSION
+                and isinstance(loaded.get("runs"), list)
+            ):
+                doc = loaded
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt cache entry: restart the series, don't crash CI
+    doc["runs"].append({"sha": sha, "timestamp": ts, "rows": dict(sorted(rows.items()))})
+    with open(jpath, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+    print(
+        f"trend: appended {len(rows)} rows to {path} "
+        f"(+ run {len(doc['runs'])} in {jpath})"
+    )
 
 
 def main() -> int:

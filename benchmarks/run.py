@@ -96,20 +96,25 @@ def main() -> None:
         pass
 
     only = set(args.only.split(",")) if args.only else None
-    if args.profile:
-        import jax
+    import contextlib
 
-        jax.profiler.start_trace(args.profile)
-    try:
+    if args.profile:
+        # the shared tracing session (repro.obs) — same capture the serving
+        # tier uses, so bench traces and service traces read identically
+        from repro.obs import annotate, trace_session
+
+        session = trace_session(args.profile)
+    else:
+        annotate = None
+        session = contextlib.nullcontext()
+    with session:
         print("name,us_per_call,derived")
         for name, fn in benches.items():
             if only and name not in only:
                 continue
             try:
-                if args.profile:
-                    import jax
-
-                    with jax.profiler.TraceAnnotation(f"bench.{name}"):
+                if annotate is not None:
+                    with annotate(f"bench.{name}"):
                         rows = fn()
                 else:
                     rows = fn()
@@ -120,11 +125,6 @@ def main() -> None:
                     )
             except Exception as e:  # noqa: BLE001
                 print(f"{name},-1,ERROR: {type(e).__name__}: {e}", flush=True)
-    finally:
-        if args.profile:
-            import jax
-
-            jax.profiler.stop_trace()
 
 
 if __name__ == "__main__":

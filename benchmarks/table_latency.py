@@ -13,6 +13,15 @@ request's reported latency is its queueing delay (virtual: flush time −
 arrival) plus the wall-clock drain it rode — the decomposition that makes
 open-loop replay deterministic while still charging real compute.
 
+The p50/p99 rows read straight out of the service's OWN
+``sage_service_latency_seconds`` histograms (``repro.obs`` — ISSUE 9's
+one-source-of-truth satellite): each leg injects a fresh registry, the
+warmup replay's samples are reset away, and the measured replay's
+percentiles come from the same bucket-walk extraction a live scrape would
+use — the bench no longer maintains private percentile code, so a
+dashboard over the exported histograms reproduces this table by
+construction.
+
 Rows:
 
 * ``poisson_p50`` / ``poisson_p99`` — latency percentiles over a seeded
@@ -89,10 +98,16 @@ def _replay(svc, trace):
     return latencies
 
 
-def _service(g, **cfg):
+def _service(g, *, registry=None, **cfg):
     from repro.serving import ServiceConfig, ServingService
 
-    return ServingService(g, config=ServiceConfig(**cfg))
+    return ServingService(g, config=ServiceConfig(**cfg), registry=registry)
+
+
+def _fresh_registry():
+    from repro.obs import Registry
+
+    return Registry()
 
 
 def run(n=1024, m=8192, trace_len=48):
@@ -112,11 +127,16 @@ def run(n=1024, m=8192, trace_len=48):
         ),
     }
     for label, trace in traces.items():
-        svc = _service(g, slo=0.02, max_batch=8, mode="dense")
+        reg = _fresh_registry()
+        svc = _service(g, registry=reg, slo=0.02, max_batch=8, mode="dense")
         _replay(svc, trace)  # warmup: compiles every cohort layout
-        lat = _replay(svc, trace)
+        reg.reset()  # warmup samples out of the histograms
+        _replay(svc, trace)
         assert all(c == 1 for c in svc.trace_counts.values()), "service retraced"
-        p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+        # percentiles from the service's own exported latency histogram —
+        # the same numbers a Prometheus scrape of this service would show
+        hist = reg.get("sage_service_latency_seconds")
+        p50, p99 = hist.percentile(50), hist.percentile(99)
         occ = svc.occupancy
         flushes = svc.stats["deadline_flushes"] + svc.stats["depth_flushes"]
         for pct, us in [("p50", p50 * 1e6), ("p99", p99 * 1e6)]:
@@ -133,8 +153,10 @@ def run(n=1024, m=8192, trace_len=48):
 
     # --- qps vs SLO curve ----------------------------------------------
     for slo in (0.02, 0.1, 0.3):
-        svc = _service(g, slo=slo, max_batch=8, mode="dense")
+        reg = _fresh_registry()
+        svc = _service(g, registry=reg, slo=slo, max_batch=8, mode="dense")
         _replay(svc, traces["poisson"])
+        reg.reset()
         t0 = time.perf_counter()
         lat = _replay(svc, traces["poisson"])
         wall = time.perf_counter() - t0
@@ -143,7 +165,8 @@ def run(n=1024, m=8192, trace_len=48):
         rows.append(
             dict(
                 name=f"table_latency_slo_{int(slo * 1e3)}ms",
-                us_per_call=np.percentile(lat, 99) * 1e6,
+                us_per_call=reg.get("sage_service_latency_seconds").percentile(99)
+                * 1e6,
                 derived=(
                     f"slo={slo * 1e3:.0f}ms hit_rate={hit:.2f} qps={qps:.1f} "
                     f"occupancy={svc.occupancy:.2f}"
@@ -220,6 +243,12 @@ def smoke():
         done += svc.tick(now)
     assert len(done) == len(trace), "trace must drain fully"
     assert svc.stats["deadline_flushes"] >= 1, "no deadline-triggered flush"
+    # the drain reported into the process-global registry: the latency
+    # histogram the full table reads its percentiles from is live here too
+    from repro.obs import get_registry
+
+    hist = get_registry().get("sage_service_latency_seconds")
+    assert hist is not None and hist.count() >= len(done), "latency histogram empty"
     t = tickets[0]
     if t.op == "bfs":
         p, lv = bfs(g, int(trace[0][2]))

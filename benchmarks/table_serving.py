@@ -20,7 +20,10 @@ sparse branch for the lanes' direction choice).
 
 ``--smoke`` runs the tiny-graph B=4 serving invocation CI uses: submit a
 mixed bucket, flush, verify a lane bit-exactly against its single-query
-run, print OK.
+run, print OK.  ``--dump-metrics PATH`` (with ``--smoke``) writes the
+process-global registry's Prometheus text after the smoke — the artifact
+CI uploads, proving the full engine metric surface populates on every
+commit.
 """
 from __future__ import annotations
 
@@ -136,3 +139,12 @@ if __name__ == "__main__":
     else:
         for r in run():
             print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    if "--dump-metrics" in sys.argv:
+        from repro.obs import get_registry
+
+        path = sys.argv[sys.argv.index("--dump-metrics") + 1]
+        text = get_registry().to_prometheus_text()
+        assert "sage_engine_served_total" in text, "engine metrics missing"
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"metrics: wrote {len(text.splitlines())} series lines to {path}")

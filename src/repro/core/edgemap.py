@@ -329,6 +329,18 @@ def edgemap_reduce(
     dense_frac = DEFAULT_DENSE_FRAC if dense_frac is None else dense_frac
     chunk_blocks = DEFAULT_CHUNK_BLOCKS if chunk_blocks is None else chunk_blocks
     auto_sparse = "sparse" if auto_sparse is None else auto_sparse
+    from ..obs import get_registry
+
+    _reg = get_registry()
+    if _reg.enabled and not isinstance(frontier_mask, jax.core.Tracer):
+        # eager single-device sweep — count by resolved mode ('auto' means
+        # the dense/sparse pick happens in-trace per round); jitted rounds
+        # show up in round_loop's metrics instead, never double-counted
+        _reg.counter(
+            "sage_edgemap_calls_total",
+            "eager edgemap_reduce dispatches by resolved mode",
+            labels=("mode",),
+        ).inc(mode=mode)
     if mode == "dense":
         return edgemap_dense(
             g, frontier_mask, x, monoid=monoid, map_fn=map_fn, edge_active=edge_active

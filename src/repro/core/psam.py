@@ -7,11 +7,26 @@ these counters let the benchmark harness report the paper's Table-1 contrast
 
 These are analytic (host-side) counters, not traced values — they model the
 cost of the algorithm as specified, which is what the paper's Table 1 does.
+
+Every ``charge_*`` additionally mirrors its deltas into the observability
+registry (``repro.obs``) as labeled counters —
+``sage_psam_large_read_words_total{charge=...}`` /
+``sage_psam_small_ops_words_total{charge=...}`` — so the modeled edge-read
+words stream out of a live service next to measured seconds, and the
+PSAM-model-vs-wall-clock drift becomes a queryable gauge
+(``ServingService`` sets ``sage_psam_drift_words_per_second`` per flush).
+The mirror is exact: per charge label, counter totals equal the field
+deltas word for word (locked by ``tests/test_obs.py``).  A ``PSAMCost``
+constructed with ``registry=`` mirrors there; otherwise each charge
+resolves the process-global default, so ``set_registry(noop_registry())``
+silences every account at one attribute lookup per charge.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
+from ..obs import get_registry
 from .csr import sharded_block_counts
 
 
@@ -154,14 +169,55 @@ class PSAMCost:
     large_writes: int = 0     # words written to large memory (Sage: always 0)
     small_ops: int = 0        # small-memory reads+writes
     omega: float = 4.0        # NVRAM write/read cost ratio (paper: ~4x)
+    # where charge_* mirrors its deltas (None = the process-global default
+    # at each charge); excluded from repr/eq so cost comparisons stay
+    # purely about the modeled words
+    registry: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    def _charge(self, label: str, reads: int = 0, small: int = 0, writes: int = 0):
+        """Apply one charge's deltas and mirror them into labeled counters.
+
+        The single bottleneck every ``charge_*`` funnels through: fields
+        move by exactly what the counters record, so per-label counter
+        totals reconcile with ``large_reads`` / ``small_ops`` /
+        ``large_writes`` word for word.
+        """
+        self.large_reads += reads
+        self.small_ops += small
+        self.large_writes += writes
+        reg = self.registry if self.registry is not None else get_registry()
+        if not reg.enabled:
+            return
+        if reads:
+            reg.counter(
+                "sage_psam_large_read_words_total",
+                "modeled large-memory (NVRAM) words read, by charge kind",
+                labels=("charge",),
+            ).inc(reads, charge=label)
+        if small:
+            reg.counter(
+                "sage_psam_small_ops_words_total",
+                "modeled small-memory (DRAM) words touched, by charge kind",
+                labels=("charge",),
+            ).inc(small, charge=label)
+        if writes:
+            reg.counter(
+                "sage_psam_large_write_words_total",
+                "modeled large-memory words written (Sage: always 0)",
+                labels=("charge",),
+            ).inc(writes, charge=label)
 
     def charge_edgemap_dense(self, g):
-        self.large_reads += _block_read_words(g, g.num_blocks)
-        self.small_ops += 3 * g.n
+        self._charge(
+            "edgemap_dense", reads=_block_read_words(g, g.num_blocks), small=3 * g.n
+        )
 
     def charge_edgemap_chunked(self, g, active_blocks: int):
-        self.large_reads += _block_read_words(g, active_blocks)
-        self.small_ops += 3 * g.n
+        self._charge(
+            "edgemap_chunked",
+            reads=_block_read_words(g, active_blocks),
+            small=3 * g.n,
+        )
 
     def charge_edgemap_planned(
         self, g, num_shards: int = 1, active_blocks=None, filter_live_blocks=None
@@ -191,12 +247,13 @@ class PSAMCost:
         slots, the relaxed-PSAM O(n + m/64)-words filter state read once
         per round.
         """
-        self.charge_edgemap_batched(
+        self._charge_batched(
             g,
             1,
             num_shards=num_shards,
             active_blocks=active_blocks,
             filter_live_blocks=filter_live_blocks,
+            label="edgemap_planned",
         )
 
     def charge_edgemap_batched(
@@ -222,8 +279,30 @@ class PSAMCost:
         as in ``charge_edgemap_planned`` (the batch shares one traversal
         mask per round).
         """
+        self._charge_batched(
+            g,
+            batch,
+            num_shards=num_shards,
+            active_blocks=active_blocks,
+            filter_live_blocks=filter_live_blocks,
+            label="edgemap_batched",
+        )
+
+    def _charge_batched(
+        self,
+        g,
+        batch: int,
+        *,
+        num_shards: int,
+        active_blocks,
+        filter_live_blocks,
+        label: str,
+    ):
+        """Shared arithmetic behind the planned/batched charges; ``label``
+        names the mirror counter series so the two stay distinguishable."""
         _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
         blocks = padded_total if active_blocks is None else active_blocks
+        reads = 0
         if filter_live_blocks is not None:
             live = filter_live_blocks
             if hasattr(live, "block_live"):  # a GraphFilter
@@ -233,12 +312,14 @@ class PSAMCost:
             per = -(-live // max(num_shards, 1))  # live blocks, whole shards
             blocks = min(blocks, per * num_shards)
             # the filter words stream alongside the blocks they mask
-            self.large_reads += padded_total * (g.block_size // 32)
-        self.large_reads += _block_read_words(g, blocks)
+            reads += padded_total * (g.block_size // 32)
+        reads += _block_read_words(g, blocks)
         # O(batch·n) local state per shard + one O(batch·n)-word combine per
         # shard boundary — the DRAM side scales with the batch, the NVRAM
         # side does not
-        self.small_ops += batch * (3 * g.n + (num_shards - 1) * g.n)
+        self._charge(
+            label, reads=reads, small=batch * (3 * g.n + (num_shards - 1) * g.n)
+        )
 
     def charge_edgemap_sparse(
         self,
@@ -273,22 +354,29 @@ class PSAMCost:
         tb = max(tile_blocks, 1)
         per_shard_live = -(-int(live_blocks) // max(num_shards, 1))
         per_shard_streamed = -(-per_shard_live // tb) * tb
-        self.large_reads += _block_read_words(g, per_shard_streamed * num_shards)
-        # the compacted live-id list (compact_mask over NB block slots)
-        self.small_ops += g.num_blocks
-        self.small_ops += batch * (3 * g.n + (num_shards - 1) * g.n)
+        self._charge(
+            "edgemap_sparse",
+            reads=_block_read_words(g, per_shard_streamed * num_shards),
+            # the compacted live-id list (compact_mask over NB block slots)
+            # + per-round vertex state + per-boundary combine
+            small=g.num_blocks + batch * (3 * g.n + (num_shards - 1) * g.n),
+        )
 
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,
         # writes only bits + degrees (small memory)
         if hasattr(g, "compressed_bytes"):
-            self.large_reads += _compressed_target_words(g, touched_blocks)
+            reads = _compressed_target_words(g, touched_blocks)
         else:
-            self.large_reads += touched_blocks * g.block_size
-        self.small_ops += touched_blocks * (g.block_size // 32) + g.n
+            reads = touched_blocks * g.block_size
+        self._charge(
+            "filter_pack",
+            reads=reads,
+            small=touched_blocks * (g.block_size // 32) + g.n,
+        )
 
     def charge_small(self, words: int):
-        self.small_ops += words
+        self._charge("small", small=words)
 
     @property
     def work(self) -> float:

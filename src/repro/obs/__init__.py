@@ -1,0 +1,62 @@
+"""repro.obs — the observability layer: metrics registry + tracing.
+
+Every runtime layer reports here (ISSUE 9):
+
+* :class:`Registry` — labeled counters, gauges and fixed-bucket histograms
+  with exact p50/p99 extraction; ``snapshot()`` (nested dict) and
+  ``to_prometheus_text()`` (text exposition format) for pull-model export.
+* :func:`get_registry` / :func:`set_registry` / :func:`use_registry` —
+  the process-global default registry plus injectable instances;
+  :func:`noop_registry` installs disabled mode (one attribute lookup per
+  hot-path record, bit-identical results, no clock reads).
+* :func:`trace_session` / :func:`annotate` — ``jax.profiler`` capture as a
+  context manager, usable from serving, carrying the planner's
+  ``sage.round`` / ``sage.shard_combine`` named scopes.
+* ``python -m repro.obs.dump`` — run a small instrumented serving replay
+  (or nothing) and print the registry as Prometheus text or JSON.
+
+What reports where:
+
+* ``ServingService`` — per-(op, tenant) latency histograms, queue depth,
+  flush causes (deadline/depth/forced), admission outcomes, occupancy,
+  and the PSAM-model-vs-wall-clock drift gauge
+  (``sage_psam_drift_words_per_second``).
+* ``QueryEngine`` — batch-size histograms, lane/padding counters,
+  compile-cache hits/misses (steady-state retraces are a *metric*).
+* ``repro.core.plan`` — host-side round-loop timings and rounds-per-call.
+* ``PSAMCost`` — every ``charge_*`` mirrored into
+  ``sage_psam_*_words_total{charge=...}`` counters.
+
+See ``docs/observability.md`` for the metric catalogue and a scrape
+example.
+"""
+from .metrics import (
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    NoopRegistry,
+    Registry,
+    exp_buckets,
+    get_registry,
+    noop_registry,
+    set_registry,
+    use_registry,
+)
+from .trace import annotate, trace_session
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "NoopRegistry",
+    "exp_buckets",
+    "get_registry",
+    "set_registry",
+    "use_registry",
+    "noop_registry",
+    "DEFAULT_LATENCY_BUCKETS",
+    "trace_session",
+    "annotate",
+]

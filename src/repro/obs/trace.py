@@ -1,0 +1,66 @@
+"""Round-level tracing — the PR-8 profiler plumbing as a reusable session.
+
+``benchmarks/run.py --profile DIR`` showed the shape: start a
+``jax.profiler`` trace, annotate spans, stop, and the captured timeline
+carries the ``sage.round`` / ``sage.round.sweep`` / ``sage.shard_combine``
+named scopes the planner already emits.  This module packages that into a
+context manager any layer can use — a serving deployment wraps a window of
+``tick`` calls in ``trace_session`` and gets the same per-round timeline
+the benches get, without importing profiler internals.
+
+Only one JAX profiler trace can run per process; nested ``trace_session``
+blocks therefore no-op (the outer session owns the capture) instead of
+crashing the serving loop that asked for a second window.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+__all__ = ["trace_session", "annotate"]
+
+_active = threading.local()
+
+
+@contextlib.contextmanager
+def trace_session(trace_dir: str, *, label: str | None = None):
+    """Capture a ``jax.profiler`` trace of the enclosed block into ``trace_dir``.
+
+    Everything executed inside the block lands in one TensorBoard-loadable
+    trace under ``trace_dir`` — jitted computations with their
+    ``jax.named_scope`` spans (the planner's ``sage.round*`` scopes give
+    per-round timing), host-side gaps between dispatches, and any nested
+    :func:`annotate` spans.  ``label`` wraps the whole session in one
+    ``TraceAnnotation`` span so multiple sessions in one trace directory
+    stay tellable apart.
+
+    Re-entrant use (a session inside a session) yields without starting a
+    second capture — the outer session already records everything — so a
+    serving drain loop can be wrapped unconditionally.  View with
+    ``tensorboard --logdir trace_dir`` (Profile plugin) or Perfetto.
+    """
+    if getattr(_active, "on", False):
+        with annotate(label) if label else contextlib.nullcontext():
+            yield
+        return
+    _active.on = True
+    jax.profiler.start_trace(trace_dir)
+    try:
+        with annotate(label) if label else contextlib.nullcontext():
+            yield
+    finally:
+        _active.on = False
+        jax.profiler.stop_trace()
+
+
+def annotate(label: str):
+    """A named host-side span (``jax.profiler.TraceAnnotation``).
+
+    Visible in the trace timeline only while a :func:`trace_session` (or a
+    bench ``--profile`` capture) is active; free otherwise.  The bench
+    harness wraps each benchmark in one of these, and a serving loop can
+    annotate individual flushes the same way.
+    """
+    return jax.profiler.TraceAnnotation(label)

@@ -56,7 +56,12 @@ from ..algorithms.local import personalized_pagerank_batched
 from ..algorithms.traversal import bfs_batched, wbfs_batched
 from ..compat import use_mesh
 from ..core.psam import PSAMCost
+from ..obs import get_registry
 from ..tuning.defaults import DEFAULT_MAX_BATCH
+
+# engine batch widths are powers of two capped at max_batch — exact-width
+# buckets, so the batch-size histogram is lossless
+_BATCH_BUCKETS = tuple(float(1 << i) for i in range(11))
 
 
 def _bfs_sweeps(res) -> int:
@@ -167,11 +172,22 @@ class QueryEngine:
     occupancy is observable, not just throughput; ``cost`` accumulates the
     PSAM model of every drained batch (edge bytes once per sweep, O(B·n)
     small memory).
+
+    ``registry`` (optional) is the metrics registry the engine reports to —
+    the process-global default (``repro.obs.get_registry``) when omitted,
+    resolved once at construction.  The engine records per-op batch-size
+    histograms (``sage_engine_batch_size``), lane/padding counters,
+    submitted/served counters, an occupancy gauge, and compile-cache
+    hit/miss counters (``sage_engine_cache_{hits,misses}_total`` — the
+    zero-steady-state-retrace contract as a live metric, not just a test).
+    Inject ``repro.obs.noop_registry()`` to disable at one attribute
+    lookup per record.
     """
 
-    def __init__(self, g, *, plan=None, max_batch: int | None = None):
+    def __init__(self, g, *, plan=None, max_batch: int | None = None, registry=None):
         self.graph = g
         self.plan = plan
+        self.registry = registry if registry is not None else get_registry()
         self.prepared = g if plan is None else plan.prepare(g)
         if max_batch is None:
             decisions = getattr(plan, "decisions", None)
@@ -179,7 +195,39 @@ class QueryEngine:
                 decisions.max_batch if decisions is not None else DEFAULT_MAX_BATCH
             )
         self.max_batch = int(max_batch)
-        self.cost = PSAMCost()
+        self.cost = PSAMCost(registry=self.registry)
+        reg = self.registry
+        self._m_submitted = reg.counter(
+            "sage_engine_submitted_total", "queries submitted", labels=("op",)
+        )
+        self._m_served = reg.counter(
+            "sage_engine_served_total", "queries served (padding excluded)",
+            labels=("op",),
+        )
+        self._m_batches = reg.counter(
+            "sage_engine_batches_total", "batch buckets drained", labels=("op",)
+        )
+        self._m_lanes = reg.counter(
+            "sage_engine_lanes_total", "batch columns drained (padding included)"
+        )
+        self._m_padded = reg.counter(
+            "sage_engine_padded_lanes_total", "padding columns drained"
+        )
+        self._m_batch_size = reg.histogram(
+            "sage_engine_batch_size", "padded batch width B per drained bucket",
+            labels=("op",), buckets=_BATCH_BUCKETS,
+        )
+        self._m_cache_hits = reg.counter(
+            "sage_engine_cache_hits_total",
+            "compiled-executable cache hits", labels=("cache",),
+        )
+        self._m_cache_misses = reg.counter(
+            "sage_engine_cache_misses_total",
+            "compiled-executable cache misses (retraces)", labels=("cache",),
+        )
+        self._m_occupancy = reg.gauge(
+            "sage_engine_occupancy", "served / lanes over the engine lifetime"
+        )
         self._pending: dict[tuple, list[tuple[int, dict]]] = {}
         self._compiled: dict[tuple, Callable] = {}
         self.trace_counts: dict[tuple, int] = {}
@@ -216,6 +264,7 @@ class QueryEngine:
         h = QueryHandle(self._next_id, op)
         self._next_id += 1
         self.stats["submitted"] += 1
+        self._m_submitted.inc(op=op)
         self._pending.setdefault((op, scalars), []).append((h.id, params))
         return h
 
@@ -248,10 +297,28 @@ class QueryEngine:
         ``served / lanes`` — the padding waste metric ``table_latency``
         reports: 1.0 means every column was a real request, 0.5 means half
         the batched compute (though NOT half the edge reads — those are
-        shared) went to padded lanes.  1.0 before any batch drains.
+        shared) went to padded lanes.  **NaN before any batch drains** —
+        an idle engine has no occupancy, and the old ``1.0`` read as
+        perfect utilization on a dashboard; the ``sage_engine_occupancy``
+        gauge likewise only materializes once a batch has drained.
         """
         lanes = self.stats["lanes"]
-        return self.stats["served"] / lanes if lanes else 1.0
+        return self.stats["served"] / lanes if lanes else float("nan")
+
+    def reset_stats(self) -> None:
+        """Zero the stats counters AND the engine-scoped registry metrics.
+
+        Rolls every ``stats`` entry back to 0 and resets the attached
+        registry's ``sage_engine_*`` families (other families — service,
+        PSAM — are untouched), so a bench can measure a warm engine from a
+        clean slate without constructing a new one (and losing its
+        compiled-executable cache).  ``cost`` and ``trace_counts`` are
+        deliberately NOT reset: the PSAM account is a lifetime model and
+        the trace counts are the retrace-proof audit trail.
+        """
+        for k in self.stats:
+            self.stats[k] = 0
+        self.registry.reset(prefix="sage_engine_")
 
     # ------------------------------------------------------------------
     def _run_bucket(self, op, scalars, chunk) -> dict[QueryHandle, Any]:
@@ -272,6 +339,12 @@ class QueryEngine:
         self.stats["served"] += k
         self.stats["lanes"] += B
         self.stats["padded"] += B - k
+        self._m_batches.inc(op=op)
+        self._m_served.inc(k, op=op)
+        self._m_lanes.inc(B)
+        self._m_padded.inc(B - k)
+        self._m_batch_size.observe(float(B), op=op)
+        self._m_occupancy.set(self.stats["served"] / self.stats["lanes"])
         self._charge(B, spec.sweeps(res), op=op, scalars=scalars)
         return {
             QueryHandle(hid, op): spec.unbatch(res, i)
@@ -287,7 +360,10 @@ class QueryEngine:
         """
         key = (self._backend_key, self._mesh_key, self._tuning_key, op, B, scalars)
         fn = self._compiled.get(key)
-        if fn is None:
+        if fn is not None:
+            self._m_cache_hits.inc(cache="engine")
+        else:
+            self._m_cache_misses.inc(cache="engine")
             sc = dict(scalars)
             plan = self.plan
 

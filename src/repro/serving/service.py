@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -54,6 +55,7 @@ from ..algorithms.traversal import (
 )
 from ..compat import use_mesh
 from ..core.psam import TenantLedgers, edgemap_round_read_words
+from ..obs import DEFAULT_LATENCY_BUCKETS, get_registry
 from ..tuning.defaults import DEFAULT_EST_ROUNDS
 from .engine import QueryEngine, _pow2_batch
 
@@ -150,11 +152,27 @@ class ServingService:
     (``deadline_flushes`` / ``depth_flushes``) and round-weighted lane
     occupancy; ``cost`` is the engine's PSAM account — cohort rounds are
     charged there too, so one object models the whole service.
+
+    ``registry`` (optional) is where the service reports: per-(op, tenant)
+    end-to-end latency histograms (``sage_service_latency_seconds`` =
+    queue wait in virtual time + drain wall time), queue depth, flush
+    causes, admission outcomes, occupancy, and the model-vs-reality drift
+    gauge ``sage_psam_drift_words_per_second`` (modeled edge-read words
+    charged during a flush ÷ the flush's wall seconds — falling drift at
+    fixed workload means the analytic PSAM charge is overpricing reads).
+    Defaults to the process-global registry; inject
+    ``repro.obs.noop_registry()`` and the service takes no wall-clock
+    readings at all.
     """
 
-    def __init__(self, g, *, plan=None, config: ServiceConfig | None = None):
+    def __init__(
+        self, g, *, plan=None, config: ServiceConfig | None = None, registry=None
+    ):
         self.config = config or ServiceConfig()
-        self.engine = QueryEngine(g, plan=plan, max_batch=self.config.max_batch)
+        self.registry = registry if registry is not None else get_registry()
+        self.engine = QueryEngine(
+            g, plan=plan, max_batch=self.config.max_batch, registry=self.registry
+        )
         # resolved batch width (explicit config > plan tuning > default) —
         # every width decision below uses this, never the raw config field
         self.max_batch = self.engine.max_batch
@@ -188,6 +206,43 @@ class ServingService:
             "lane_rounds_total": 0,
             "active_lane_rounds": 0,
         }
+        reg = self.registry
+        self._m_submitted = reg.counter(
+            "sage_service_submitted_total", "requests submitted",
+            labels=("op", "tenant"),
+        )
+        self._m_admission = reg.counter(
+            "sage_service_admission_total",
+            "admission outcomes (admitted includes deferred re-admissions)",
+            labels=("outcome", "tenant"),
+        )
+        self._m_flushes = reg.counter(
+            "sage_service_flushes_total", "queue flushes by trigger cause",
+            labels=("cause",),
+        )
+        self._m_latency = reg.histogram(
+            "sage_service_latency_seconds",
+            "end-to-end request latency: virtual queue wait + drain wall time",
+            labels=("op", "tenant"), buckets=DEFAULT_LATENCY_BUCKETS,
+        )
+        self._m_flush_seconds = reg.histogram(
+            "sage_service_flush_seconds", "wall seconds per queue flush",
+            buckets=DEFAULT_LATENCY_BUCKETS,
+        )
+        self._m_queue_depth = reg.gauge(
+            "sage_service_queue_depth", "admitted, undrained requests"
+        )
+        self._m_deferred_depth = reg.gauge(
+            "sage_service_deferred_depth", "deferred (unadmitted) requests"
+        )
+        self._m_occupancy = reg.gauge(
+            "sage_service_occupancy",
+            "round-weighted fraction of cohort lane-slots doing real work",
+        )
+        self._m_drift = reg.gauge(
+            "sage_psam_drift_words_per_second",
+            "modeled edge-read words charged per wall second of the last flush",
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -211,12 +266,14 @@ class ServingService:
 
         Each fused round contributes B lane-slots (the packed width) of
         which the active lanes did work — drained-but-not-yet-repacked
-        lanes and padding lanes count as waste.  1.0 before any drain.
+        lanes and padding lanes count as waste.  **NaN before any cohort
+        round runs** — an idle service has no occupancy to report (the
+        old 1.0 read as perfect utilization on a dashboard).
         This is the metric ``round_quantum`` tunes: smaller quanta repack
         sooner and push occupancy up.
         """
         total = self.stats["lane_rounds_total"]
-        return self.stats["active_lane_rounds"] / total if total else 1.0
+        return self.stats["active_lane_rounds"] / total if total else float("nan")
 
     # ------------------------------------------------------------------
     def submit(self, op: str, *, tenant: str = "default", now: float = 0.0, **params):
@@ -232,6 +289,7 @@ class ServingService:
         get ``deadline = now + slo``.
         """
         self.stats["submitted"] += 1
+        self._m_submitted.inc(op=op, tenant=tenant)
         t = ServingTicket(
             id=self._next_id,
             op=op,
@@ -249,13 +307,18 @@ class ServingService:
             t.status = "queued"
             self._queue.append(t)
             self.stats["admitted"] += 1
+            self._m_admission.inc(outcome="admitted", tenant=tenant)
         elif self.config.admission == "defer":
             t.status = "deferred"
             self._deferred.append(t)
             self.stats["deferred"] += 1
+            self._m_admission.inc(outcome="deferred", tenant=tenant)
         else:
             t.status = "rejected"
             self.stats["rejected"] += 1
+            self._m_admission.inc(outcome="rejected", tenant=tenant)
+        self._m_queue_depth.set(float(len(self._queue)))
+        self._m_deferred_depth.set(float(len(self._deferred)))
         return t
 
     def tick(self, now: float) -> list[ServingTicket]:
@@ -275,8 +338,10 @@ class ServingService:
             return []
         if len(self._queue) >= self.depth_trigger:
             self.stats["depth_flushes"] += 1
+            self._m_flushes.inc(cause="depth")
         elif min(t.deadline for t in self._queue) <= now:
             self.stats["deadline_flushes"] += 1
+            self._m_flushes.inc(cause="deadline")
         else:
             return []
         return self._flush(now)
@@ -288,6 +353,7 @@ class ServingService:
         if not self._queue:
             return []
         self.stats["forced_flushes"] += 1
+        self._m_flushes.inc(cause="forced")
         return self._flush(now)
 
     def next_deadline(self) -> float | None:
@@ -329,9 +395,12 @@ class ServingService:
                 t.deadline = now + self.config.slo
                 self._queue.append(t)
                 self.stats["admitted"] += 1
+                self._m_admission.inc(outcome="admitted", tenant=t.tenant)
             else:
                 still.append(t)
         self._deferred = still
+        self._m_queue_depth.set(float(len(self._queue)))
+        self._m_deferred_depth.set(float(len(self._deferred)))
 
     def _flush(self, now: float) -> list[ServingTicket]:
         """Drain the full queue: traversal tickets fuse into ≤max_batch
@@ -347,11 +416,30 @@ class ServingService:
             if self.plan is not None and self.plan.is_sharded
             else contextlib.nullcontext()
         )
+        # wall-clock + modeled-words readings only when a live registry is
+        # attached — noop mode flushes without touching the clock at all
+        observing = self.registry.enabled
+        if observing:
+            words_before = self.cost.large_reads
+            t0 = time.perf_counter()
         with ctx:
             for lo in range(0, len(trav), self.max_batch):
                 done += self._drain_cohort(trav[lo : lo + self.max_batch], now)
             if other:
                 done += self._drain_engine_ops(other, now)
+        if observing:
+            wall = time.perf_counter() - t0
+            self._m_flush_seconds.observe(wall)
+            if wall > 0.0:
+                # the drift gauge: analytic PSAM words ÷ wall seconds for
+                # THIS flush — model throughput vs reality, queryable live
+                self._m_drift.set((self.cost.large_reads - words_before) / wall)
+            for t in done:
+                self._m_latency.observe(
+                    max(now - t.arrival, 0.0) + wall, op=t.op, tenant=t.tenant
+                )
+            self._m_queue_depth.set(float(len(self._queue)))
+            self._m_occupancy.set(self.occupancy)
         for t in done:
             self.ledgers.ledger(t.tenant).settle(t.est_words, t.words)
             self._observe_rounds(t)

@@ -39,7 +39,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-AUDITED_MODULES = ("repro.core", "repro.serving", "repro.tuning")
+AUDITED_MODULES = ("repro.core", "repro.serving", "repro.tuning", "repro.obs")
 MEMBER_AUDITED = ("repro.serving",)  # classes audited method-by-method
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
 
