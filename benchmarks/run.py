@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
                   + PSAM edge-read amortization at B=8
   table_latency — ServingService: p50/p99 latency over Poisson + bursty
                   arrival traces, qps-vs-SLO curve, saturated-B8 vs engine
+  table_streaming — delta overlay: edit-plus-query trace replay, per-edit
+                  and compaction costs, PSAM amortization vs recompress-
+                  per-edit (in-bench asserted >= 10x at batch 1000)
   table_autotune— tuning: strategy="auto" vs every fixed strategy across a
                   frontier-density sweep (in-bench asserted) + BFS/wBFS/
                   PageRank replays under an in-run calibrated table
@@ -42,7 +45,7 @@ def main() -> None:
     from . import (fig1_suite, fig7_dram_nvram, fig_layout, kernels_micro,
                    table4_filter, table5_edgemap, table_autotune,
                    table_compression, table_distributed, table_latency,
-                   table_serving)
+                   table_serving, table_streaming)
 
     benches = {
         "fig1_suite": lambda: fig1_suite.run(
@@ -74,6 +77,11 @@ def main() -> None:
         # deadline-driven drain loop: latency percentiles over replayed
         # arrival traces + the saturated-B8 qps parity with the engine
         "table_latency": lambda: table_latency.run(
+            n=4096 if args.full else 1024, m=32768 if args.full else 8192
+        ),
+        # mutable serving: delta-overlay edit replay + compaction
+        # amortization vs recompress-per-edit (PSAM words, asserted)
+        "table_streaming": lambda: table_streaming.run(
             n=4096 if args.full else 1024, m=32768 if args.full else 8192
         ),
         # auto-vs-fixed strategy spread with an in-run calibrated table;

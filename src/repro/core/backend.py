@@ -1,4 +1,4 @@
-"""Graph-backend protocol — one edgeMap engine over two storage formats.
+"""Graph-backend protocol — one edgeMap engine over three storage formats.
 
 ``edge_map`` / ``edgemap_dense`` / ``edgemap_chunked`` / ``edgemap_reduce``
 (and everything layered on them: graphFilter, vertexSubset composition, the
@@ -6,6 +6,15 @@ algorithm suite) accept any object satisfying ``GraphBackend``:
 
 * ``CSRGraph``       — uncompressed blocked CSR (the seed format)
 * ``CompressedCSR``  — Ligra+-style delta-packed blocks (§5.1.3)
+* ``DeltaGraph``     — mutable ``base ∪ delta`` overlay (``repro.delta``):
+  one of the two formats above as the read-only NVRAM base, plus DRAM
+  patch blocks appended after the base block range and tombstone bits
+  folded into the block view.  It satisfies the protocol structurally —
+  this module never imports it (delta layers ON core) — and takes the
+  generic paths below: lazy ``block_dst`` for the dense pass, the
+  block-gather tile for the sparse pass (``sparse_streamed`` falls back
+  to plain sparse, the documented non-CompressedCSR behavior), so every
+  consumer serves a mutated graph unmodified.
 
 The two structural hooks that differ per backend live here:
 

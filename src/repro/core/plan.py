@@ -272,9 +272,11 @@ class ExecutionPlan:
     mesh        — jax Mesh, or None for plain single-device execution
     shard_axes  — mesh axes the edge blocks shard over (() → all axes);
                   vertex state is replicated over every axis either way
-    backend     — 'csr' | 'compressed' | 'auto' (informational; recorded by
-                  make_plan from the graph so cost models / benchmarks can
-                  report what actually ran)
+    backend     — 'csr' | 'compressed' | 'delta' | 'auto' (informational;
+                  recorded by make_plan from the graph so cost models /
+                  benchmarks can report what actually ran — 'delta' is the
+                  repro.delta overlay backend, whose base alone counts as
+                  NVRAM)
     strategy    — default edgeMap mode when the call site doesn't pass one:
                   'dense' (pull over all blocks), 'sparse' (chunked over
                   frontier-owned blocks), 'sparse_streamed' (chunked with
@@ -405,7 +407,9 @@ class ExecutionPlan:
         width), summed over this plan's shards — exactly what
         ``PSAMCost.charge_edgemap_planned`` charges for one round.  ``g``
         may be the raw backend or its plan-prepared ``ShardedGraph`` (the
-        block split is deterministic, so both price identically)."""
+        block split is deterministic, so both price identically).  Delta
+        overlays price as their base (``edgemap_round_read_words``'s
+        dispatch): patch blocks are DRAM, never part of the read quantum."""
         from .psam import edgemap_round_read_words
 
         if isinstance(g, ShardedGraph):
@@ -588,6 +592,15 @@ def make_plan(
         backend = "compressed"
     elif isinstance(g, CSRGraph):
         backend = "csr"
+    elif hasattr(g, "overlay_small_words"):
+        # delta-overlay backend (repro.delta.DeltaGraph) — duck-typed, core
+        # never imports delta.  The tuning table has no overlay
+        # measurements, so the decision falls back to constants; the
+        # recorded backend keeps cost models / benchmarks honest about
+        # what ran.  Sharding needs no planner support: DeltaGraph.shard
+        # splits base and patch blocks along the same ceil(NB/k) ranges,
+        # so prepare()'s stack/device_put path applies unchanged.
+        backend = "delta"
     decision = _resolve_decision(backend, strategy, tuning)
     if dense_frac is not None:
         # an explicit threshold pins BOTH predicates — the caller is

@@ -3,7 +3,11 @@
 The PSAM charges: unit for small-memory ops and large-memory reads, ω for
 large-memory writes.  Sage algorithms perform **zero** large-memory writes;
 these counters let the benchmark harness report the paper's Table-1 contrast
-(GBBS O(ω·m) vs Sage O(m)) for a given graph and a chosen ω.
+(GBBS O(ω·m) vs Sage O(m)) for a given graph and a chosen ω.  The one
+sanctioned write is the mutable-graph subsystem's batched compaction
+(``repro.delta.compact`` → ``charge_large_write``); queries over a delta
+overlay charge base reads + DRAM patch small-ops via
+``charge_edgemap_overlay``.
 
 These are analytic (host-side) counters, not traced values — they model the
 cost of the algorithm as specified, which is what the paper's Table 1 does.
@@ -65,7 +69,15 @@ def edgemap_round_read_words(g, num_shards: int = 1) -> int:
     a batched round reads exactly the same words).  The serving scheduler
     prices admission control and per-lane drain attribution in this unit,
     via :meth:`repro.core.plan.ExecutionPlan.edge_read_words_per_round`.
+
+    Delta-overlay backends (``repro.delta.DeltaGraph``, duck-typed on
+    ``overlay_small_words`` — core never imports delta) price as their
+    BASE: only the base blocks live in large memory; the patch blocks and
+    tombstone words are DRAM-side and belong to small_ops
+    (``charge_edgemap_overlay``), never to the read quantum.
     """
+    if hasattr(g, "overlay_small_words"):
+        g = g.base
     _, padded_total = sharded_block_counts(g.num_blocks, num_shards)
     return _block_read_words(g, padded_total)
 
@@ -361,6 +373,42 @@ class PSAMCost:
             # + per-round vertex state + per-boundary combine
             small=g.num_blocks + batch * (3 * g.n + (num_shards - 1) * g.n),
         )
+
+    def charge_edgemap_overlay(self, dg, batch: int = 1, num_shards: int = 1):
+        """One edgeMap round over a delta-overlay backend (``repro.delta``).
+
+        The semi-asymmetric split, priced exactly: large-memory reads are
+        the BASE blocks only — the same per-shard padded count and
+        compressed-footprint arithmetic a round over the base alone would
+        charge (``sharded_block_counts`` over ``num_base_blocks``, through
+        ``_block_read_words``) — while everything the overlay adds is
+        DRAM-resident and lands in small_ops: the patch blocks' dst+w
+        words plus one tombstone word per 32 base slots
+        (``dg.overlay_small_words``), on top of the usual O(batch·n)
+        vertex state and per-shard-boundary combine.  ``dg`` duck-types:
+        anything with ``overlay_small_words`` / ``num_base_blocks`` /
+        ``base`` qualifies, so core never imports the delta package.
+        """
+        _, base_padded = sharded_block_counts(dg.num_base_blocks, num_shards)
+        self._charge(
+            "edgemap_overlay",
+            reads=_block_read_words(dg.base, base_padded),
+            small=dg.overlay_small_words
+            + batch * (3 * dg.n + (num_shards - 1) * dg.n),
+        )
+
+    def charge_large_write(self, words: int, label: str = "large_write"):
+        """Charge ``words`` of large-memory (NVRAM) writes at the ω premium.
+
+        Sage query paths NEVER call this — the whole point of Table 1 is
+        ``large_writes == 0`` for every algorithm.  The single legitimate
+        caller is ``repro.delta.compact``: folding the DRAM overlay into a
+        fresh compressed base is the one batched write the log-structured
+        design budgets for, and routing it through here makes the
+        amortization auditable (``work`` prices it at ``omega`` per word;
+        the mirror lands in ``sage_psam_large_write_words_total``).
+        """
+        self._charge(label, writes=int(words))
 
     def charge_filter_pack(self, g, touched_blocks: int):
         # filter bits live in small memory: reads edge ids from large memory,

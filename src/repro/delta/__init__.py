@@ -1,0 +1,45 @@
+"""repro.delta — mutable graphs under the semi-asymmetric contract.
+
+The paper's PSAM (edges read-only in NVRAM, O(n) mutable DRAM) is a
+log-structured storage design; this package is that design made
+executable:
+
+  DeltaOverlay         — host-side mutable edit log: per-vertex DRAM
+                         patch lists for inserted edges + packed
+                         tombstone bitmasks (the ``edge_active`` word
+                         layout) for deleted base edges
+  DeltaGraph           — immutable ``base ∪ delta`` snapshot that
+                         implements the ``GraphBackend`` protocol, so
+                         edge_map / filters / algorithms / QueryEngine /
+                         ServingService serve the mutated graph
+                         UNMODIFIED, bit-identical to a from-scratch
+                         rebuild (locked by ``tests/test_delta.py``)
+  compact              — fold the overlay into a fresh CompressedCSR:
+                         the subsystem's ONLY large-memory write
+                         (``PSAMCost.charge_large_write``), batched and
+                         amortized over the edits since the last fold
+  compact_write_words  — the ω-charged footprint of one compaction
+  save_compacted       — atomic persistence via checkpoint/ckpt.py's
+                         step-directory save (crash-safe by os.replace)
+  load_compacted       — restore the latest published compacted base
+
+PSAM pricing for queries over an overlay lives in
+``PSAMCost.charge_edgemap_overlay`` (base blocks read at their NVRAM
+footprint; patch blocks + tombstone words as DRAM small-ops); the
+compaction *policy* — when the accumulated overlay surcharge justifies
+the ω write — is ``repro.tuning.OverlayTrigger``.  Serving-tier edit
+admission and compaction scheduling live in
+``repro.serving.ServingService`` (``submit_edit`` / between-flush
+compaction); ``docs/mutability.md`` documents the whole contract.
+"""
+from .compact import compact, compact_write_words, load_compacted, save_compacted
+from .overlay import DeltaGraph, DeltaOverlay
+
+__all__ = [
+    "DeltaGraph",
+    "DeltaOverlay",
+    "compact",
+    "compact_write_words",
+    "load_compacted",
+    "save_compacted",
+]

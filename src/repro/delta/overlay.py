@@ -1,0 +1,470 @@
+"""DRAM delta overlay — log-structured mutable graphs under the PSAM.
+
+Sage's semi-asymmetric contract (edges read-only in NVRAM, O(n) mutable
+DRAM) is exactly a log-structured storage design: accept edge insertions
+and deletions into a DRAM-resident overlay, serve queries over
+``base ∪ delta``, and fold the overlay into a fresh base only in rare,
+batched compactions (``repro.delta.compact`` — the ONLY large-memory
+write this subsystem ever performs).
+
+Two pieces:
+
+* :class:`DeltaOverlay` — the host-side mutable edit log.  Deletions of
+  base edges become **tombstone bits** in a packed uint32 mask aligned
+  1:1 with the base's edge-block slots (the same little-endian word
+  layout the ``edge_active`` filter operand uses, so kernels already
+  know how to AND it in).  Insertions become **patch edges**, grouped
+  per source vertex.  Edit semantics are upsert/delete over the directed
+  edge set, chosen to be *exactly* what ``build_csr`` would produce from
+  the final edge list — the contract the differential test harness
+  locks (``tests/test_delta.py``).
+* :class:`DeltaGraph` — an immutable snapshot of ``base ∪ delta`` that
+  implements the ``GraphBackend`` protocol.  The base blocks keep their
+  NVRAM layout with tombstoned slots masked to the sentinel ``n``; the
+  inserted edges ride in dense *patch blocks* appended after the base
+  blocks (same ``F_B`` width, same sentinel padding, ``block_src``
+  naming the owner), so ``edge_map`` / filters / algorithms /
+  ``QueryEngine`` reduce base and patch through the **same monoid in the
+  same block sweep** — no special-cased side pass, and results are
+  bit-identical to a from-scratch graph for every order-insensitive
+  monoid (int32 min/max/or; float32 sums of sub-2²⁴ integer totals).
+
+PSAM accounting: only the base blocks live in large memory.  The patch
+blocks and tombstone words are DRAM-resident and are charged as
+small-memory ops (``PSAMCost.charge_edgemap_overlay``); cost-model
+consumers duck-type the backend on the ``overlay_small_words``
+attribute (``repro.core`` cannot import this package — layering).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compressed import CompressedCSR
+from ..core.csr import CSRGraph, sharded_block_counts
+from ..core.graph_filter import unpack_word_bits
+
+__all__ = ["DeltaGraph", "DeltaOverlay"]
+
+
+def _live_words_per_block(block_size: int) -> int:
+    """Tombstone-mask words per block: ceil(F_B / 32)."""
+    return -(-block_size // 32)
+
+
+def _pack_live_words(live: np.ndarray, num_blocks: int, block_size: int) -> np.ndarray:
+    """Pack a bool[NB*F_B] liveness mask into uint32[NB, ceil(F_B/32)].
+
+    Little-endian within each word — bit ``i`` of word ``w`` is slot
+    ``32*w + i`` — matching ``repro.core.graph_filter.pack_bits`` so the
+    tombstone mask and the ``edge_active`` operand share one layout.
+    Blocks narrower than a word multiple pad with dead (zero) bits.
+    """
+    W = _live_words_per_block(block_size)
+    padded = np.zeros((num_blocks, W * 32), dtype=bool)
+    padded[:, :block_size] = live.reshape(num_blocks, block_size)
+    bits = padded.reshape(num_blocks, W, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)).sum(axis=-1).astype(np.uint32)
+
+
+def _next_pow2(k: int) -> int:
+    b = 1
+    while b < k:
+        b *= 2
+    return b
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "base",
+        "patch_src",
+        "patch_dst",
+        "patch_w",
+        "live_words",
+        "degrees",
+    ],
+    meta_fields=["n", "m", "num_blocks", "num_base_blocks", "block_size", "weighted"],
+)
+@dataclasses.dataclass(frozen=True)
+class DeltaGraph:
+    """Immutable ``base ∪ delta`` snapshot implementing ``GraphBackend``.
+
+    ``base`` is the read-only NVRAM graph (``CSRGraph`` or
+    ``CompressedCSR``, nested as a sub-pytree).  ``live_words`` is the
+    packed tombstone mask over the base's slots (bit set = slot live; a
+    bit is only ever set where the base slot held a real edge, so the
+    mask subsumes the base's own padding).  ``patch_*`` are the inserted
+    edges laid out in dense blocks of the base's ``F_B`` width, appended
+    after the base blocks in every block-view property — consumers see
+    one contiguous block array of ``num_blocks = num_base_blocks + PB``
+    blocks and never dispatch on which side a block came from.
+
+    ``degrees`` / ``m`` describe the LIVE edge set (base minus
+    tombstones plus patch), so auto-strategy density heuristics price
+    the graph being served, not the stale base.
+    """
+
+    base: CSRGraph | CompressedCSR
+    patch_src: jnp.ndarray   # int32[PB]      — owner vertex (sentinel n on pads)
+    patch_dst: jnp.ndarray   # int32[PB, F_B] — targets (sentinel n on pads)
+    patch_w: jnp.ndarray     # float32[PB, F_B]
+    live_words: jnp.ndarray  # uint32[NB_base, F_B/32] — 1 = live base slot
+    degrees: jnp.ndarray     # int32[n] — live out-degrees
+    n: int
+    m: int
+    num_blocks: int
+    num_base_blocks: int
+    block_size: int
+    weighted: bool
+
+    # -- GraphBackend block view: base (tombstones folded in) ++ patch --
+    @property
+    def num_patch_blocks(self) -> int:
+        """Patch blocks appended after the base's block range."""
+        return self.num_blocks - self.num_base_blocks
+
+    @property
+    def _base_live(self) -> jnp.ndarray:
+        """bool[NB_base, F_B] — unpacked tombstone mask (lazy, fuses);
+        word-padding bits beyond F_B are sliced away."""
+        return unpack_word_bits(self.live_words)[:, : self.block_size]
+
+    @property
+    def block_src(self) -> jnp.ndarray:
+        """int32[NB] owner per block: base owners then patch owners."""
+        return jnp.concatenate([self.base.block_src, self.patch_src])
+
+    @property
+    def block_dst(self) -> jnp.ndarray:
+        """int32[NB, F_B] targets with tombstoned base slots already
+        masked to the sentinel ``n`` — deletions are invisible to every
+        consumer without any ``edge_active`` operand."""
+        masked = jnp.where(self._base_live, self.base.block_dst, jnp.int32(self.n))
+        return jnp.concatenate([masked, self.patch_dst])
+
+    @property
+    def block_w(self) -> jnp.ndarray:
+        """float32[NB, F_B] weights (zeros on tombstoned/padding slots)."""
+        masked = jnp.where(self._base_live, self.base.block_w, 0.0)
+        return jnp.concatenate([masked, self.patch_w])
+
+    @property
+    def edge_valid(self) -> jnp.ndarray:
+        """bool[NB*F_B] — live base slots ++ real patch slots."""
+        patch_valid = (self.patch_dst < jnp.int32(self.n)).reshape(-1)
+        return jnp.concatenate([self._base_live.reshape(-1), patch_valid])
+
+    @property
+    def edge_dst(self) -> jnp.ndarray:
+        return self.block_dst.reshape(-1)
+
+    @property
+    def edge_src(self) -> jnp.ndarray:
+        """int32[NB*F_B] — owner per slot, sentinel n on dead slots."""
+        src = jnp.broadcast_to(
+            self.block_src[:, None], (self.num_blocks, self.block_size)
+        ).reshape(-1)
+        return jnp.where(self.edge_valid, src, jnp.int32(self.n))
+
+    @property
+    def edge_w(self) -> jnp.ndarray:
+        return self.block_w.reshape(-1)
+
+    @property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    def out_degree(self, v):
+        return self.degrees[v]
+
+    # -- PSAM surface (meta-only arithmetic: usable under a tracer) -----
+    @property
+    def overlay_small_words(self) -> int:
+        """DRAM words one full sweep touches beyond the base blocks: the
+        patch blocks' dst+w words plus one tombstone word per 32 base
+        slots.  The duck-typing key every cost-model consumer dispatches
+        on — ``PSAMCost.charge_edgemap_overlay`` charges exactly this
+        into ``small_ops`` while the base keeps its NVRAM read charge."""
+        return (
+            self.num_patch_blocks * 2 * self.block_size
+            + self.num_base_blocks * _live_words_per_block(self.block_size)
+        )
+
+    @property
+    def compact_write_words(self) -> int:
+        """Estimated NVRAM words ``compact()`` would write now: the live
+        edge set re-encoded as a fresh ``CompressedCSR`` (per-block
+        first+count+deltas words, weights uncompressed when weighted).
+        Meta-only arithmetic — an estimate for the compaction *trigger*
+        (``repro.tuning.OverlayTrigger``); the actual charge uses the
+        compacted graph's real footprint."""
+        blocks = max(-(-self.m // self.block_size), 1)
+        per_block = -(-(4 + 2 + 2 * self.block_size) // 4)
+        words = per_block * blocks
+        if self.weighted:
+            words += self.block_size * blocks
+        return words
+
+    # -- sharding -------------------------------------------------------
+    def shard(self, num_shards: int) -> list["DeltaGraph"]:
+        """Partition base AND patch blocks into ``num_shards`` ranges.
+
+        The base splits through its own ``shard`` (empty sentinel-block
+        padding, per-shard exception lists — unchanged); ``live_words``
+        splits along the identical block ranges with all-dead (zero)
+        padding rows, so shard s's tombstone rows line up 1:1 with shard
+        s's base blocks.  The patch blocks range-split independently
+        with sentinel padding rows.  Each shard is itself a valid
+        ``DeltaGraph`` over the global vertex space with identical meta,
+        so the planner stacks shards into one pytree exactly as for the
+        pure backends.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        FB = self.block_size
+        base_shards = self.base.shard(num_shards)
+        per_b, padded_b = sharded_block_counts(self.num_base_blocks, num_shards)
+        lw = np.asarray(self.live_words)
+        if padded_b > self.num_base_blocks:
+            lw = np.concatenate(
+                [lw, np.zeros((padded_b - self.num_base_blocks, FB // 32), np.uint32)]
+            )
+        PB = self.num_patch_blocks
+        per_p, padded_p = sharded_block_counts(PB, num_shards)
+        psrc = np.asarray(self.patch_src)
+        pdst = np.asarray(self.patch_dst)
+        pw = np.asarray(self.patch_w)
+        if padded_p > PB:
+            pad = padded_p - PB
+            psrc = np.concatenate([psrc, np.full(pad, self.n, np.int32)])
+            pdst = np.concatenate([pdst, np.full((pad, FB), self.n, np.int32)])
+            pw = np.concatenate([pw, np.zeros((pad, FB), np.float32)])
+        shards = []
+        for s in range(num_shards):
+            bl, bh = s * per_b, (s + 1) * per_b
+            pl, ph = s * per_p, (s + 1) * per_p
+            shards.append(
+                dataclasses.replace(
+                    self,
+                    base=base_shards[s],
+                    patch_src=jnp.asarray(psrc[pl:ph]),
+                    patch_dst=jnp.asarray(pdst[pl:ph]),
+                    patch_w=jnp.asarray(pw[pl:ph]),
+                    live_words=jnp.asarray(lw[bl:bh]),
+                    num_base_blocks=per_b,
+                    num_blocks=per_b + per_p,
+                )
+            )
+        return shards
+
+
+class DeltaOverlay:
+    """Host-side mutable edit log over a read-only base graph.
+
+    Accepts directed-edge ``insert`` / ``delete`` edits (upsert
+    semantics: inserting an existing edge replaces its weight; deleting
+    a missing edge is a no-op; self-loops are dropped, exactly as
+    ``build_csr`` drops them) and snapshots the current
+    ``base ∪ delta`` state as an immutable :class:`DeltaGraph`.
+
+    Storage, per the PSAM: O(base slots / 32 + inserted edges) words of
+    DRAM — a tombstone bit per base slot plus a patch dict — and ZERO
+    large-memory writes; the base arrays are never touched.  Folding the
+    log back into NVRAM is :func:`repro.delta.compact`, the one batched
+    ω-cost write.
+
+    Edit-to-rebuild equivalence (the differential contract): after any
+    edit script, ``overlay.snapshot()`` serves every order-insensitive
+    query bit-identically to ``build_csr`` over the final edge set.  The
+    one subtlety is re-inserting a tombstoned base edge with a *new*
+    weight: the base slot's weight is immutable, so the slot stays
+    tombstoned and the edge moves to the patch side (same live edge set,
+    same weights, different physical slot — invisible to any monoid).
+    """
+
+    def __init__(self, base: CSRGraph | CompressedCSR):
+        if not isinstance(base, (CSRGraph, CompressedCSR)):
+            raise TypeError(
+                f"DeltaOverlay base must be CSRGraph | CompressedCSR, "
+                f"got {type(base).__name__}"
+            )
+        self.base = base
+        self.n = int(base.n)
+        self.block_size = int(base.block_size)
+        self.weighted = bool(base.weighted)
+        # host copies of the base's slot layout (decoded once; O(m) DRAM
+        # in the PSAM's small-memory budget, like every per-edge bit)
+        self._base_src = np.asarray(base.edge_src)
+        self._base_dst = np.asarray(base.edge_dst)
+        self._base_w = np.asarray(base.edge_w)
+        valid = np.asarray(base.edge_valid)
+        self._base_valid = valid
+        self._live = valid.copy()
+        slots = np.flatnonzero(valid)
+        self._slot = {
+            (int(self._base_src[i]), int(self._base_dst[i])): int(i) for i in slots
+        }
+        self._patch: dict[tuple[int, int], float] = {}
+        self.edits_applied = 0
+
+    # -- sizes ----------------------------------------------------------
+    @property
+    def num_patch_edges(self) -> int:
+        """Inserted edges currently living on the DRAM patch side."""
+        return len(self._patch)
+
+    @property
+    def num_tombstones(self) -> int:
+        """Base slots masked dead (deleted, or re-weighted to the patch)."""
+        return int((self._base_valid & ~self._live).sum())
+
+    @property
+    def num_live_edges(self) -> int:
+        """Edges the current snapshot serves: live base + patch."""
+        return int(self._live.sum()) + len(self._patch)
+
+    # -- edits ----------------------------------------------------------
+    def _check(self, u: int, v: int) -> None:
+        if not (0 <= u < self.n and 0 <= v < self.n):
+            raise ValueError(f"edge ({u}, {v}) out of range for n={self.n}")
+
+    def insert(self, u: int, v: int, w: float = 1.0) -> bool:
+        """Upsert directed edge ``(u, v)``; True if the edge set changed.
+
+        Self-loops are dropped (``build_csr`` parity).  Unweighted bases
+        ignore ``w`` (every edge weighs 1.0 on rebuild).  A tombstoned
+        base edge re-inserted with its original weight just clears its
+        tombstone bit — zero DRAM growth; with a different weight the
+        edge moves to the patch side instead (see the class docstring).
+        """
+        u, v = int(u), int(v)
+        self._check(u, v)
+        self.edits_applied += 1
+        if u == v:
+            return False
+        w = 1.0 if not self.weighted else float(w)
+        key = (u, v)
+        slot = self._slot.get(key)
+        if slot is not None and float(self._base_w[slot]) == w:
+            changed = not bool(self._live[slot]) or key in self._patch
+            self._live[slot] = True
+            self._patch.pop(key, None)
+            return changed
+        if slot is not None:
+            # weight differs from the immutable base slot: tombstone it
+            # and carry the edge (with its new weight) on the patch side
+            self._live[slot] = False
+        changed = self._patch.get(key) != w
+        self._patch[key] = w
+        return changed
+
+    def delete(self, u: int, v: int) -> bool:
+        """Delete directed edge ``(u, v)``; True if it existed."""
+        u, v = int(u), int(v)
+        self._check(u, v)
+        self.edits_applied += 1
+        key = (u, v)
+        existed = self._patch.pop(key, None) is not None
+        slot = self._slot.get(key)
+        if slot is not None and self._live[slot]:
+            self._live[slot] = False
+            existed = True
+        return existed
+
+    def apply(self, edits) -> int:
+        """Apply an edit script: iterable of ``("insert", u, v[, w])`` /
+        ``("delete", u, v)`` tuples.  Returns how many edits changed the
+        edge set."""
+        changed = 0
+        for e in edits:
+            kind = e[0]
+            if kind == "insert":
+                changed += bool(self.insert(*e[1:]))
+            elif kind == "delete":
+                changed += bool(self.delete(e[1], e[2]))
+            else:
+                raise ValueError(f"unknown edit kind {kind!r}")
+        return changed
+
+    # -- live edge set (host) ------------------------------------------
+    def live_edges(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The current directed edge set as host ``(src, dst, w)`` arrays
+        — live base slots plus patch edges, the exact input a
+        from-scratch ``build_csr`` (and :func:`repro.delta.compact`)
+        consumes."""
+        idx = np.flatnonzero(self._live)
+        src = self._base_src[idx]
+        dst = self._base_dst[idx]
+        w = self._base_w[idx]
+        if self._patch:
+            items = sorted(self._patch.items())
+            psrc = np.asarray([k[0] for k, _ in items], np.int64)
+            pdst = np.asarray([k[1] for k, _ in items], np.int64)
+            pw = np.asarray([wt for _, wt in items], np.float32)
+            src = np.concatenate([src.astype(np.int64), psrc])
+            dst = np.concatenate([dst.astype(np.int64), pdst])
+            w = np.concatenate([w.astype(np.float32), pw])
+        return src, dst, w
+
+    # -- snapshot -------------------------------------------------------
+    def snapshot(self) -> DeltaGraph:
+        """Freeze the current ``base ∪ delta`` state as a DeltaGraph.
+
+        Patch edges pack per source vertex (sorted by ``(src, dst)``,
+        front-packed into ``F_B``-wide blocks, sentinel padding) and the
+        block count rounds up to a power of two — a growing patch only
+        retraces compiled executables at doubling boundaries, not per
+        edit batch.
+        """
+        n, FB = self.n, self.block_size
+        NB = self.base.num_blocks
+        live_words = _pack_live_words(self._live, NB, FB)
+        items = sorted(self._patch.items())
+        pdeg = np.zeros(n, np.int64)
+        for (u, _), _w in items:
+            pdeg[u] += 1
+        nblk = -(-pdeg // FB)
+        PB = max(int(nblk.sum()), 1)
+        PB_cap = _next_pow2(PB)
+        patch_src = np.full(PB_cap, n, np.int32)
+        patch_dst = np.full((PB_cap, FB), n, np.int32)
+        patch_w = np.zeros((PB_cap, FB), np.float32)
+        blk = 0
+        i = 0
+        while i < len(items):
+            u = items[i][0][0]
+            j = i
+            while j < len(items) and items[j][0][0] == u:
+                j += 1
+            for lo in range(i, j, FB):
+                run = items[lo : min(lo + FB, j)]
+                patch_src[blk] = u
+                for s, ((_, v), wt) in enumerate(run):
+                    patch_dst[blk, s] = v
+                    patch_w[blk, s] = wt
+                blk += 1
+            i = j
+        live_deg = np.bincount(
+            self._base_src[self._live], minlength=n + 1
+        )[:n].astype(np.int64)
+        degrees = live_deg + pdeg
+        m = int(self._live.sum()) + len(items)
+        return DeltaGraph(
+            base=self.base,
+            patch_src=jnp.asarray(patch_src),
+            patch_dst=jnp.asarray(patch_dst),
+            patch_w=jnp.asarray(patch_w),
+            live_words=jnp.asarray(live_words),
+            degrees=jnp.asarray(degrees, jnp.int32),
+            n=n,
+            m=m,
+            num_blocks=NB + PB_cap,
+            num_base_blocks=NB,
+            block_size=FB,
+            weighted=self.weighted,
+        )

@@ -26,6 +26,12 @@ What reports where:
 * ``repro.core.plan`` — host-side round-loop timings and rounds-per-call.
 * ``PSAMCost`` — every ``charge_*`` mirrored into
   ``sage_psam_*_words_total{charge=...}`` counters.
+* ``repro.delta`` + the mutable serving path — applied edits by kind
+  (``sage_delta_edits_total``), live overlay size gauges
+  (``sage_delta_patch_edges`` / ``sage_delta_tombstones`` /
+  ``sage_delta_overlay_small_words``), and compaction telemetry
+  (``sage_delta_compactions_total``,
+  ``sage_delta_last_compact_write_words``).
 
 See ``docs/observability.md`` for the metric catalogue and a scrape
 example.

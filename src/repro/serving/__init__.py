@@ -17,8 +17,15 @@ system, in two layers:
   repacks drained lanes out between round quanta (early-exit
   accounting), and gates admission on per-tenant PSAM edge-read budgets
   (:class:`ServiceConfig` ``budgets`` → ``repro.core.TenantLedgers``).
+  Constructed over a :class:`repro.delta.DeltaOverlay` it also serves
+  graph EDITS: ``submit_edit`` admits inserts/deletes at the amortized
+  compaction price, edits apply between flushes so every drained batch
+  sees one consistent base ∪ delta snapshot, and the
+  :class:`repro.tuning.OverlayTrigger` schedules ``repro.delta.compact``
+  once the overlay surcharge has paid for the ω write.
 
-See ``docs/serving.md`` for the full tier walkthrough.
+See ``docs/serving.md`` for the full tier walkthrough and
+``docs/mutability.md`` for the edit path.
 """
 from .engine import QueryEngine, QueryHandle
 from .service import ServiceConfig, ServingService, ServingTicket

@@ -229,6 +229,8 @@ class QueryEngine:
             "sage_engine_occupancy", "served / lanes over the engine lifetime"
         )
         self._pending: dict[tuple, list[tuple[int, dict]]] = {}
+        self._in_flush = False
+        self._reset_deferred = False
         self._compiled: dict[tuple, Callable] = {}
         self.trace_counts: dict[tuple, int] = {}
         self.stats = {
@@ -269,7 +271,14 @@ class QueryEngine:
         return h
 
     def flush(self) -> dict[QueryHandle, Any]:
-        """Drain every bucket; returns {handle: result} for all pending."""
+        """Drain every bucket; returns {handle: result} for all pending.
+
+        Re-entrant-safe with ``reset_stats``: a reset requested while
+        buckets are draining (e.g. from a trace-replay callback) is
+        deferred to the end of this flush, so the in-flight buckets'
+        lane/served counters land exactly once — in the pre-reset window
+        — instead of straddling the reset and double-counting.
+        """
         out: dict[QueryHandle, Any] = {}
         pending, self._pending = self._pending, {}
         ctx = (
@@ -277,11 +286,18 @@ class QueryEngine:
             if self.plan is not None and self.plan.is_sharded
             else contextlib.nullcontext()
         )
-        with ctx:
-            for (op, scalars), reqs in pending.items():
-                for lo in range(0, len(reqs), self.max_batch):
-                    chunk = reqs[lo : lo + self.max_batch]
-                    out.update(self._run_bucket(op, scalars, chunk))
+        self._in_flush = True
+        try:
+            with ctx:
+                for (op, scalars), reqs in pending.items():
+                    for lo in range(0, len(reqs), self.max_batch):
+                        chunk = reqs[lo : lo + self.max_batch]
+                        out.update(self._run_bucket(op, scalars, chunk))
+        finally:
+            self._in_flush = False
+            if self._reset_deferred:
+                self._reset_deferred = False
+                self._apply_reset()
         return out
 
     def serve(self, requests: list[tuple[str, dict]]) -> list[Any]:
@@ -315,10 +331,30 @@ class QueryEngine:
         compiled-executable cache).  ``cost`` and ``trace_counts`` are
         deliberately NOT reset: the PSAM account is a lifetime model and
         the trace counts are the retrace-proof audit trail.
+
+        Safe mid-trace: a reset issued while ``flush`` is draining buckets
+        (e.g. from a replay callback observing results) is deferred until
+        the flush completes, so the in-flight buckets' ``served``/``lanes``
+        counters are either fully inside the old window or fully cleared —
+        never split across the reset and double-counted against the
+        ``sage_engine_*`` mirror.
         """
+        if self._in_flush:
+            self._reset_deferred = True
+            return
+        self._apply_reset()
+
+    def _apply_reset(self) -> None:
+        """The actual reset: zero stats + ``sage_engine_`` families, then
+        re-count still-pending (un-flushed) submissions into the fresh
+        window so ``submitted`` keeps its invariant
+        ``submitted == served + pending`` across a reset."""
         for k in self.stats:
             self.stats[k] = 0
         self.registry.reset(prefix="sage_engine_")
+        for (op, _), reqs in self._pending.items():
+            self.stats["submitted"] += len(reqs)
+            self._m_submitted.inc(len(reqs), op=op)
 
     # ------------------------------------------------------------------
     def _run_bucket(self, op, scalars, chunk) -> dict[QueryHandle, Any]:
@@ -421,6 +457,15 @@ class QueryEngine:
         """
         shards = self.plan.num_shards if self._mesh_key is not None else 1
         sweeps = max(sweeps, 1)
+        if hasattr(self.graph, "overlay_small_words"):
+            # delta overlay: base blocks at their NVRAM footprint, patch
+            # blocks + tombstone words as DRAM small-ops — never the
+            # streamed discount (the overlay takes the generic sparse path)
+            for _ in range(sweeps):
+                self.cost.charge_edgemap_overlay(
+                    self.graph, batch=B, num_shards=shards
+                )
+            return
         if self._streamed_accounting(op, scalars):
             live = -(-self.graph.num_blocks * min(B, sweeps) // sweeps)
             for _ in range(sweeps):

@@ -38,6 +38,17 @@ edge-read words — against per-tenant token buckets
 (:class:`repro.core.TenantLedger`): an estimate is reserved at submit and
 settled against the drain's actual per-lane attribution, so tenants pay
 for what their queries actually read, not for what the scheduler guessed.
+
+**Mutability** (``repro.delta``): construct the service over a
+:class:`~repro.delta.DeltaOverlay` and it also serves edits.
+``submit_edit`` admits or rejects (never defers — deferral would reorder
+the edit log) one insert/delete, priced at the amortized compaction
+estimate; admitted edits apply at the next tick/drain boundary — queries
+in flight within a flush see one consistent snapshot — and after each
+flush the :class:`~repro.tuning.OverlayTrigger` decides whether the
+accumulated overlay surcharge justifies folding the overlay into a fresh
+compressed base (``repro.delta.compact`` — the subsystem's only NVRAM
+write, persisted atomically when ``config.ckpt_dir`` is set).
 """
 from __future__ import annotations
 
@@ -55,8 +66,11 @@ from ..algorithms.traversal import (
 )
 from ..compat import use_mesh
 from ..core.psam import TenantLedgers, edgemap_round_read_words
+from ..delta import DeltaOverlay, compact
+from ..delta import compact_write_words as _compact_write_words
 from ..obs import DEFAULT_LATENCY_BUCKETS, get_registry
-from ..tuning.defaults import DEFAULT_EST_ROUNDS
+from ..tuning.defaults import DEFAULT_EDITS_PER_COMPACT, DEFAULT_EST_ROUNDS
+from ..tuning.overlay import constants_overlay_trigger
 from .engine import QueryEngine, _pow2_batch
 
 TRAVERSAL_OPS = ("bfs", "wbfs")
@@ -88,6 +102,13 @@ class ServiceConfig:
     ``ewma_alpha`` on the newest drain) settled from the early-exit
     accounting actuals — so admission reflects what this workload's
     queries really read, per op and backend, not one flat guess.
+
+    The mutability knobs only matter for a DeltaOverlay-backed service:
+    ``compact_trigger`` is the :class:`repro.tuning.OverlayTrigger`
+    deciding when to fold the overlay into a fresh compressed base
+    (default: the constants trigger); ``ckpt_dir`` (when set) persists
+    each compacted base atomically via ``repro.delta.save_compacted``,
+    keeping the newest ``compact_keep`` step directories.
     """
 
     slo: float = 0.05
@@ -99,6 +120,9 @@ class ServiceConfig:
     mode: str = "auto"
     est_rounds: int = DEFAULT_EST_ROUNDS
     ewma_alpha: float = 0.25
+    compact_trigger: Any = None
+    ckpt_dir: str | None = None
+    compact_keep: int = 3
 
     def __post_init__(self):
         if self.admission not in ("reject", "defer"):
@@ -136,7 +160,11 @@ class ServingService:
 
     Parameters
     ----------
-    g      : CSRGraph | CompressedCSR — the read-only large memory
+    g      : CSRGraph | CompressedCSR — the read-only large memory — or a
+             :class:`~repro.delta.DeltaOverlay` for a mutable service:
+             queries run over ``overlay.snapshot()`` (base ∪ delta,
+             bit-identical to a rebuild) and ``submit_edit`` /
+             ``force_compact`` become available
     plan   : ExecutionPlan | None — execution target, as for the engine
     config : ServiceConfig | None — SLO, triggers, budgets (default config
              if omitted)
@@ -170,6 +198,9 @@ class ServingService:
     ):
         self.config = config or ServiceConfig()
         self.registry = registry if registry is not None else get_registry()
+        self.overlay = g if isinstance(g, DeltaOverlay) else None
+        if self.overlay is not None:
+            g = self.overlay.snapshot()
         self.engine = QueryEngine(
             g, plan=plan, max_batch=self.config.max_batch, registry=self.registry
         )
@@ -190,6 +221,19 @@ class ServingService:
         self._cohort_compiled: dict[tuple, Callable] = {}
         self.trace_counts: dict[tuple, int] = {}
         self._next_id = 0
+        # mutability state (inert unless overlay-backed): pending admitted
+        # edits, their (tenant, reserved-estimate) ledger entries (settled
+        # pro-rata at compaction), the next checkpoint step, the PSAM
+        # read-words mark the trigger measures sweeps against, and the
+        # observed edits-per-compaction EWMA that amortizes edit pricing
+        self.compact_trigger = self.config.compact_trigger or (
+            constants_overlay_trigger() if self.overlay is not None else None
+        )
+        self._edits: list[tuple] = []
+        self._edit_ledger: list[tuple[str, float]] = []
+        self._compact_step = 0
+        self._reads_at_compact = self.engine.cost.large_reads
+        self._edits_per_compact = float(DEFAULT_EDITS_PER_COMPACT)
         self.stats = {
             "submitted": 0,
             "admitted": 0,
@@ -205,6 +249,10 @@ class ServingService:
             "repacks": 0,
             "lane_rounds_total": 0,
             "active_lane_rounds": 0,
+            "edits_submitted": 0,
+            "edits_applied": 0,
+            "edits_rejected": 0,
+            "compactions": 0,
         }
         reg = self.registry
         self._m_submitted = reg.counter(
@@ -242,6 +290,20 @@ class ServingService:
         self._m_drift = reg.gauge(
             "sage_psam_drift_words_per_second",
             "modeled edge-read words charged per wall second of the last flush",
+        )
+        self._m_edits = reg.counter(
+            "sage_delta_edits_total", "edits applied to the overlay",
+            labels=("kind",),
+        )
+        self._m_patch_edges = reg.gauge(
+            "sage_delta_patch_edges", "live inserted edges in the DRAM overlay"
+        )
+        self._m_tombstones = reg.gauge(
+            "sage_delta_tombstones", "base edges masked dead by the overlay"
+        )
+        self._m_overlay_words = reg.gauge(
+            "sage_delta_overlay_small_words",
+            "per-sweep DRAM small-op surcharge of the current overlay",
         )
 
     # ------------------------------------------------------------------
@@ -321,17 +383,72 @@ class ServingService:
         self._m_deferred_depth.set(float(len(self._deferred)))
         return t
 
+    def submit_edit(
+        self, kind: str, u: int, v: int, w: float = 1.0,
+        *, tenant: str = "default", now: float = 0.0,
+    ) -> bool:
+        """Submit one graph edit (``kind`` ∈ {"insert", "delete"}) at
+        virtual time ``now``; returns True iff admitted.
+
+        Edits are admit-or-reject only — NEVER deferred, regardless of
+        ``config.admission``: a deferred edit would re-enter the log
+        after later edits and reorder the upsert semantics the
+        differential harness locks.  The admission price is the
+        amortized compaction estimate — ``ω × compact_write_words``
+        split over the observed edits-per-compaction (EWMA; the
+        ``DEFAULT_EDITS_PER_COMPACT`` horizon while cold) — reserved
+        against the tenant's ledger and settled pro-rata against the
+        actual ω write when the overlay compacts.  Admitted edits are
+        buffered and applied at the next tick/drain boundary, so every
+        query in a flush sees one consistent snapshot.
+        """
+        if self.overlay is None:
+            raise TypeError(
+                "submit_edit requires a DeltaOverlay-backed service "
+                "(construct with ServingService(DeltaOverlay(base), ...))"
+            )
+        if kind not in ("insert", "delete"):
+            raise ValueError(f"kind must be 'insert'|'delete', got {kind!r}")
+        self.stats["edits_submitted"] += 1
+        est = self._estimate_edit_words()
+        self.ledgers.refill(now)
+        led = self.ledgers.ledger(tenant)
+        if not led.can_admit(est):
+            self.stats["edits_rejected"] += 1
+            self._m_admission.inc(outcome="edit_rejected", tenant=tenant)
+            return False
+        led.reserve(est)
+        self._edit_ledger.append((tenant, est))
+        self._edits.append(
+            ("insert", int(u), int(v), float(w)) if kind == "insert"
+            else ("delete", int(u), int(v))
+        )
+        self._m_admission.inc(outcome="edit_admitted", tenant=tenant)
+        return True
+
+    def force_compact(self, now: float = 0.0):
+        """Apply pending edits, then compact the overlay unconditionally
+        (ignoring the trigger); returns the new ``CompressedCSR`` base,
+        or None when there is no overlay to fold.  The persistence /
+        ledger-settlement path is identical to a triggered compaction."""
+        if self.overlay is None:
+            return None
+        self._apply_edits()
+        return self._compact(now)
+
     def tick(self, now: float) -> list[ServingTicket]:
         """One drain-loop iteration at virtual time ``now``.
 
-        Refills tenant buckets, re-admits deferred work that now fits,
-        and flushes the WHOLE queue when either trigger fires — queue
-        depth ≥ ``depth_trigger``, or the earliest deadline is due (so a
-        deadline flush pulls later arrivals into the same shared sweeps).
-        Returns the tickets completed by this tick (empty on a no-op
-        tick: an empty queue costs nothing).
+        Applies buffered edits (the graph steps forward BETWEEN flushes,
+        never inside one), refills tenant buckets, re-admits deferred
+        work that now fits, and flushes the WHOLE queue when either
+        trigger fires — queue depth ≥ ``depth_trigger``, or the earliest
+        deadline is due (so a deadline flush pulls later arrivals into
+        the same shared sweeps).  Returns the tickets completed by this
+        tick (empty on a no-op tick: an empty queue costs nothing).
         """
         self.stats["ticks"] += 1
+        self._apply_edits()
         self.ledgers.refill(now)
         self._readmit(now)
         if not self._queue:
@@ -348,6 +465,7 @@ class ServingService:
 
     def drain(self, now: float) -> list[ServingTicket]:
         """Force-flush everything queued, ignoring both triggers."""
+        self._apply_edits()
         self.ledgers.refill(now)
         self._readmit(now)
         if not self._queue:
@@ -402,6 +520,110 @@ class ServingService:
         self._m_queue_depth.set(float(len(self._queue)))
         self._m_deferred_depth.set(float(len(self._deferred)))
 
+    def _estimate_edit_words(self) -> float:
+        """Admission-time price of one edit: the next compaction's ω
+        write amortized over the observed edits-per-compaction count
+        (EWMA; the static horizon while no compaction has run)."""
+        return (
+            self.cost.omega
+            * float(self.engine.graph.compact_write_words)
+            / max(self._edits_per_compact, 1.0)
+        )
+
+    def _apply_edits(self) -> None:
+        """Fold buffered edits into the overlay and step the served graph
+        to the new snapshot.  Runs only at tick/drain boundaries, so a
+        flush's queries all see the same base ∪ delta; snapshot patch
+        capacity grows in powers of two, so stepping retraces compiled
+        executables only at doubling boundaries."""
+        if self.overlay is None or not self._edits:
+            return
+        edits, self._edits = self._edits, []
+        self.overlay.apply(edits)
+        self.stats["edits_applied"] += len(edits)
+        for e in edits:
+            self._m_edits.inc(kind=e[0])
+        self._set_graph(self.overlay.snapshot())
+
+    def _set_graph(self, dg) -> None:
+        """Point the wrapped engine (and the per-round word model) at a
+        new snapshot.  The engine's compiled-executable and cohort caches
+        key on the backend NAME ("DeltaGraph"), which is stable across
+        snapshots — same-shape steps reuse warm executables."""
+        eng = self.engine
+        eng.graph = dg
+        eng.prepared = dg if self.plan is None else self.plan.prepare(dg)
+        if self.plan is not None:
+            self._round_words = self.plan.edge_read_words_per_round(eng.prepared)
+        else:
+            self._round_words = edgemap_round_read_words(dg)
+        if self.overlay is not None:
+            self._m_patch_edges.set(float(self.overlay.num_patch_edges))
+            self._m_tombstones.set(float(self.overlay.num_tombstones))
+            self._m_overlay_words.set(float(dg.overlay_small_words))
+
+    def _charge_round(self, B: int, shards: int) -> None:
+        """One cohort round's PSAM charge, overlay-aware: a DeltaGraph
+        prices base blocks at their NVRAM footprint plus the overlay's
+        DRAM small-op surcharge; plain backends keep the batched dense
+        charge."""
+        g = self.engine.graph
+        if hasattr(g, "overlay_small_words"):
+            self.engine.cost.charge_edgemap_overlay(g, batch=B, num_shards=shards)
+        else:
+            self.engine.cost.charge_edgemap_batched(g, B, num_shards=shards)
+
+    def _maybe_compact(self, now: float) -> None:
+        """Post-flush compaction check: hand the trigger the sweeps of
+        edge reads issued since the last compaction (derived from the
+        PSAM account — no extra bookkeeping) and fold the overlay when
+        the surcharge has paid for the ω write.  A clean overlay (no
+        patches, no tombstones) never compacts."""
+        if self.overlay is None or self.compact_trigger is None:
+            return
+        if self.overlay.num_patch_edges == 0 and self.overlay.num_tombstones == 0:
+            return
+        sweeps = (self.cost.large_reads - self._reads_at_compact) / max(
+            self._round_words, 1.0
+        )
+        if self.compact_trigger.should_compact(
+            self.engine.graph, sweeps_since_compact=sweeps, omega=self.cost.omega
+        ):
+            self._compact(now)
+
+    def _compact(self, now: float):
+        """Fold the overlay into a fresh CompressedCSR base — the ONLY
+        NVRAM write in the mutable path.  Charges ``ω × write_words`` to
+        the PSAM account, persists the step atomically when configured,
+        settles the edit ledger pro-rata against the actual write, folds
+        the realized edits-per-compaction into the admission EWMA, and
+        rebases the overlay (empty) on the new graph."""
+        del now
+        c = compact(
+            self.overlay,
+            cost=self.cost,
+            ckpt_dir=self.config.ckpt_dir,
+            step=self._compact_step,
+            keep=self.config.compact_keep,
+            registry=self.registry,
+        )
+        self._compact_step += 1
+        self.stats["compactions"] += 1
+        ledger, self._edit_ledger = self._edit_ledger, []
+        if ledger:
+            actual = self.cost.omega * float(_compact_write_words(c))
+            share = actual / len(ledger)
+            for tenant, est in ledger:
+                self.ledgers.ledger(tenant).settle(est, share)
+            a = self.config.ewma_alpha
+            self._edits_per_compact = (
+                (1 - a) * self._edits_per_compact + a * float(len(ledger))
+            )
+        self.overlay = DeltaOverlay(c)
+        self._set_graph(self.overlay.snapshot())
+        self._reads_at_compact = self.cost.large_reads
+        return c
+
     def _flush(self, now: float) -> list[ServingTicket]:
         """Drain the full queue: traversal tickets fuse into ≤max_batch
         cohorts (FIFO), the rest delegate to the engine — one flush, one
@@ -444,6 +666,7 @@ class ServingService:
             self.ledgers.ledger(t.tenant).settle(t.est_words, t.words)
             self._observe_rounds(t)
         self.stats["served"] += len(done)
+        self._maybe_compact(now)
         return done
 
     # ------------------------------------------------------------------
@@ -484,9 +707,7 @@ class ServingService:
             # is exactly the lanes with lane_rounds > r).
             for r in range(rounds_exec):
                 act = np.flatnonzero(lane_rounds > r)
-                self.engine.cost.charge_edgemap_batched(
-                    self.engine.graph, B, num_shards=shards
-                )
+                self._charge_round(B, shards)
                 share = self._round_words / len(act)
                 for i in act:
                     lane_tickets[i].words += share

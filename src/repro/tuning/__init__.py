@@ -21,6 +21,12 @@ replaces assumption with measurement:
   dense_frac_from_crossover— Beamer threshold equivalent of a crossover
   flavor_crossover_from_sweep — density where the batched streamed union
                              stops beating vmapped plain sparse
+  OverlayTrigger           — delta-overlay compaction policy (compact once
+                             the accumulated sweep surcharge covers the
+                             ω write); constants_overlay_trigger is the
+                             static-defaults instance,
+                             measured_overlay_trigger calibrates the
+                             overlay cost scale from timed sweeps
   SCHEMA_VERSION           — current table schema (stale tables rejected)
 
 plus the static defaults (``DEFAULT_DENSE_FRAC``, ``DEFAULT_CHUNK_BLOCKS``,
@@ -45,6 +51,11 @@ from .defaults import (
     DEFAULT_TILE_BLOCKS,
 )
 from .measure import calibrate, host_fingerprint
+from .overlay import (
+    OverlayTrigger,
+    constants_overlay_trigger,
+    measured_overlay_trigger,
+)
 from .table import (
     SCHEMA_VERSION,
     TuningDecision,
@@ -67,10 +78,12 @@ __all__ = [
     "DEFAULT_EST_ROUNDS",
     "DEFAULT_LOWERING",
     "DEFAULT_HARDWARE",
+    "OverlayTrigger",
     "TuningTable",
     "TuningDecision",
     "calibrate",
     "constants_decision",
+    "constants_overlay_trigger",
     "crossover_from_sweep",
     "default_table",
     "dense_frac_from_crossover",
@@ -78,4 +91,5 @@ __all__ = [
     "hardware_model",
     "host_fingerprint",
     "load_table",
+    "measured_overlay_trigger",
 ]

@@ -21,6 +21,16 @@ never needs to know whether the value was hand-picked or calibrated:
 * ``DEFAULT_EST_ROUNDS``   — the cold-start admission estimate (rounds per
   request) the serving ledger prices reservations with until per-op
   observed round counts warm up.
+* ``DEFAULT_COMPACT_HYSTERESIS`` / ``DEFAULT_OVERLAY_COST_SCALE`` — the
+  constants behind :class:`repro.tuning.OverlayTrigger`: compact a delta
+  overlay once its accumulated per-sweep small-op surcharge (scaled by
+  the cost-scale calibration) exceeds ``hysteresis × ω × write_words`` —
+  i.e. once queries have already paid more in overlay overhead than one
+  compaction would cost.  ``measured_overlay_trigger`` replaces the cost
+  scale with a timed dense-sweep ratio.
+* ``DEFAULT_EDITS_PER_COMPACT`` — the cold-start admission amortization
+  horizon for edits: one edit is priced at ``ω × write_words / horizon``
+  until the service has observed real edits-per-compaction counts.
 * ``DEFAULT_LOWERING``     — how the Pallas kernels lower: ``"auto"``
   resolves per backend at plan time (native Mosaic on TPU, XLA interpret
   mode elsewhere); ``"native"`` / ``"interpret"`` force one side.  A
@@ -41,6 +51,9 @@ DEFAULT_TILE_BLOCKS = 8
 DEFAULT_MAX_BATCH = 8
 DEFAULT_EST_ROUNDS = 8
 DEFAULT_LOWERING = "auto"
+DEFAULT_COMPACT_HYSTERESIS = 1.0
+DEFAULT_OVERLAY_COST_SCALE = 1.0
+DEFAULT_EDITS_PER_COMPACT = 1024
 
 # TPU v5e-class per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
 # (one effective link per collective hop — conservative).

@@ -1,0 +1,138 @@
+"""Compaction policy for delta overlays — when does the ω write pay off?
+
+A :class:`repro.delta.DeltaGraph` taxes every edge sweep with a DRAM
+small-op surcharge (patch blocks + tombstone words,
+``overlay_small_words``); folding it away costs one batched NVRAM write
+(``ω × compact_write_words``).  The break-even rule is the classic
+log-structured one — compact once the accumulated surcharge has already
+paid for the write:
+
+    cost_scale × overlay_small_words × sweeps  ≥  hysteresis × ω × W
+
+:class:`OverlayTrigger` is that inequality as a frozen policy object.
+``constants_overlay_trigger`` builds it from the static defaults
+(``cost_scale = 1``: one overlay small-op word priced at one NVRAM read
+word — the PSAM's unit-cost assumption).  ``measured_overlay_trigger``
+replaces the cost scale with a timed ratio on THIS host: how much slower
+a dense sweep over the overlay actually is than over its base, per
+overlay word — so a host where DRAM patch gathers are nearly free
+compacts lazily, and one where they dominate compacts eagerly.  Same
+measured-beats-assumed discipline as the rest of ``repro.tuning``; the
+consumer (``repro.serving.ServingService``) only ever calls
+``should_compact``.
+
+Import discipline: module load touches nothing heavy; the measured path
+lazily imports ``repro.delta`` / ``repro.core`` inside the function.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .defaults import (
+    DEFAULT_COMPACT_HYSTERESIS,
+    DEFAULT_OVERLAY_COST_SCALE,
+)
+
+__all__ = [
+    "OverlayTrigger",
+    "constants_overlay_trigger",
+    "measured_overlay_trigger",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlayTrigger:
+    """Break-even compaction policy for one delta overlay.
+
+    ``overlay_cost_scale`` prices one overlay small-op word in NVRAM
+    read-word equivalents (1.0 = the analytic PSAM assumption; measured
+    triggers replace it).  ``hysteresis`` > 1 delays compaction past
+    break-even to batch more edits per ω write; < 1 compacts eagerly.
+    ``source`` records where the scale came from (``"constants"`` or
+    ``"measured"``) for observability.
+    """
+
+    overlay_cost_scale: float = DEFAULT_OVERLAY_COST_SCALE
+    hysteresis: float = DEFAULT_COMPACT_HYSTERESIS
+    source: str = "constants"
+
+    def should_compact(
+        self, dg, *, sweeps_since_compact: float, omega: float = 4.0
+    ) -> bool:
+        """True once the overlay surcharge paid since the last compaction
+        covers the next compaction's ω-weighted write.
+
+        ``dg`` is the live :class:`~repro.delta.DeltaGraph` snapshot;
+        ``sweeps_since_compact`` is how many dense-sweep-equivalents of
+        edge reads the serving tier has issued against it (the service
+        derives this from its PSAM account, so the trigger needs no clock
+        and no extra bookkeeping).  An overlay with nothing folded in
+        (``overlay_small_words`` only tombstone-mask rent, zero patches
+        and tombstones) never triggers — compacting it would be a pure
+        write with no surcharge to recover.
+        """
+        paid = (
+            self.overlay_cost_scale
+            * float(dg.overlay_small_words)
+            * max(float(sweeps_since_compact), 1.0)
+        )
+        return paid >= self.hysteresis * omega * float(dg.compact_write_words)
+
+
+def constants_overlay_trigger() -> OverlayTrigger:
+    """The static-defaults policy — cold-start path, no measurement."""
+    return OverlayTrigger()
+
+
+def measured_overlay_trigger(
+    base, *, edits: int = 256, seed: int = 0, reps: int = 3
+) -> OverlayTrigger:
+    """Calibrate the overlay cost scale by timing real sweeps on ``base``.
+
+    Applies ``edits`` random inserts+deletes to a throwaway overlay over
+    ``base``, times one jitted dense edgeMap sweep over the base and over
+    the overlay snapshot (min-of-``reps``, post-warmup — the
+    ``repro.tuning.measure`` discipline), and converts the slowdown into
+    a per-overlay-word cost scale:
+
+        scale = ((t_overlay − t_base) / t_base) × base_words / overlay_words
+
+    i.e. "the overlay's surcharge words cost this many base-read-word
+    equivalents each".  Clamped to [0.05, 20] so one noisy timing cannot
+    produce a never-compact or always-compact policy.
+    """
+    import jax
+    import numpy as np
+
+    from ..core.edgemap import edgemap_dense
+    from ..core.psam import edgemap_round_read_words
+    from ..delta import DeltaOverlay
+    from .measure import _time_us
+
+    rng = np.random.default_rng(seed)
+    ov = DeltaOverlay(base)
+    n = base.n
+    dst_np = np.asarray(base.edge_dst)
+    src_np = np.asarray(base.edge_src)
+    valid = np.asarray(base.edge_valid)
+    live = np.flatnonzero(valid)
+    for _ in range(edits):
+        u = int(rng.integers(0, n))
+        v = int(rng.integers(0, n))
+        if u != v:
+            ov.insert(u, v)
+        if live.size:
+            j = int(live[rng.integers(0, live.size)])
+            ov.delete(int(src_np[j]), int(dst_np[j]))
+    dg = ov.snapshot()
+
+    frontier = np.ones(n, dtype=bool)
+    x = np.arange(n, dtype=np.float32)
+    fn = jax.jit(lambda g, f, xv: edgemap_dense(g, f, xv, monoid="min"))
+    t_base = _time_us(fn, base, frontier, x, reps=reps)
+    t_over = _time_us(fn, dg, frontier, x, reps=reps)
+    base_words = float(edgemap_round_read_words(base))
+    over_words = float(max(dg.overlay_small_words, 1))
+    raw = max(t_over - t_base, 0.0) / max(t_base, 1e-9) * base_words / over_words
+    scale = float(min(max(raw, 0.05), 20.0))
+    return OverlayTrigger(overlay_cost_scale=scale, source="measured")

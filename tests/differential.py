@@ -1,0 +1,131 @@
+"""Differential edit-script harness for ``repro.delta``.
+
+The contract it checks: after ANY edit script, a :class:`DeltaGraph`
+snapshot must answer queries **bit-identically** to a graph rebuilt from
+scratch out of the surviving edge set.  This module owns the pieces every
+delta test composes:
+
+* ``base_edge_dict`` / ``reference_edges`` — the reference semantics: an
+  edit log applied to a plain ``{(u, v): w}`` dict (insert upserts,
+  delete pops, self-loops dropped, unweighted graphs pin ``w = 1``) —
+  deliberately implemented WITHOUT the overlay, so the two sides of the
+  differential share no code.
+* ``random_script`` — adversarial scripts: fresh inserts, duplicate
+  upserts, self-loops, deletes of base/patch/nonexistent edges, and
+  re-inserts of previously deleted edges.
+* ``rebuild`` — the from-scratch side (``build_csr`` [+ ``compress``]).
+* ``query_results`` — the probe set: BFS parents+levels (int32 min
+  monoid — order-insensitive), wBFS distances on integer-valued weights,
+  and a full-frontier sum ``edgemap_reduce`` over integer-valued float32
+  (totals ≪ 2^24, so float addition is exact regardless of association).
+  Only order-insensitive reductions qualify for bit-identity across two
+  different block layouts.
+"""
+import numpy as np
+
+from repro.algorithms import bfs, wbfs
+from repro.core import build_csr, compress, edgemap_reduce
+from repro.delta import DeltaOverlay
+
+
+def base_edge_dict(g) -> dict:
+    """{(u, v): w} for the live edge slots of a built graph."""
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    w = np.asarray(g.edge_w)
+    valid = np.asarray(g.edge_valid)
+    return {
+        (int(u), int(v)): float(x)
+        for u, v, x in zip(src[valid], dst[valid], w[valid])
+    }
+
+
+def reference_edges(edges: dict, script, *, weighted: bool) -> dict:
+    """Apply an edit script to a plain edge dict (the reference model)."""
+    out = dict(edges)
+    for e in script:
+        kind, u, v = e[0], int(e[1]), int(e[2])
+        if kind == "insert":
+            if u == v:
+                continue
+            w = float(e[3]) if len(e) > 3 and weighted else 1.0
+            out[(u, v)] = w
+        elif kind == "delete":
+            out.pop((u, v), None)
+        else:
+            raise ValueError(f"unknown edit kind {kind!r}")
+    return out
+
+
+def random_script(rng, n: int, edges: dict, num_edits: int, *, weighted: bool):
+    """Adversarial edit script exercising every overlay transition."""
+
+    def _w():
+        return float(rng.integers(1, 8)) if weighted else 1.0
+
+    keys = list(edges)
+    deleted: list[tuple[int, int]] = []
+    script = []
+    for _ in range(num_edits):
+        r = rng.random()
+        if r < 0.30:  # fresh insert
+            script.append(
+                ("insert", int(rng.integers(n)), int(rng.integers(n)), _w())
+            )
+        elif r < 0.45 and keys:  # duplicate upsert of a live edge
+            u, v = keys[int(rng.integers(len(keys)))]
+            script.append(("insert", u, v, _w()))
+        elif r < 0.50:  # self-loop (must be dropped, like build_csr)
+            u = int(rng.integers(n))
+            script.append(("insert", u, u, _w()))
+        elif r < 0.75 and keys:  # delete a live edge
+            k = keys.pop(int(rng.integers(len(keys))))
+            deleted.append(k)
+            script.append(("delete", *k))
+        elif r < 0.90 and deleted:  # re-insert a previously deleted edge
+            k = deleted.pop(int(rng.integers(len(deleted))))
+            keys.append(k)
+            script.append(("insert", *k, _w()))
+        else:  # delete an edge that (probably) doesn't exist
+            script.append(("delete", int(rng.integers(n)), int(rng.integers(n))))
+    return script
+
+
+def overlay_from_script(base, script) -> DeltaOverlay:
+    ov = DeltaOverlay(base)
+    ov.apply(script)
+    return ov
+
+
+def rebuild(n, edges: dict, *, block_size: int, weighted: bool, compressed: bool):
+    """From-scratch graph over the surviving edge set."""
+    items = sorted(edges.items())
+    src = np.array([u for (u, _), _ in items], np.int32)
+    dst = np.array([v for (_, v), _ in items], np.int32)
+    w = np.array([x for _, x in items], np.float32)
+    g = build_csr(
+        n, src, dst, w if weighted else None,
+        block_size=block_size, symmetrize=False,
+    )
+    return compress(g) if compressed else g
+
+
+def query_results(g, srcs, *, weighted: bool, mode: str = "auto", plan=None):
+    """The probe set as a flat list of numpy arrays (exact reductions only)."""
+    out = []
+    for s in srcs:
+        p, lv = bfs(g, int(s), mode=mode, plan=plan)
+        out += [np.asarray(p), np.asarray(lv)]
+        if weighted:
+            out.append(np.asarray(wbfs(g, int(s), mode=mode, plan=plan)))
+    fr = np.ones(g.n, dtype=bool)
+    x = (np.arange(g.n) % 7 + 1).astype(np.float32)  # integer-valued, exact
+    s, touched = edgemap_reduce(g, fr, x, monoid="sum", mode=mode, plan=plan)
+    out += [np.asarray(s), np.asarray(touched)]
+    return out
+
+
+def assert_bit_identical(got, want, context=""):
+    assert len(got) == len(want), context
+    for i, (a, b) in enumerate(zip(got, want)):
+        assert np.array_equal(a, b), (context, i)

@@ -1,0 +1,500 @@
+"""repro.delta — differential harness, crash recovery, PSAM accounting.
+
+The locked contract (ISSUE 10): serving a mutated graph through the
+DRAM delta overlay is **bit-identical** to rebuilding the graph from
+scratch — across base backends, execution strategies, batch widths and
+meshes — and folding the overlay (``compact``) is the subsystem's ONLY
+large-memory write, persisted atomically.  The mesh legs and the crash
+injections run in subprocesses (fake devices / real kills), the rest
+in-process.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import differential as dh
+from repro.core import PSAMCost, compress
+from repro.core.csr import sharded_block_counts
+from repro.core.psam import _block_read_words
+from repro.data import rmat_graph
+from repro.delta import (
+    DeltaOverlay,
+    compact,
+    compact_write_words,
+    load_compacted,
+)
+from repro.obs import Registry, noop_registry
+from repro.serving import QueryEngine, ServiceConfig, ServingService
+from repro.tuning import OverlayTrigger, constants_overlay_trigger
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, *, expect_rc: int = 0) -> subprocess.CompletedProcess:
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": f"src{os.pathsep}tests"},
+        cwd=ROOT,
+        timeout=420,
+    )
+    assert r.returncode == expect_rc, (r.returncode, r.stderr[-3000:])
+    return r
+
+
+def _scripted(seed, *, weighted, compressed, n=96, m=400, bs=32, edits=120):
+    """(overlay, snapshot, rebuilt-graph, surviving-edge-dict) for one seed."""
+    g = rmat_graph(n, m, seed=seed, block_size=bs, weighted=weighted)
+    base = compress(g) if compressed else g
+    edges = dh.base_edge_dict(base)
+    rng = np.random.default_rng(seed + 1000)
+    script = dh.random_script(rng, n, edges, edits, weighted=weighted)
+    ref = dh.reference_edges(edges, script, weighted=weighted)
+    ov = dh.overlay_from_script(base, script)
+    rb = dh.rebuild(n, ref, block_size=bs, weighted=weighted, compressed=compressed)
+    return ov, ov.snapshot(), rb, ref
+
+
+# ----------------------------------------------------------------------
+# overlay semantics
+# ----------------------------------------------------------------------
+def test_overlay_edit_semantics():
+    g = rmat_graph(32, 96, seed=0, block_size=16, weighted=True)
+    u0, v0 = int(np.asarray(g.edge_src)[0]), int(np.asarray(g.edge_dst)[0])
+    w0 = float(np.asarray(g.edge_w)[0])
+    ov = DeltaOverlay(g)
+    assert ov.num_patch_edges == 0 and ov.num_tombstones == 0
+
+    ov.insert(5, 5)  # self-loop: dropped, like build_csr
+    assert ov.num_patch_edges == 0
+
+    ov.delete(u0, v0)
+    assert ov.num_tombstones == 1
+    ov.insert(u0, v0, w0)  # re-insert same weight: revives the base slot
+    assert ov.num_tombstones == 0 and ov.num_patch_edges == 0
+
+    ov.delete(u0, v0)
+    ov.insert(u0, v0, w0 + 3.0)  # different weight: slot stays dead, patch wins
+    assert ov.num_tombstones == 1 and ov.num_patch_edges == 1
+    assert dict(zip(*[x.tolist() for x in ov.live_edges()[:2]]))  # still coherent
+
+    before = ov.num_patch_edges
+    ov.insert(1, 2)
+    ov.insert(1, 2)  # duplicate insert upserts, never double-counts
+    assert ov.num_patch_edges == before + 1
+    ov.delete(1, 2)
+    assert ov.num_patch_edges == before
+
+    with pytest.raises(ValueError):
+        ov.insert(-1, 2)
+    with pytest.raises(ValueError):
+        ov.apply([("frobnicate", 1, 2)])
+
+
+# ----------------------------------------------------------------------
+# differential harness: backends x strategies, engine batch widths, mesh
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("compressed", [False, True], ids=["csr", "compressed"])
+@pytest.mark.parametrize("mode", ["dense", "sparse", "sparse_streamed"])
+def test_differential_bit_identity(compressed, mode):
+    for seed, weighted in [(3, False), (7, True)]:
+        _, dg, rb, _ = _scripted(seed, weighted=weighted, compressed=compressed)
+        dh.assert_bit_identical(
+            dh.query_results(dg, [0, 5, 11], weighted=weighted, mode=mode),
+            dh.query_results(rb, [0, 5, 11], weighted=weighted, mode=mode),
+            (compressed, mode, seed),
+        )
+
+
+@pytest.mark.parametrize("max_batch", [1, 8])
+def test_differential_batched_engine(max_batch):
+    _, dg, rb, _ = _scripted(11, weighted=True, compressed=True)
+    reqs = [("bfs", {"src": s}) for s in [0, 3, 9, 14, 21]] + [
+        ("wbfs", {"src": s}) for s in [1, 6]
+    ]
+    got = QueryEngine(dg, max_batch=max_batch, registry=noop_registry()).serve(reqs)
+    want = QueryEngine(rb, max_batch=max_batch, registry=noop_registry()).serve(reqs)
+    for a, b in zip(got, want):
+        fa = a if isinstance(a, tuple) else (a,)
+        fb = b if isinstance(b, tuple) else (b,)
+        for x, y in zip(fa, fb):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_differential_mesh_parity():
+    out = _run(
+        r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import differential as dh
+from repro.compat import make_mesh, use_mesh
+from repro.core import compress, make_plan
+from repro.data import rmat_graph
+
+for compressed in (False, True):
+    g = rmat_graph(96, 400, seed=5, block_size=32, weighted=True)
+    base = compress(g) if compressed else g
+    edges = dh.base_edge_dict(base)
+    rng = np.random.default_rng(99)
+    script = dh.random_script(rng, 96, edges, 120, weighted=True)
+    ref = dh.reference_edges(edges, script, weighted=True)
+    dg = dh.overlay_from_script(base, script).snapshot()
+    rb = dh.rebuild(96, ref, block_size=32, weighted=True, compressed=compressed)
+    want = dh.query_results(rb, [0, 7], weighted=True)
+    for shape in [(1,), (2,), (4,)]:
+        mesh = make_mesh(shape, ("data",))
+        plan = make_plan(dg, mesh=mesh)
+        assert plan.backend == "delta", plan.backend
+        with use_mesh(mesh):
+            got = dh.query_results(dg, [0, 7], weighted=True, plan=plan)
+        dh.assert_bit_identical(got, want, (compressed, shape))
+print("OK")
+"""
+    )
+    assert "OK" in out.stdout
+
+
+def test_delta_shard_structure():
+    _, dg, _, _ = _scripted(2, weighted=False, compressed=True)
+    for k in [1, 2, 4]:
+        shards = dg.shard(k)
+        assert len(shards) == k
+        per_b, _ = sharded_block_counts(dg.num_base_blocks, k)
+        per_p, _ = sharded_block_counts(dg.num_patch_blocks, k)
+        for s in shards:
+            assert s.num_base_blocks == per_b
+            assert s.num_blocks == per_b + per_p
+            assert s.n == dg.n and s.block_size == dg.block_size
+        # every live (src, dst) pair survives the partition exactly once
+        def live_pairs(d):
+            src = np.asarray(d.edge_src)
+            dst = np.asarray(d.edge_dst)
+            v = np.asarray(d.edge_valid)
+            return sorted(zip(src[v].tolist(), dst[v].tolist()))
+
+        merged = sorted(sum((live_pairs(s) for s in shards), []))
+        assert merged == live_pairs(dg)
+
+
+# ----------------------------------------------------------------------
+# compaction: bit-identity, rebase, atomic persistence, crash recovery
+# ----------------------------------------------------------------------
+def test_compact_bit_identity_and_rebase(tmp_path):
+    ov, dg, rb, ref = _scripted(13, weighted=True, compressed=True)
+    cost = PSAMCost()
+    c = compact(ov, cost=cost, ckpt_dir=str(tmp_path), step=0)
+    dh.assert_bit_identical(
+        dh.query_results(c, [0, 5], weighted=True),
+        dh.query_results(rb, [0, 5], weighted=True),
+    )
+    assert cost.large_writes == compact_write_words(c)
+    loaded, step = load_compacted(str(tmp_path))
+    assert step == 0
+    dh.assert_bit_identical(
+        dh.query_results(loaded, [0, 5], weighted=True),
+        dh.query_results(c, [0, 5], weighted=True),
+    )
+    ov2 = DeltaOverlay(c)  # rebase: fresh overlay over the new NVRAM base
+    assert ov2.num_patch_edges == 0 and ov2.num_tombstones == 0
+
+
+_CRASH_SETUP = r"""
+import os, sys
+import numpy as np
+import differential as dh
+import repro.checkpoint.ckpt as ck
+from repro.core import compress
+from repro.data import rmat_graph
+from repro.delta import DeltaOverlay, compact
+
+D = sys.argv[-1] if False else os.environ["CKPT_DIR"]
+g = rmat_graph(64, 256, seed=21, block_size=32, weighted=False)
+base = compress(g)
+ov = DeltaOverlay(base)
+ov.apply([("insert", 1, 2), ("insert", 3, 4), ("delete",
+          int(np.asarray(base.edge_src)[0]), int(np.asarray(base.edge_dst)[0]))])
+c0 = compact(ov, ckpt_dir=D, step=0)   # pre-state: published cleanly
+ov1 = DeltaOverlay(c0)
+ov1.apply([("insert", 5, 6), ("insert", 7, 8)])
+"""
+
+_CRASH_MODES = {
+    "during_arrays": r"""
+def boom(path, **arrs):
+    with open(path, "wb") as fh:
+        fh.write(b"torn partial garbage")
+    os._exit(42)
+ck.np.savez = boom
+""",
+    "before_manifest": r"""
+ck.json.dump = lambda *a, **k: os._exit(42)
+""",
+    "before_publish": r"""
+ck.os.replace = lambda *a, **k: os._exit(42)
+""",
+    "after_publish": r"""
+_orig = ck.os.replace
+def pub(src, dst):
+    _orig(src, dst)
+    os._exit(42)
+ck.os.replace = pub
+""",
+}
+
+
+@pytest.mark.parametrize("mode", sorted(_CRASH_MODES))
+def test_crash_recovery_between_checkpoint_writes(mode, tmp_path):
+    """Kill the process at each write boundary inside the step-1 save;
+    recovery must load EXACTLY the pre- (step 0) or post- (step 1)
+    compaction graph — never a torn hybrid."""
+    code = (
+        _CRASH_SETUP
+        + _CRASH_MODES[mode]
+        + "\ncompact(ov1, ckpt_dir=D, step=1)\nraise SystemExit('unreachable')\n"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={
+            **os.environ,
+            "PYTHONPATH": f"src{os.pathsep}tests",
+            "CKPT_DIR": str(tmp_path),
+        },
+        cwd=ROOT,
+        timeout=420,
+    )
+    assert r.returncode == 42, (r.returncode, r.stderr[-3000:])
+
+    # expected pre/post states, rebuilt deterministically in-process
+    g = rmat_graph(64, 256, seed=21, block_size=32, weighted=False)
+    base = compress(g)
+    ov = DeltaOverlay(base)
+    ov.apply([
+        ("insert", 1, 2), ("insert", 3, 4),
+        ("delete", int(np.asarray(base.edge_src)[0]),
+         int(np.asarray(base.edge_dst)[0])),
+    ])
+    c0 = compact(ov)
+    ov1 = DeltaOverlay(c0)
+    ov1.apply([("insert", 5, 6), ("insert", 7, 8)])
+    c1 = compact(ov1)
+
+    loaded, step = load_compacted(str(tmp_path))
+    assert loaded is not None
+    want, want_step = (c1, 1) if mode == "after_publish" else (c0, 0)
+    assert step == want_step, (mode, step)
+    for f in ("block_first", "deltas", "valid_count", "exc_block", "exc_slot",
+              "exc_value", "block_src", "degrees"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, f)), np.asarray(getattr(want, f)), err_msg=f
+        )
+    assert (loaded.n, loaded.m, loaded.num_blocks, loaded.block_size) == (
+        want.n, want.m, want.num_blocks, want.block_size
+    )
+
+
+# ----------------------------------------------------------------------
+# engine: reset_stats vs in-flight flush (the double-count fix)
+# ----------------------------------------------------------------------
+def test_reset_stats_mid_flush_defers_until_drain_completes():
+    g = rmat_graph(64, 256, seed=4, block_size=32)
+    reg = Registry()
+    eng = QueryEngine(g, max_batch=4, registry=reg)
+    for s in range(6):  # two buckets of (4, 2) lanes
+        eng.submit("bfs", src=s)
+
+    orig = eng._run_bucket
+    fired = []
+
+    def hijack(op, scalars, chunk):
+        out = orig(op, scalars, chunk)
+        if not fired:
+            fired.append(True)
+            eng.reset_stats()  # mid-flush: must defer, not zero under us
+            assert eng._reset_deferred  # still pending while draining
+        return out
+
+    eng._run_bucket = hijack
+    res = eng.flush()
+    assert len(res) == 6  # every query still served
+    assert not eng._reset_deferred
+    # the deferred reset applied AFTER the drain: one clean zero, no
+    # straddle where bucket 2's lanes landed in a half-reset window
+    for k, v in eng.stats.items():
+        assert v == 0, (k, v)
+    assert reg.counter(
+        "sage_engine_served_total", labels=("op",)
+    ).value(op="bfs") == 0.0
+    assert reg.counter("sage_engine_lanes_total").value() == 0.0
+
+    # and the engine keeps counting correctly afterwards
+    eng._run_bucket = orig
+    eng.submit("bfs", src=9)
+    eng.flush()
+    assert eng.stats["served"] == 1
+    assert reg.counter(
+        "sage_engine_served_total", labels=("op",)
+    ).value(op="bfs") == 1.0
+
+
+def test_reset_stats_outside_flush_recounts_pending():
+    g = rmat_graph(64, 256, seed=4, block_size=32)
+    reg = Registry()
+    eng = QueryEngine(g, max_batch=4, registry=reg)
+    eng.submit("bfs", src=0)
+    eng.submit("bfs", src=1)
+    eng.submit("bfs", src=2)
+    eng.reset_stats()  # immediate — but pending queries stay accounted
+    assert eng.stats["submitted"] == 3
+    assert reg.counter(
+        "sage_engine_submitted_total", labels=("op",)
+    ).value(op="bfs") == 3.0
+    res = eng.flush()
+    assert len(res) == 3
+    assert eng.stats["served"] == 3  # submitted == served + pending holds
+
+
+# ----------------------------------------------------------------------
+# PSAM accounting: overlay surcharge exact, compact() the only ω write
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("batch,shards", [(1, 1), (8, 1), (4, 2)])
+def test_psam_overlay_charge_exact(batch, shards):
+    _, dg, _, _ = _scripted(17, weighted=False, compressed=True)
+    reg = Registry()
+    cost = PSAMCost(registry=reg)
+    cost.charge_edgemap_overlay(dg, batch=batch, num_shards=shards)
+    _, base_padded = sharded_block_counts(dg.num_base_blocks, shards)
+    exp_reads = _block_read_words(dg.base, base_padded)
+    exp_small = dg.overlay_small_words + batch * (
+        3 * dg.n + (shards - 1) * dg.n
+    )
+    assert cost.large_reads == exp_reads
+    assert cost.small_ops == exp_small
+    assert cost.large_writes == 0
+    # mirrored exactly into the labeled sage_psam_* counters
+    assert reg.counter(
+        "sage_psam_large_read_words_total", labels=("charge",)
+    ).value(charge="edgemap_overlay") == float(exp_reads)
+    assert reg.counter(
+        "sage_psam_small_ops_words_total", labels=("charge",)
+    ).value(charge="edgemap_overlay") == float(exp_small)
+
+
+def test_compact_is_the_only_large_write():
+    ov, dg, _, _ = _scripted(19, weighted=False, compressed=True)
+    reg = Registry()
+    cost = PSAMCost(registry=reg)
+    # a whole serving day of overlay queries: still zero NVRAM writes
+    for b in (1, 4, 8):
+        cost.charge_edgemap_overlay(dg, batch=b)
+    assert cost.large_writes == 0
+    c = compact(ov, cost=cost, registry=reg)
+    w = compact_write_words(c)
+    assert cost.large_writes == w
+    mirror = reg.counter("sage_psam_large_write_words_total", labels=("charge",))
+    assert mirror.value(charge="compact") == float(w)
+    assert mirror.value() == float(w)  # no other write label exists
+    assert reg.counter("sage_delta_compactions_total").value() == 1.0
+
+
+def test_engine_charges_overlay_not_batched_for_delta():
+    _, dg, _, _ = _scripted(23, weighted=False, compressed=True)
+    reg = Registry()
+    eng = QueryEngine(dg, max_batch=4, registry=reg)
+    eng.serve([("bfs", {"src": 0}), ("bfs", {"src": 1})])
+    assert eng.cost.large_writes == 0
+    assert reg.counter(
+        "sage_psam_small_ops_words_total", labels=("charge",)
+    ).value(charge="edgemap_overlay") > 0.0
+    assert reg.counter(
+        "sage_psam_large_read_words_total", labels=("charge",)
+    ).value(charge="edgemap_batched") == 0.0
+
+
+# ----------------------------------------------------------------------
+# serving: edit admission, trigger scheduling, persisted compaction
+# ----------------------------------------------------------------------
+def test_service_edit_admission_reject_only():
+    g = compress(rmat_graph(64, 256, seed=6, block_size=32))
+    svc = ServingService(
+        DeltaOverlay(g),
+        config=ServiceConfig(
+            admission="defer", budgets={"poor": (1e-6, 0.0)}
+        ),
+        registry=noop_registry(),
+    )
+    # edits are never deferred, even under admission="defer"
+    assert svc.submit_edit("insert", 1, 2, tenant="poor") is False
+    assert svc.stats["edits_rejected"] == 1
+    assert svc.stats["edits_applied"] == 0
+    assert svc.submit_edit("insert", 1, 2, tenant="rich") is True
+    svc.tick(0.0)
+    assert svc.stats["edits_applied"] == 1
+    with pytest.raises(ValueError):
+        svc.submit_edit("upsert", 1, 2)
+
+
+def test_service_plain_graph_rejects_edits():
+    g = compress(rmat_graph(64, 256, seed=6, block_size=32))
+    svc = ServingService(g, registry=noop_registry())
+    with pytest.raises(TypeError):
+        svc.submit_edit("insert", 1, 2)
+
+
+def test_service_triggered_compaction_persists_and_stays_exact(tmp_path):
+    g = compress(rmat_graph(96, 400, seed=8, block_size=32))
+    reg = Registry()
+    svc = ServingService(
+        DeltaOverlay(g),
+        config=ServiceConfig(
+            slo=0.0,
+            compact_trigger=OverlayTrigger(hysteresis=1e-6),
+            ckpt_dir=str(tmp_path),
+        ),
+        registry=reg,
+    )
+    edges = dh.base_edge_dict(g)
+    rng = np.random.default_rng(55)
+    script = dh.random_script(rng, 96, edges, 60, weighted=False)
+    for e in script:
+        svc.submit_edit(e[0], e[1], e[2], now=0.0)
+    t = svc.submit("bfs", src=0, now=0.0)
+    svc.drain(0.0)
+    assert svc.stats["compactions"] >= 1
+    assert svc.overlay.num_patch_edges == 0 and svc.overlay.num_tombstones == 0
+    # post-compaction service answers == from-scratch rebuild
+    ref = dh.reference_edges(edges, script, weighted=False)
+    rb = dh.rebuild(96, ref, block_size=32, weighted=False, compressed=True)
+    from repro.algorithms import bfs
+
+    want = bfs(rb, 0)
+    for a, b in zip(t.result, want):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the published checkpoint IS the served base
+    loaded, step = load_compacted(str(tmp_path))
+    assert loaded is not None and step == svc._compact_step - 1
+    got = bfs(loaded, 0)
+    for a, b in zip(got, want):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert reg.gauge("sage_delta_patch_edges").value() == 0.0
+    assert reg.counter("sage_delta_compactions_total").value() >= 1.0
+
+
+def test_constants_trigger_breakeven_arithmetic():
+    _, dg, _, _ = _scripted(29, weighted=False, compressed=True)
+    trig = constants_overlay_trigger()
+    w = float(dg.compact_write_words)
+    ov_words = float(dg.overlay_small_words)
+    breakeven = 4.0 * w / ov_words
+    assert not trig.should_compact(
+        dg, sweeps_since_compact=breakeven * 0.5, omega=4.0
+    ) or breakeven * 0.5 <= 1.0
+    assert trig.should_compact(
+        dg, sweeps_since_compact=breakeven * 2.0 + 1.0, omega=4.0
+    )

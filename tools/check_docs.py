@@ -39,7 +39,13 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-AUDITED_MODULES = ("repro.core", "repro.serving", "repro.tuning", "repro.obs")
+AUDITED_MODULES = (
+    "repro.core",
+    "repro.serving",
+    "repro.tuning",
+    "repro.obs",
+    "repro.delta",
+)
 MEMBER_AUDITED = ("repro.serving",)  # classes audited method-by-method
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
 
